@@ -1,0 +1,68 @@
+"""Shared benchmark utilities: wall-clock timing + compiled-artifact
+byte/flop counters (the CPU container measures algorithmic structure;
+TPU numbers come from the roofline analysis of the dry-run)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds of ``fn(*args)`` (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def throughput(n_elems: int, seconds: float) -> float:
+    """Billion elements per second."""
+    return n_elems / seconds / 1e9
+
+
+def hlo_bytes(fn: Callable, *args) -> dict:
+    """flops + bytes accessed of the compiled fn (cost_analysis)."""
+    comp = jax.jit(fn).lower(*args).compile()
+    cost = comp.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+class Table:
+    def __init__(self, title: str, columns: list[str]):
+        self.title = title
+        self.columns = columns
+        self.rows: list[list] = []
+
+    def add(self, *row):
+        self.rows.append(list(row))
+
+    def render(self) -> str:
+        widths = [len(c) for c in self.columns]
+        srows = []
+        for row in self.rows:
+            srow = [f"{v:.4g}" if isinstance(v, float) else str(v)
+                    for v in row]
+            widths = [max(w, len(s)) for w, s in zip(widths, srow)]
+            srows.append(srow)
+        fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+        lines = [f"== {self.title} ==", fmt.format(*self.columns),
+                 fmt.format(*["-" * w for w in widths])]
+        lines += [fmt.format(*r) for r in srows]
+        return "\n".join(lines)
+
+    def show(self):
+        print(self.render(), flush=True)
+        print()

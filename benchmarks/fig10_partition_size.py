@@ -1,0 +1,51 @@
+"""Paper Fig. 10 — effect of partition (block) sizes.
+
+The paper finds ½·L2 per thread optimal on CPU, and L1-sized partitions
+for gather/scatter algorithms. The TPU analogue: the Pallas kernel's
+block_n bounds its VMEM working set; we sweep block sizes through the
+blocked (lax.scan-fused) scan and report wall time + the compiled
+temp-allocation footprint, and the kernel's VMEM-claim per block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, throughput, time_fn
+from repro.core import scan as scanlib
+
+N = 1 << 22
+BLOCKS = [1 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 17, 1 << 18, 1 << 20]
+
+
+def run() -> Table:
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(N), jnp.float32)
+    t = Table("Fig 10 — block (partition) size sweep, blocked scan",
+              ["block floats", "working set KiB", "Belem/s", "ms"])
+    for b in BLOCKS:
+        fn = jax.jit(functools.partial(
+            scanlib.scan_blocked, op="sum", block_size=b))
+        sec = time_fn(fn, x, iters=3)
+        t.add(b, b * 4 // 1024, throughput(N, sec), sec * 1e3)
+    return t
+
+
+def run_kernel_vmem() -> Table:
+    """The kernel's per-block VMEM claim for the same sweep (the quantity
+    the paper's ½-L2 heuristic controls; v5e VMEM ≈ 128 MiB/core class,
+    we budget ≤ 1/8)."""
+    t = Table("Fig 10b — Pallas kernel block VMEM claim",
+              ["block_n", "in+out+carry KiB", "fits 16MiB budget"])
+    for bn in (512, 2048, 8192, 32768, 131072):
+        kib = (2 * 8 * bn * 4 + 8 * 4) / 1024  # in+out tiles (8, bn) f32
+        t.add(bn, kib, bool(kib <= 16 * 1024))
+    return t
+
+
+if __name__ == "__main__":
+    run().show()
+    run_kernel_vmem().show()

@@ -1,0 +1,44 @@
+"""Paper Fig. 11/12 — effect of dilation factors.
+
+The dilated two-pass algorithm shrinks partition 0 to balance the scan
+(not vectorizable) vs increment/accumulate (vectorizable) subprocedures.
+We sweep d over the paper's Fig. 12 range for both variants and report
+wall time — reproducing the paper's observation that the best d varies
+and equal partitions + cache partitioning is the robust choice (Obs 1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, throughput, time_fn
+from repro.core import scan as scanlib
+
+N = 1 << 22
+DILATIONS = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0]
+
+
+def run() -> Table:
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(N), jnp.float32)
+    t = Table("Fig 11/12 — dilation sweep (two-pass, 8 partitions)",
+              ["variant", "dilation", "Belem/s"])
+    for variant in (1, 2):
+        for d in DILATIONS:
+            fn = jax.jit(functools.partial(
+                scanlib.scan_two_pass, op="sum", num_partitions=8,
+                variant=variant, dilation=d))
+            sec = time_fn(fn, x, iters=3)
+            t.add(f"v{variant}", d, throughput(N, sec))
+    # reference: the partitioned scan the paper recommends instead
+    fn = jax.jit(functools.partial(scanlib.scan_blocked, op="sum",
+                                   block_size=128 * 1024))
+    t.add("Blocked(-P)", "-", throughput(N, time_fn(fn, x, iters=3)))
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

@@ -1,0 +1,59 @@
+"""Paper Fig. 6 — single-thread throughput of the scan variants.
+
+Scalar (sequential oracle), SIMD horizontal, SIMD-V1/V2 vertical, SIMD-T
+tree, the partitioned/blocked variant, the Pallas kernel (interpret), and
+two 'library' baselines (jnp.cumsum = XLA's native, and
+jax.lax.associative_scan = the library parallel scan).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, throughput, time_fn
+from repro.core import scan as scanlib
+
+N = 1 << 22  # 4M floats (CPU-sized; the paper uses 32M per thread)
+
+
+def run() -> Table:
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(N), jnp.float32)
+
+    variants = {
+        "Scalar(ref)": lambda v: scanlib.scan_ref(v, "sum"),
+        "SIMD(horizontal)": lambda v: scanlib.scan_horizontal(v, "sum"),
+        "SIMD-V1(vertical)": functools.partial(
+            scanlib.scan_vertical, op="sum", variant=1),
+        "SIMD-V2(vertical)": functools.partial(
+            scanlib.scan_vertical, op="sum", variant=2),
+        "SIMD-T(tree)": lambda v: scanlib.scan_tree(v, "sum"),
+        "Blocked(-P)": functools.partial(
+            scanlib.scan_blocked, op="sum", block_size=128 * 1024),
+        "TwoPass(no-P)": functools.partial(
+            scanlib.scan_two_pass, op="sum", num_partitions=8),
+        "Kernel(interp)": lambda v: scanlib.scan(v, "sum",
+                                                 algorithm="kernel",
+                                                 interpret=True),
+        "lib:jnp.cumsum": lambda v: jnp.cumsum(v),
+        "lib:assoc_scan": lambda v: jax.lax.associative_scan(jnp.add, v),
+    }
+
+    t = Table("Fig 6 — single-device scan throughput (CPU wall-clock)",
+              ["variant", "Belem/s", "ms"])
+    ref = np.cumsum(np.asarray(x), dtype=np.float64)
+    for name, fn in variants.items():
+        jf = jax.jit(fn)
+        got = np.asarray(jf(x), np.float64)
+        np.testing.assert_allclose(got, ref, rtol=5e-3, atol=5e-1)
+        sec = time_fn(jf, x, iters=3 if "interp" in name else 5,
+                      warmup=1 if "interp" in name else 2)
+        t.add(name, throughput(N, sec), sec * 1e3)
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

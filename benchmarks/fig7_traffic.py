@@ -1,0 +1,92 @@
+"""Paper Fig. 7 — the multithreaded result, told through memory traffic.
+
+The paper's headline: once bandwidth-bound, the partitioned (fused
+two-pass) algorithm wins because it moves HALF the slow-memory bytes of
+the unfused two-pass (read+write+read+read vs read+write once). On this
+1-core container wall-clock cannot show thread scaling, so we measure the
+quantity that *caused* the paper's scaling difference — bytes moved per
+element, from the compiled HLO — plus the collective bytes of the
+device-parallel version (devices = the paper's threads) from an 8-device
+lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, hlo_bytes
+from repro.core import scan as scanlib
+
+N = 1 << 22
+
+
+def run() -> Table:
+    x = jax.ShapeDtypeStruct((N,), jnp.float32)
+
+    variants = {
+        "Blocked(-P, fused)": functools.partial(
+            scanlib.scan_blocked, op="sum", block_size=128 * 1024),
+        "TwoPass v1 (scan+inc)": functools.partial(
+            scanlib.scan_two_pass, op="sum", num_partitions=8, variant=1),
+        "TwoPass v2 (acc+scan)": functools.partial(
+            scanlib.scan_two_pass, op="sum", num_partitions=8, variant=2),
+        "lib:jnp.cumsum": lambda v: jnp.cumsum(v),
+    }
+
+    t = Table("Fig 7 — bytes/element moved (compiled HLO; lower is "
+              "better when bandwidth-bound)", ["variant", "bytes/elem",
+                                               "flops/elem"])
+    for name, fn in variants.items():
+        c = hlo_bytes(fn, x)
+        t.add(name, c["bytes"] / N, c["flops"] / N)
+    return t
+
+
+def run_device_parallel() -> Table:
+    """The m-device two-pass scan's collective footprint (subprocess with
+    8 host devices; prints the `sums`-exchange bytes per schedule)."""
+    prog = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import scan as scanlib
+from repro.roofline.analyze import collective_bytes_from_hlo
+mesh = jax.make_mesh((8,), ("d",))
+N = 1 << 22
+x = jax.ShapeDtypeStruct((N,), jnp.float32)
+sh = NamedSharding(mesh, P("d"))
+for ex in ("all_gather", "hillis_permute", "ring"):
+    fn = lambda v: scanlib.scan_sharded(
+        v, "sum", mesh=mesh, axis_name="d", spec=P("d"), variant=2,
+        carry_exchange=ex, local_algorithm="blocked", block_size=262144)
+    comp = jax.jit(fn, in_shardings=(sh,), out_shardings=sh).lower(x).compile()
+    coll = collective_bytes_from_hlo(comp.as_text())
+    print(f"{ex}\t{sum(coll.values())}\t{coll}")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=600, env=env)
+    t = Table("Fig 7b — carry-exchange collective bytes (8 devices, "
+              "variant 2)", ["exchange", "total bytes", "detail"])
+    if res.returncode:
+        t.add("FAILED", res.stderr[-200:], "")
+        return t
+    for line in res.stdout.strip().splitlines():
+        ex, total, detail = line.split("\t")
+        t.add(ex, float(total), detail)
+    return t
+
+
+if __name__ == "__main__":
+    run().show()
+    run_device_parallel().show()

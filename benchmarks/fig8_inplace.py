@@ -1,0 +1,54 @@
+"""Paper Fig. 8/9 — in-place vs out-of-place, as XLA buffer donation.
+
+In-place (donated input) lets XLA reuse the input buffer for the output —
+the allocation/traffic effect the paper measures across memory banks. We
+report wall time and the compiled temp-allocation size with and without
+donation, for the blocked scan and the Pallas kernel wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, throughput, time_fn
+from repro.core import scan as scanlib
+
+N = 1 << 22
+
+
+def _temp_bytes(fn, donate: bool, x_spec):
+    jf = jax.jit(fn, donate_argnums=(0,) if donate else ())
+    comp = jf.lower(x_spec).compile()
+    ma = comp.memory_analysis()
+    return jf, float(getattr(ma, "temp_size_in_bytes", 0) +
+                     getattr(ma, "output_size_in_bytes", 0))
+
+
+def run() -> Table:
+    spec = jax.ShapeDtypeStruct((N,), jnp.float32)
+    blocked = functools.partial(scanlib.scan_blocked, op="sum",
+                                block_size=128 * 1024)
+    t = Table("Fig 8/9 — in-place (donated) vs out-of-place",
+              ["variant", "donate", "out+temp bytes/elem", "Belem/s"])
+    for name, fn in [("Blocked(-P)", blocked),
+                     ("TwoPass v2", functools.partial(
+                         scanlib.scan_two_pass, op="sum",
+                         num_partitions=8, variant=2))]:
+        for donate in (False, True):
+            jf, tb = _temp_bytes(fn, donate, spec)
+            x = jnp.asarray(
+                np.random.default_rng(0).standard_normal(N), jnp.float32)
+            if donate:
+                sec = time_fn(lambda v: jf(v + 0), x, iters=5)  # fresh buf
+            else:
+                sec = time_fn(jf, x, iters=5)
+            t.add(name, donate, tb / N, throughput(N, sec))
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

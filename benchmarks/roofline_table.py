@@ -1,0 +1,41 @@
+"""Render the §Roofline table from the dry-run JSON records."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Table
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+
+
+def load_records(d: str = DEFAULT_DIR) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(d: str = DEFAULT_DIR) -> Table:
+    t = Table("Roofline terms per dry-run cell (seconds, per-device)",
+              ["arch", "shape", "mesh", "status", "compute", "memory",
+               "collective", "dcn", "dominant", "useful%"])
+    for r in load_records(d):
+        if r.get("status") != "ok":
+            t.add(r["arch"], r["shape"], r["mesh"], "FAIL", "-", "-", "-",
+                  "-", "-", "-")
+            continue
+        if r.get("knobs", {}).get("tag"):
+            continue
+        t.add(r["arch"], r["shape"], r["mesh"], "ok",
+              r["compute_s"], r["memory_s"], r["collective_s"], r["dcn_s"],
+              r["dominant"], 100.0 * r["useful_ratio"])
+    return t
+
+
+if __name__ == "__main__":
+    run().show()

@@ -1,0 +1,43 @@
+"""Benchmark harness: one table per paper figure + framework benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig6 fig10 # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig6_single_thread, fig7_traffic, fig8_inplace,
+                        fig10_partition_size, fig11_dilation, fig13_policy,
+                        moe_dispatch, roofline_table)
+
+SUITES = {
+    "fig6": [fig6_single_thread.run],
+    "fig7": [fig7_traffic.run, fig7_traffic.run_device_parallel],
+    "fig8": [fig8_inplace.run],
+    "fig10": [fig10_partition_size.run,
+              fig10_partition_size.run_kernel_vmem],
+    "fig11": [fig11_dilation.run],
+    "fig13": [fig13_policy.run, fig13_policy.run_traffic_model],
+    "moe": [moe_dispatch.run],
+    "roofline": [roofline_table.run],
+}
+
+
+def main(argv=None):
+    names = (argv or sys.argv[1:]) or list(SUITES)
+    t0 = time.time()
+    for name in names:
+        if name not in SUITES:
+            print(f"unknown suite {name!r}; known: {sorted(SUITES)}")
+            return 1
+        for fn in SUITES[name]:
+            fn().show()
+    print(f"[benchmarks done in {time.time() - t0:.1f}s]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

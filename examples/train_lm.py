@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the granite-moe family at reduced-but-real scale (~100M params) so
+the MoE scan-dispatch path — the paper's technique inside the model — is
+exercised end to end with checkpointing and restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro import configs
+from repro.data import DataConfig, SyntheticDataset
+from repro.optim import adamw_init
+from repro.train.step import TrainStepConfig, init_params, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def build_cfg():
+    """~100M-param MoE config of the granite family."""
+    base = configs.get_config("granite-moe-1b-a400m")
+    return dataclasses.replace(
+        base, name="granite-moe-100m", num_layers=6, d_model=512,
+        num_heads=8, num_kv_heads=4, head_dim=64, d_ff=512, moe_d_ff=512,
+        vocab_size=32_000, num_experts=8, top_k=2, max_seq_len=1024)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+    cfg = build_cfg()
+    n = cfg.param_count()
+    print(f"model: {cfg.name}  params≈{n/1e6:.0f}M "
+          f"(active {cfg.active_param_count()/1e6:.0f}M)")
+
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt = adamw_init(params)
+    step = jax.jit(
+        make_train_step(cfg, TrainStepConfig(
+            remat=True, peak_lr=1e-3, warmup_steps=20,
+            total_steps=args.steps)),
+        donate_argnums=(0, 1))
+    ds = SyntheticDataset(DataConfig(
+        seq_len=args.seq_len, global_batch=args.batch,
+        vocab_size=cfg.vocab_size))
+    tr = Trainer(step, ds, TrainerConfig(
+        total_steps=args.steps, checkpoint_every=50,
+        checkpoint_dir=args.ckpt, log_every=10))
+    start, params, opt = tr.maybe_restore(params, opt)
+    tr.run(params, opt, start_step=start)
+
+    losses = [h["loss"] for h in tr.history]
+    k = max(len(losses) // 10, 1)
+    print(f"loss: first10={sum(losses[:k])/k:.4f} "
+          f"last10={sum(losses[-k:])/k:.4f} "
+          f"(decreased: {sum(losses[-k:]) < sum(losses[:k])})")
+
+
+if __name__ == "__main__":
+    main()

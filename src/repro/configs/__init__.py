@@ -1,0 +1,59 @@
+"""Architecture registry — one module per assigned architecture.
+
+``get_config(name)`` returns the exact published full-scale ModelConfig;
+``get_smoke_config(name)`` a reduced same-family config for CPU tests.
+Select on the command line via ``--arch <id>`` (launch/train.py,
+launch/serve.py, launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.configs.shapes import (LONG_CONTEXT_ARCHS, SHAPES, ShapeSpec,
+                                  cells)
+from repro.models.config import ModelConfig
+
+ARCHS: tuple[str, ...] = (
+    "gemma3-12b",
+    "gemma2-9b",
+    "phi3-medium-14b",
+    "stablelm-12b",
+    "granite-moe-1b-a400m",
+    "qwen3-moe-235b-a22b",
+    "xlstm-125m",
+    "zamba2-7b",
+    "llava-next-mistral-7b",
+    "seamless-m4t-large-v2",
+)
+
+_MODULES = {name: "repro.configs." + name.replace("-", "_") for name in ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; one of {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    """Reduced config of the same family/wiring for CPU smoke tests."""
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {name: get_config(name) for name in ARCHS}
+
+
+def scale_down(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Generic reducer used by the per-arch SMOKE definitions."""
+    return dataclasses.replace(cfg, **overrides)
+
+
+__all__ = [
+    "ARCHS", "LONG_CONTEXT_ARCHS", "SHAPES", "ShapeSpec", "all_configs",
+    "cells", "get_config", "get_smoke_config", "scale_down",
+]

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: the prefix-scan substrate.
+
+``repro.core.scan`` implements every algorithm in the paper (horizontal /
+vertical / tree SIMD, the four two-pass multithreaded organizations, and
+cache-friendly partitioning) plus their distributed shard_map forms, over
+arbitrary associative monoids. Higher layers (MoE dispatch, SSM blocks,
+flash attention, data pipeline) consume this substrate.
+"""
+
+from repro.core import scan
+
+__all__ = ["scan"]

@@ -1,0 +1,35 @@
+"""Prefix-scan substrate — the paper's contribution as a composable library.
+
+Algorithm map (paper section → module):
+  §3.1 horizontal SIMD  → horizontal.scan_horizontal
+  §3.2 vertical SIMD    → vertical.scan_vertical (V1/V2)
+  §3.3 tree SIMD        → tree.scan_tree
+  §2.1 two-pass threads → blocked.scan_two_pass (variants, dilation),
+                          distributed.scan_sharded (devices as threads)
+  §2.2 cache partition  → blocked.scan_blocked, kernels/scan_blocked (Pallas)
+  §5   recommendations  → policy.choose
+"""
+
+from repro.core.scan import assoc
+from repro.core.scan.api import cumsum, scan
+from repro.core.scan.assoc import (AFFINE, MATRIX_AFFINE, MAX, MIN, PROD,
+                                   SOFTMAX_PAIR, SUM, Monoid)
+from repro.core.scan.blocked import (partition_sizes, scan_blocked,
+                                     scan_two_pass)
+from repro.core.scan.distributed import make_sharded_cumsum, scan_sharded
+from repro.core.scan.horizontal import scan_horizontal
+from repro.core.scan.policy import Choice, choose
+from repro.core.scan.reference import cumsum_ref, scan_ref, segmented_scan_ref
+from repro.core.scan.segmented import (DispatchPlan, dispatch_offsets,
+                                       packed_segment_ids, segmented_scan)
+from repro.core.scan.tree import scan_tree
+from repro.core.scan.vertical import scan_vertical
+
+__all__ = [
+    "AFFINE", "MATRIX_AFFINE", "MAX", "MIN", "PROD", "SOFTMAX_PAIR", "SUM",
+    "Monoid", "Choice", "DispatchPlan", "choose", "cumsum", "cumsum_ref",
+    "dispatch_offsets", "make_sharded_cumsum", "packed_segment_ids",
+    "partition_sizes", "scan", "scan_blocked", "scan_horizontal", "scan_ref",
+    "scan_sharded", "scan_tree", "scan_two_pass", "scan_vertical",
+    "segmented_scan", "segmented_scan_ref",
+]

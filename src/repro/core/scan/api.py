@@ -1,0 +1,102 @@
+"""Public scan API — single entry point over every algorithm in the package.
+
+    from repro.core import scan
+    y = scan.cumsum(x)                      # policy-picked algorithm
+    y = scan.scan(x, op="max", algorithm="blocked", block_size=8192)
+    y = scan.scan((a, b), op="affine")      # SSM-style affine recurrence
+
+Distributed use goes through ``scan.scan_sharded`` (see distributed.py);
+kernel-backed use through ``repro.kernels.scan_blocked.ops``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import assoc
+from repro.core.scan import blocked as _blocked
+from repro.core.scan import horizontal as _horizontal
+from repro.core.scan import policy
+from repro.core.scan import reference as _reference
+from repro.core.scan import tree as _tree
+from repro.core.scan import vertical as _vertical
+
+Pytree = Any
+
+_ALGORITHMS = ("auto", "ref", "horizontal", "vertical", "tree", "blocked",
+               "two_pass", "kernel")
+
+
+def scan(
+    elems: Pytree,
+    op: "str | assoc.Monoid" = "sum",
+    axis: int = -1,
+    algorithm: str = "auto",
+    exclusive: bool = False,
+    **kw,
+) -> Pytree:
+    """Inclusive (or exclusive) scan of ``elems`` along ``axis``."""
+    if algorithm not in _ALGORITHMS:
+        raise ValueError(f"unknown algorithm {algorithm!r}; one of {_ALGORITHMS}")
+    monoid = assoc.get(op)
+
+    if algorithm == "auto":
+        leaves = jax.tree.leaves(elems)
+        n = leaves[0].shape[axis]
+        itemsize = sum(l.dtype.itemsize for l in leaves)
+        kernel_ok = monoid.name == "sum" and len(leaves) == 1
+        choice = policy.choose(n, itemsize, kernel_available=kernel_ok)
+        algorithm = choice.algorithm
+        kw.setdefault("block_size", choice.block_size)
+        if algorithm == "two_pass":
+            kw.setdefault("variant", choice.variant)
+
+    if algorithm == "kernel":
+        from repro.kernels.scan_blocked import ops as kernel_ops
+
+        (x,) = jax.tree.leaves(elems)
+        kw.pop("block_size", None)
+        return kernel_ops.cumsum(x, axis=axis, exclusive=exclusive, **kw)
+    if algorithm == "ref":
+        kw.pop("block_size", None)
+        return _reference.scan_ref(elems, monoid, axis, exclusive=exclusive)
+    if algorithm == "horizontal":
+        kw.pop("block_size", None)
+        return _horizontal.scan_horizontal(elems, monoid, axis, exclusive)
+    if algorithm == "vertical":
+        kw.pop("block_size", None)
+        return _vertical.scan_vertical(elems, monoid, axis, exclusive=exclusive, **kw)
+    if algorithm == "tree":
+        kw.pop("block_size", None)
+        return _tree.scan_tree(elems, monoid, axis, exclusive)
+    if algorithm == "blocked":
+        return _blocked.scan_blocked(elems, monoid, axis, exclusive=exclusive, **kw)
+    if algorithm == "two_pass":
+        if exclusive:
+            inc = _blocked.scan_two_pass(elems, monoid, axis, **kw)
+            return _shift_exclusive(inc, monoid, axis)
+        return _blocked.scan_two_pass(elems, monoid, axis, **kw)
+    raise AssertionError(algorithm)
+
+
+def cumsum(x: jax.Array, axis: int = -1, exclusive: bool = False,
+           algorithm: str = "auto", **kw) -> jax.Array:
+    """Prefix sum with the policy-selected algorithm."""
+    return scan(x, "sum", axis=axis, algorithm=algorithm,
+                exclusive=exclusive, **kw)
+
+
+def _shift_exclusive(inc: Pytree, monoid: assoc.Monoid, axis: int) -> Pytree:
+    ident_full = monoid.identity_like(inc)
+    return jax.tree.map(
+        lambda x, i: jnp.concatenate(
+            [jax.lax.slice_in_dim(i, 0, 1, axis=axis),
+             jax.lax.slice_in_dim(x, 0, x.shape[axis] - 1, axis=axis)],
+            axis=axis,
+        ),
+        inc,
+        ident_full,
+    )

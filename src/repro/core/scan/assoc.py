@@ -1,0 +1,253 @@
+"""Associative-operator (monoid) framework for generalized prefix scans.
+
+The paper computes prefix *sums* (binary op = ``+``), but every algorithm in
+it — horizontal/vertical/tree SIMD, the two-pass multithreaded organizations,
+and cache-friendly partitioning — only requires an *associative* operator
+with an identity. We expose that generality so the same machinery drives:
+
+  * plain cumulative sums (the paper's object of study),
+  * ``max``/``min`` scans (running extrema),
+  * the *affine* monoid ``h' = a*h + b`` (diagonal SSM recurrences: Mamba2
+    decay, xLSTM gates),
+  * the *softmax pair* monoid ``(m, s)`` (flash attention's online softmax),
+  * the *segmented* wrapper that resets at flag boundaries (MoE ranking).
+
+Elements of a monoid may be arbitrary pytrees (e.g. the affine monoid's
+elements are ``(a, b)`` pairs); ``combine`` must be associative over them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """An associative operator with identity, over pytree elements.
+
+    Attributes:
+      name: registry key.
+      combine: ``combine(left, right)`` — associative, pytree -> pytree.
+        Convention: ``left`` is the earlier (lower-index) element.
+      identity_like: given one element (pytree of arrays), produce the
+        identity element with matching shapes/dtypes.
+    """
+
+    name: str
+    combine: Callable[[Pytree, Pytree], Pytree]
+    identity_like: Callable[[Pytree], Pytree]
+
+    def fold(self, elems: Pytree, axis: int = 0) -> Pytree:
+        """Reduce ``elems`` along ``axis`` with this monoid (tree-shaped).
+
+        Pairs ADJACENT elements at every level (like the paper's up-sweep),
+        which preserves operand order — required for non-commutative
+        monoids such as the affine SSM recurrence.
+        """
+        n = _axis_len(elems, axis)
+        if n == 0:
+            raise ValueError("cannot fold an empty axis")
+        while n > 1:
+            half = n // 2
+            even = _stride2(elems, axis, 0, half)
+            odd = _stride2(elems, axis, 1, half)
+            merged = self.combine(even, odd)
+            if n % 2:
+                tail = _slice(elems, axis, 2 * half, n)
+                merged = _concat([merged, tail], axis)
+            elems, n = merged, half + (n % 2)
+        return _squeeze(elems, axis)
+
+
+def _axis_len(tree: Pytree, axis: int) -> int:
+    leaves = jax.tree.leaves(tree)
+    return leaves[0].shape[axis]
+
+
+def _stride2(tree: Pytree, axis: int, start: int, count: int) -> Pytree:
+    """Every other element along ``axis``: indices start, start+2, ..."""
+
+    def f(x):
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(start, start + 2 * count, 2)
+        return x[tuple(idx)]
+
+    return jax.tree.map(f, tree)
+
+
+def _slice(tree: Pytree, axis: int, lo: int, hi: int) -> Pytree:
+    def f(x):
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(lo, hi)
+        return x[tuple(idx)]
+
+    return jax.tree.map(f, tree)
+
+
+def _concat(trees, axis: int) -> Pytree:
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=axis), *trees)
+
+
+def _squeeze(tree: Pytree, axis: int) -> Pytree:
+    def f(x):
+        idx = [slice(None)] * x.ndim
+        idx[axis] = 0
+        return x[tuple(idx)]
+
+    return jax.tree.map(f, tree)
+
+
+# ---------------------------------------------------------------------------
+# Standard monoids
+# ---------------------------------------------------------------------------
+
+
+def _sum_identity(x):
+    return jax.tree.map(jnp.zeros_like, x)
+
+
+SUM = Monoid("sum", lambda a, b: jax.tree.map(jnp.add, a, b), _sum_identity)
+
+PROD = Monoid(
+    "prod",
+    lambda a, b: jax.tree.map(jnp.multiply, a, b),
+    lambda x: jax.tree.map(jnp.ones_like, x),
+)
+
+
+def _min_value(dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).min
+    return -jnp.inf
+
+
+def _max_value(dtype):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.iinfo(dtype).max
+    return jnp.inf
+
+
+MAX = Monoid(
+    "max",
+    lambda a, b: jax.tree.map(jnp.maximum, a, b),
+    lambda x: jax.tree.map(lambda v: jnp.full_like(v, _min_value(v.dtype)), x),
+)
+
+MIN = Monoid(
+    "min",
+    lambda a, b: jax.tree.map(jnp.minimum, a, b),
+    lambda x: jax.tree.map(lambda v: jnp.full_like(v, _max_value(v.dtype)), x),
+)
+
+
+# ---------------------------------------------------------------------------
+# Affine monoid: elements (a, b) represent x -> a*x + b (elementwise).
+# Composition (earlier ∘ later): (a1,b1) then (a2,b2) is x -> a2*(a1*x+b1)+b2
+#   = (a1*a2, a2*b1 + b2).  Identity: (1, 0).
+# This is the recurrence h_t = a_t * h_{t-1} + b_t: the inclusive scan of
+# the (a_t, b_t) elements yields, at position t, the map from h_0 to h_t;
+# its `b` component (with h_0 = 0) is the hidden state trajectory.
+# ---------------------------------------------------------------------------
+
+
+def _affine_combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return (a1 * a2, a2 * b1 + b2)
+
+
+AFFINE = Monoid(
+    "affine",
+    _affine_combine,
+    lambda x: (jnp.ones_like(x[0]), jnp.zeros_like(x[1])),
+)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax monoid: elements (m, s) where m is a running max and s the
+# sum of exp(x - m). Flash attention's KV-block loop is an inclusive scan of
+# these pairs — i.e. the paper's blocked-scan pattern with this monoid.
+# ---------------------------------------------------------------------------
+
+
+def _softmax_combine(left, right):
+    m1, s1 = left
+    m2, s2 = right
+    m = jnp.maximum(m1, m2)
+    s = s1 * jnp.exp(m1 - m) + s2 * jnp.exp(m2 - m)
+    return (m, s)
+
+
+SOFTMAX_PAIR = Monoid(
+    "softmax_pair",
+    _softmax_combine,
+    lambda x: (jnp.full_like(x[0], -jnp.inf), jnp.zeros_like(x[1])),
+)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-affine monoid for matrix-state recurrences (mLSTM / general SSM):
+# elements (a, B) with scalar (or broadcastable) decay a and matrix update B:
+#   H' = a * H + B.  Same composition law as AFFINE (a broadcasts over B).
+# ---------------------------------------------------------------------------
+
+MATRIX_AFFINE = Monoid(
+    "matrix_affine",
+    _affine_combine,
+    lambda x: (jnp.ones_like(x[0]), jnp.zeros_like(x[1])),
+)
+
+
+REGISTRY: dict[str, Monoid] = {
+    m.name: m for m in (SUM, PROD, MAX, MIN, AFFINE, SOFTMAX_PAIR, MATRIX_AFFINE)
+}
+
+
+def get(op: "str | Monoid") -> Monoid:
+    if isinstance(op, Monoid):
+        return op
+    try:
+        return REGISTRY[op]
+    except KeyError:
+        raise ValueError(
+            f"unknown monoid {op!r}; known: {sorted(REGISTRY)}"
+        ) from None
+
+
+def segmented(base: Monoid) -> Monoid:
+    """Lift ``base`` into its segmented variant.
+
+    Elements are ``(flag, value)`` where ``flag != 0`` marks the start of a
+    new segment. The scan of the lifted monoid restarts at every flag —
+    standard construction (Blelloch 1990), used here for MoE per-expert
+    ranking and for packed-sequence boundaries in the data pipeline.
+    """
+
+    def combine(left, right):
+        f1, v1 = left
+        f2, v2 = right
+        both = base.combine(v1, v2)
+        keep_right = jax.tree.map(
+            lambda b, r: jnp.where(_bcast(f2, r), r, b), both, v2
+        )
+        return (jnp.maximum(f1, f2), keep_right)
+
+    def identity_like(x):
+        f, v = x
+        return (jnp.zeros_like(f), base.identity_like(v))
+
+    return Monoid(f"segmented_{base.name}", combine, identity_like)
+
+
+def _bcast(flag, val):
+    """Broadcast a flag array against a value array from the left."""
+    extra = val.ndim - flag.ndim
+    if extra > 0:
+        flag = flag.reshape(flag.shape + (1,) * extra)
+    return flag != 0

@@ -1,0 +1,74 @@
+"""Horizontal scan — the paper's §3.1, adapted from AVX-512 to TPU vectors.
+
+The CPU version computes an in-register prefix sum of a 16-lane vector with
+``log2(16) = 4`` shift+add steps (Listing 1: ``_mm512_alignr_epi32`` +
+``_mm512_add_epi32``), then broadcasts the last lane into the running total
+for the next vector.
+
+On TPU the analogue of "in register" is "in VREG/VMEM": the Hillis–Steele
+log-step network over the scanned axis, where each step combines the array
+with a copy of itself shifted by ``2^k``. XLA lowers the shifts to cheap
+lane/sublane slices. Work is ``O(n log n)`` combines — *not* work-efficient —
+but, exactly as the paper observes (§3.2 end), the extra combines happen in
+fast memory and beat "work-efficient" variants that pay memory traffic.
+
+This module is also the building block for in-block scans inside the Pallas
+kernels (``repro.kernels.scan_blocked``) where the axis length is the VMEM
+tile extent, so ``log`` steps are ~8 cheap vector ops.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import assoc
+
+Pytree = Any
+
+
+def _shift_down(elems: Pytree, ident_full: Pytree, k: int, axis: int) -> Pytree:
+    """Shift toward higher indices by ``k``; fill ``[0, k)`` with identity.
+
+    The TPU analogue of the paper's ``_mm512_slli_si512`` (which shifts in
+    zeros — the identity of ``+``; we shift in the monoid's identity).
+    """
+
+    def f(x, ident):
+        head = jax.lax.slice_in_dim(ident, 0, k, axis=axis)
+        tail = jax.lax.slice_in_dim(x, 0, x.shape[axis] - k, axis=axis)
+        return jnp.concatenate([head, tail], axis=axis)
+
+    return jax.tree.map(f, elems, ident_full)
+
+
+def scan_horizontal(
+    elems: Pytree,
+    op: "str | assoc.Monoid" = "sum",
+    axis: int = -1,
+    exclusive: bool = False,
+) -> Pytree:
+    """Hillis–Steele log-step inclusive scan along ``axis``.
+
+    ``ceil(log2(n))`` combine steps, each a full-width vector op. For the
+    ``sum`` monoid over 16 lanes this is exactly the paper's Listing 1.
+    """
+    monoid = assoc.get(op)
+    leaves = jax.tree.leaves(elems)
+    axis = axis % leaves[0].ndim
+    n = leaves[0].shape[axis]
+
+    ident_full = monoid.identity_like(elems)
+
+    out = elems
+    k = 1
+    while k < n:
+        shifted = _shift_down(out, ident_full, k, axis)
+        out = monoid.combine(shifted, out)  # shifted = earlier prefix
+        k *= 2
+
+    if exclusive:
+        out = _shift_down(out, ident_full, 1, axis)
+    return out

@@ -1,0 +1,76 @@
+"""Algorithm selection policy — the paper's §5 observations, codified.
+
+The paper closes with five observations about which algorithm to use when.
+This module turns them into an executable policy so `repro.core.scan.api`
+can pick a sensible default, and so the choice is documented in one place:
+
+  Obs 1  Dilation factors are fragile → we never auto-pick dilated variants;
+         equal partitions + partitioning (whose one tunable, the block size,
+         follows from cache/VMEM geometry) are the default.
+  Obs 2  Partition only when bandwidth-bound → tiny inputs that fit in
+         VMEM/cache skip the blocked machinery.
+  Obs 3  SIMD2-P (accumulate-first + partitioning) is the most robust
+         multithreaded organization → variant=2 is the distributed default.
+  Obs 4  In/out-of-place interacts with structure → exposed as buffer
+         donation in the jitted wrappers, not an algorithm change.
+  Obs 5  Tree/vertical lose on memory access → never auto-picked; they
+         remain available for study and as oracles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+# TPU v5e geometry (targets; the container CPU only validates semantics).
+VMEM_BYTES = 64 * 1024 * 1024  # per-core VMEM class budget we plan against
+VMEM_BLOCK_BUDGET = VMEM_BYTES // 8  # working set ≤ 1/8 VMEM: in+out+slack
+L2_HALF_FLOATS = 128 * 1024  # the paper's best CPU partition: ½ L2 in elems
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    algorithm: str  # 'horizontal' | 'blocked' | 'two_pass' | 'kernel'
+    block_size: int
+    variant: int  # two-pass organization (1 = scan-first, 2 = reduce-first)
+    carry_exchange: str  # distributed sums exchange
+    reason: str
+
+
+def choose(
+    n: int,
+    itemsize: int = 4,
+    n_devices: int = 1,
+    bandwidth_abundant: bool = False,
+    carry_bytes: int = 4,
+    kernel_available: bool = True,
+) -> Choice:
+    """Pick a scan algorithm for ``n`` elements of ``itemsize`` bytes."""
+    bytes_total = n * itemsize
+    block = max(1024, min(VMEM_BLOCK_BUDGET // max(itemsize, 1), n))
+
+    if bytes_total <= VMEM_BLOCK_BUDGET:
+        # Fits in fast memory: one horizontal pass, no partitioning (Obs 2).
+        return Choice(
+            "horizontal", n, 2, "all_gather",
+            "input fits in VMEM; in-register log-step scan only",
+        )
+
+    if bandwidth_abundant:
+        # The KNL/HBM finding: when bandwidth is abundant, partitioning's
+        # overhead is pure cost (Obs 2) — plain two-pass, reduce-first.
+        return Choice(
+            "two_pass", block, 2, "all_gather",
+            "bandwidth abundant: skip partitioning (paper Fig 13)",
+        )
+
+    algo = "kernel" if kernel_available else "blocked"
+    # Large carries (e.g. SSM matrix states) across many devices favor the
+    # log-step permute exchange over all-gather.
+    exchange = "all_gather"
+    if n_devices > 1 and carry_bytes * n_devices > 1 << 20:
+        exchange = "hillis_permute"
+    return Choice(
+        algo, block, 2, exchange,
+        "bandwidth-bound: cache/VMEM partitioning, reduce-first (SIMD2-P)",
+    )

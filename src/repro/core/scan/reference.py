@@ -1,0 +1,90 @@
+"""Pure sequential reference scans — the semantic ground truth.
+
+Every parallel algorithm in this package (horizontal, vertical, tree,
+blocked, distributed, and the Pallas kernels) is validated against these
+oracles. They correspond to the paper's ``Scalar`` baseline: one sequential
+pass of the associative operator (Table 2, row 1).
+
+The implementations use ``jax.lax.scan`` so they are jittable and exactly
+sequential (no reassociation — relevant for float32, see paper §1.1's
+non-associativity caveat).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import assoc
+
+Pytree = Any
+
+
+def _move_axis_first(tree: Pytree, axis: int) -> Pytree:
+    return jax.tree.map(lambda x: jnp.moveaxis(x, axis, 0), tree)
+
+
+def _move_axis_back(tree: Pytree, axis: int) -> Pytree:
+    return jax.tree.map(lambda x: jnp.moveaxis(x, 0, axis), tree)
+
+
+def scan_ref(
+    elems: Pytree,
+    op: "str | assoc.Monoid" = "sum",
+    axis: int = -1,
+    exclusive: bool = False,
+    reverse: bool = False,
+) -> Pytree:
+    """Sequential inclusive (or exclusive) scan along ``axis``.
+
+    For ``exclusive=True`` the output at position ``i`` is the fold of
+    elements ``[0, i)`` with the identity at position 0 (the paper's
+    "pre-scan").
+    """
+    monoid = assoc.get(op)
+    elems = _move_axis_first(elems, axis)
+    first = jax.tree.map(lambda x: x[0], elems)
+    init = monoid.identity_like(first)
+
+    if reverse:
+        elems = jax.tree.map(lambda x: jnp.flip(x, 0), elems)
+
+    def step(carry, x):
+        new = monoid.combine(carry, x)
+        out = carry if exclusive else new
+        return new, out
+
+    _, ys = jax.lax.scan(step, init, elems)
+    if reverse:
+        ys = jax.tree.map(lambda x: jnp.flip(x, 0), ys)
+    return _move_axis_back(ys, axis)
+
+
+def cumsum_ref(x: jax.Array, axis: int = -1, exclusive: bool = False) -> jax.Array:
+    """Prefix sum oracle (inclusive by default), accumulating in f32/i64-safe dtype."""
+    acc_dtype = _accum_dtype(x.dtype)
+    out = scan_ref(x.astype(acc_dtype), "sum", axis=axis, exclusive=exclusive)
+    return out.astype(x.dtype) if x.dtype != acc_dtype else out
+
+
+def segmented_scan_ref(
+    values: Pytree,
+    flags: jax.Array,
+    op: "str | assoc.Monoid" = "sum",
+    axis: int = -1,
+) -> Pytree:
+    """Segmented inclusive scan: restart at every nonzero flag."""
+    monoid = assoc.segmented(assoc.get(op))
+    _, out = scan_ref((flags, values), monoid, axis=axis)
+    return out
+
+
+def _accum_dtype(dtype) -> jnp.dtype:
+    """Widen low-precision dtypes for accumulation (kernel convention too)."""
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    if dtype in (jnp.int8, jnp.int16):
+        return jnp.int32
+    return dtype

@@ -1,0 +1,100 @@
+"""Segmented scans and partitioning-offset helpers.
+
+This module hosts the paper's *motivating database use case* (§1): "prefix
+sums are computed from a previously constructed histogram ... and then used
+as the new index values" during a partitioning step. In this framework the
+partitioning step is MoE token dispatch: tokens are partitioned by expert,
+and the write offsets come from an exclusive prefix sum over the expert
+histogram — plus a per-expert running rank, which is a segmented/one-hot
+scan. Also used by the data pipeline for packed-sequence boundaries.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import assoc
+from repro.core.scan import reference
+
+
+def segmented_scan(
+    values,
+    flags,
+    op: "str | assoc.Monoid" = "sum",
+    axis: int = -1,
+    algorithm: str = "ref",
+):
+    """Inclusive scan restarting wherever ``flags != 0``.
+
+    ``algorithm="kernel"`` routes sum-segmented scans over the last axis
+    through the Pallas ``segscan`` kernel (VMEM-blocked, grid-carried
+    (value, flag) pair — see kernels/segscan).
+    """
+    if algorithm == "kernel":
+        if assoc.get(op).name != "sum":
+            raise ValueError("kernel path supports the sum monoid")
+        from repro.kernels.segscan import ops as seg_ops
+        import jax.numpy as jnp
+        v = jnp.moveaxis(values, axis, -1)
+        f = jnp.moveaxis(flags, axis, -1)
+        return jnp.moveaxis(seg_ops.segmented_cumsum(v, f), -1, axis)
+    monoid = assoc.segmented(assoc.get(op))
+    _, out = reference.scan_ref((flags, values), monoid, axis=axis)
+    return out
+
+
+class DispatchPlan(NamedTuple):
+    """Result of the prefix-sum partitioning step (paper §1 use case).
+
+    Attributes:
+      counts: (E,) tokens routed to each expert (the histogram).
+      offsets: (E,) exclusive prefix sum of counts — each expert's base
+        write offset, exactly the paper's "new index values".
+      ranks: (T,) position of each token within its expert's bucket.
+      dest: (T,) = offsets[expert_id] + rank — the scatter destination.
+    """
+
+    counts: jax.Array
+    offsets: jax.Array
+    ranks: jax.Array
+    dest: jax.Array
+
+
+def dispatch_offsets(expert_ids: jax.Array, num_experts: int) -> DispatchPlan:
+    """Compute partitioning offsets for tokens → experts via prefix sums.
+
+    ``ranks`` is the exclusive running count of each expert along the token
+    axis: a (T, E) one-hot cumulative sum — computed with the scan
+    substrate — gathered at each token's own expert. This is the
+    radix-partitioning pattern from the paper's §1 (Satish et al. / radix
+    join), with experts playing the role of radix buckets.
+
+    Args:
+      expert_ids: (T,) int32 expert assignment per token (already flattened
+        over top-k: a token chosen by k experts appears k times upstream).
+    """
+    onehot = jax.nn.one_hot(expert_ids, num_experts, dtype=jnp.int32)  # (T, E)
+    # Exclusive scan over tokens — per-expert running counts before me.
+    running = reference.scan_ref(onehot, "sum", axis=0, exclusive=True)
+    ranks = jnp.take_along_axis(
+        running, expert_ids[:, None], axis=1
+    ).squeeze(-1)
+    counts = jnp.sum(onehot, axis=0)
+    offsets = reference.scan_ref(counts, "sum", axis=0, exclusive=True)
+    dest = offsets[expert_ids] + ranks
+    return DispatchPlan(counts=counts, offsets=offsets, ranks=ranks, dest=dest)
+
+
+def packed_segment_ids(lengths: jax.Array, total: int) -> jax.Array:
+    """Segment ids for packed sequences from an exclusive length scan.
+
+    Data-pipeline use: given per-document lengths, the exclusive prefix sum
+    gives each document's start offset; the segment id of every token slot
+    is then the count of starts at-or-before it, minus one.
+    """
+    starts = reference.scan_ref(lengths, "sum", axis=0, exclusive=True)
+    slot = jnp.arange(total)
+    return jnp.sum(slot[:, None] >= starts[None, :], axis=1) - 1

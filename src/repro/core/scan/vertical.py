@@ -1,0 +1,132 @@
+"""Vertical scan — the paper's §3.2, adapted to TPU layout semantics.
+
+CPU version: divide the data into ``w`` chunks of length ``k = n/w``; lane
+``i`` of the SIMD register walks chunk ``i`` sequentially, using
+gather/scatter at stride ``k``. Work-efficient (O(n) adds), two passes:
+
+  * V1: pass 1 writes per-chunk local prefix sums (scatter), pass 2 adds the
+    exclusive scan of chunk totals.
+  * V2: pass 1 only accumulates chunk totals (no writes), pass 2 computes
+    the global scan directly with the chunk offset folded in.
+
+TPU adaptation: the strided gather becomes a **reshape** ``(w, k)`` — chunk
+``i`` is row ``i`` — and "lane ``i`` walks its chunk" is a ``lax.scan`` down
+the columns, vectorized across rows. On CPUs the paper finds gather/scatter
+make this uncompetitive (Observation 5); on TPU the reshape is a layout
+change served from VMEM, so the verdict partially inverts — our Pallas SSM
+kernel (``repro.kernels.ssm_scan``) is exactly this vertical pattern with
+lanes = model channels.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import assoc
+from repro.core.scan import reference
+
+Pytree = Any
+
+
+def _set_axis(shape, axis, v):
+    s = list(shape)
+    s[axis] = v
+    return tuple(s)
+
+
+def scan_vertical(
+    elems: Pytree,
+    op: "str | assoc.Monoid" = "sum",
+    axis: int = -1,
+    lanes: int = 16,
+    variant: int = 2,
+    exclusive: bool = False,
+) -> Pytree:
+    """Two-pass vertical scan with ``lanes`` parallel chunks.
+
+    Args:
+      variant: 1 → local scans in pass 1 (paper's SIMD-V1);
+               2 → totals-only in pass 1, fused scan in pass 2 (SIMD-V2).
+    """
+    if variant not in (1, 2):
+        raise ValueError("variant must be 1 or 2")
+    monoid = assoc.get(op)
+    leaves = jax.tree.leaves(elems)
+    axis = axis % leaves[0].ndim
+    n = leaves[0].shape[axis]
+
+    if n % lanes != 0:
+        # Pad the tail with identity elements; slice the result back.
+        padded_n = -(-n // lanes) * lanes
+        ident_full = monoid.identity_like(elems)
+        padded = jax.tree.map(
+            lambda x, i: jnp.concatenate(
+                [x, jnp.broadcast_to(
+                    jax.lax.slice_in_dim(i, 0, 1, axis=axis),
+                    _set_axis(x.shape, axis, padded_n - n))],
+                axis=axis,
+            ),
+            elems,
+            ident_full,
+        )
+        out = scan_vertical(padded, monoid, axis, lanes, variant, exclusive)
+        return jax.tree.map(lambda x: jax.lax.slice_in_dim(x, 0, n, axis=axis), out)
+
+    k = n // lanes
+
+    def to_grid(x):
+        x = jnp.moveaxis(x, axis, 0)
+        return x.reshape((lanes, k) + x.shape[1:])
+
+    def from_grid(x):
+        x = x.reshape((n,) + x.shape[2:])
+        return jnp.moveaxis(x, 0, axis)
+
+    grid = jax.tree.map(to_grid, elems)  # leaves: (lanes, k, ...)
+
+    if variant == 1:
+        # Pass 1: per-chunk local scans (the paper's scatter-writes).
+        local = reference.scan_ref(grid, monoid, axis=1)
+        totals = jax.tree.map(lambda x: x[:, -1], local)
+        # Exclusive scan of the tiny `sums` array across chunks.
+        offsets = reference.scan_ref(totals, monoid, axis=0, exclusive=True)
+        # Pass 2: combine offsets into the stored local scans.
+        out = monoid.combine(jax.tree.map(lambda o: o[:, None], offsets), local)
+        # combine() may have broadcast the (lanes, 1, ...) offset; fix shapes.
+        out = jax.tree.map(lambda o, l: jnp.broadcast_to(o, l.shape), out, local)
+    else:
+        # Pass 1: reduce only — no writes (the paper's bandwidth saving).
+        totals = monoid.fold(grid, axis=1)
+        offsets = reference.scan_ref(totals, monoid, axis=0, exclusive=True)
+
+        # Pass 2: re-scan each chunk with its offset as the initial carry.
+        def step(carry, x):
+            new = monoid.combine(carry, x)
+            return new, new
+
+        def scan_row(off, row):
+            _, ys = jax.lax.scan(step, off, row)
+            return ys
+
+        out = jax.vmap(scan_row)(offsets, grid)
+
+    result = jax.tree.map(from_grid, out)
+    if exclusive:
+        result = _exclusive_from_inclusive(result, monoid, axis)
+    return result
+
+
+def _exclusive_from_inclusive(inc: Pytree, monoid: assoc.Monoid, axis: int):
+    ident_full = monoid.identity_like(inc)
+    return jax.tree.map(
+        lambda x, i: jnp.concatenate(
+            [jax.lax.slice_in_dim(i, 0, 1, axis=axis),
+             jax.lax.slice_in_dim(x, 0, x.shape[axis] - 1, axis=axis)],
+            axis=axis,
+        ),
+        inc,
+        ident_full,
+    )

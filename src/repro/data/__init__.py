@@ -1,0 +1,8 @@
+from repro.data.pipeline import (Batch, DataConfig, SyntheticDataset,
+                                 make_batch_specs)
+from repro.data.packing import pack_documents, packing_offsets
+
+__all__ = [
+    "Batch", "DataConfig", "SyntheticDataset", "make_batch_specs",
+    "pack_documents", "packing_offsets",
+]

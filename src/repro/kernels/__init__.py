@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Every kernel follows the same blocked-scan schedule (the paper's §2.2):
+sequential grid along the scanned axis, VMEM scratch carry, both logical
+passes fused while the block is VMEM-resident.
+
+  scan_blocked     — prefix sum with a grid-carried running total
+  ssm_scan         — affine-monoid scan (SSM/xLSTM recurrences)
+  flash_attention  — online-softmax monoid scan over KV blocks
+"""

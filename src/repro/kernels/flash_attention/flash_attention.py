@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: flash attention forward — online softmax as a scan.
+
+The KV-block loop of flash attention is an inclusive scan over KV blocks of
+the monoid ``(m, s) ⊕ (m', s') = (max(m,m'), s·e^{m-max} + s'·e^{m'-max})``
+(``repro.core.scan.assoc.SOFTMAX_PAIR``), with the weighted-value
+accumulator carried alongside. Structurally this kernel is the same program
+as ``scan_blocked``: grid-sequential blocks over the "scanned" (KV) axis,
+carry in VMEM scratch, both "passes" fused while the block is resident —
+the paper's §2.2 schedule with a fancier operator. That is why it lives in
+this framework: 32k prefill and 500k-context serving lower through the same
+blocked-scan machinery as the cumsum.
+
+Features: causal masking, sliding windows (gemma-style local layers),
+logit soft-capping (gemma2), GQA via index-map head grouping, and KV-length
+masking for padded caches.
+
+Forward only: training paths use the autodiff-able jnp blockwise reference
+(ref.py) under remat; this kernel serves inference (prefill/decode scoring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # finite mask value: keeps the m-carry NaN-free
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, window, softcap, block_q, block_k, kv_len, num_k_blocks,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _reset():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)  # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cols < kv_len
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]              # (bq, 1)
+    l_prev = l_scr[...]              # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)  # rescale of the carried sums
+    p = jnp.exp(s - m_new)           # (bq, bk); fully-masked rows -> ~0
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(kj == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # (BH, Tq, d)
+    k: jax.Array,  # (BHkv, Tk, d)
+    v: jax.Array,  # (BHkv, Tk, d)
+    *,
+    group: int = 1,       # heads per kv head (GQA)
+    scale: float,
+    causal: bool = True,
+    window: "int | None" = None,
+    softcap: "float | None" = None,
+    kv_len: "int | None" = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Attention over flattened (batch·heads) leading axes.
+
+    ``q`` has BH = B·H_q rows; ``k``/``v`` have B·H_kv; ``group`` maps each
+    q head to its kv head via the BlockSpec index map (no materialized
+    repeat — the GQA "gather" is free addressing, cf. paper Obs. 5).
+    """
+    BH, Tq, d = q.shape
+    BHkv, Tk, dk = k.shape
+    assert d == dk and v.shape == k.shape and BH == BHkv * group
+    if Tq % block_q or Tk % block_k:
+        raise ValueError(f"({Tq},{Tk}) not divisible by ({block_q},{block_k})")
+    kv_len = Tk if kv_len is None else kv_len
+    nq, nk = Tq // block_q, Tk // block_k
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, kv_len=kv_len, num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec(
+                (1, block_k, d),
+                lambda h, i, j, g=group: (h // g, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_k, d),
+                lambda h, i, j, g=group: (h // g, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

@@ -1,0 +1,79 @@
+"""Jitted public wrapper for flash attention.
+
+Accepts standard (B, H, T, D) layouts, handles GQA head mapping, pads
+sequence lengths to block multiples (mask-correct via ``kv_len``), and
+interpret-mode fallback off-TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "causal", "window", "softcap",
+        "block_q", "block_k", "interpret",
+    ),
+)
+def _impl(q, k, v, scale, causal, window, softcap, block_q, block_k, interpret):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    group = Hq // Hkv
+    bq = min(block_q, _round_up(Tq, 8))
+    bk = min(block_k, _round_up(Tk, 128))
+    pad_q = (-Tq) % bq
+    pad_k = (-Tk) % bk
+
+    qf = q.reshape(B * Hq, Tq, D)
+    kf = k.reshape(B * Hkv, Tk, D)
+    vf = v.reshape(B * Hkv, Tk, D)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+
+    out = flash_attention_kernel(
+        qf, kf, vf,
+        group=group, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_len=Tk, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )
+    return out[:, :Tq].reshape(B, Hq, Tq, D)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: "float | None" = None,
+    causal: bool = True,
+    window: "int | None" = None,
+    softcap: "float | None" = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """Flash attention over (B, H, T, D) tensors with GQA kv heads."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _impl(q, k, v, scale, causal, window, softcap,
+                 block_q, block_k, interpret)

@@ -1,0 +1,166 @@
+"""Oracles for flash attention.
+
+``mha_ref``       — dense softmax attention (ground truth, O(T²) memory).
+``blockwise_ref`` — jnp lax.scan over KV blocks with the online-softmax
+                    monoid: autodiff-able, O(T·block) memory. Used by the
+                    training path; also validates that the kernel's scan
+                    structure matches a pure-jnp formulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(rows, cols, kv_len, causal, window):
+    m = cols < kv_len
+    if causal:
+        m &= cols <= rows
+    if window is not None:
+        m &= cols > rows - window
+    return m
+
+
+def mha_ref(
+    q, k, v, *, group=1, scale, causal=True, window=None, softcap=None,
+    kv_len=None,
+):
+    """Dense attention over (BH, Tq, d) / (BHkv, Tk, d)."""
+    BH, Tq, d = q.shape
+    BHkv, Tk, _ = k.shape
+    kv_len = Tk if kv_len is None else kv_len
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(Tq)[:, None]
+    cols = jnp.arange(Tk)[None, :]
+    s = jnp.where(_mask(rows, cols, kv_len, causal, window)[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def blockwise_ref(
+    q, k, v, *, group=1, scale, causal=True, window=None, softcap=None,
+    kv_len=None, block_k=512, unroll=False,
+):
+    """Online-softmax attention as an explicit lax.scan over KV blocks."""
+    BH, Tq, d = q.shape
+    BHkv, Tk, _ = k.shape
+    kv_len = Tk if kv_len is None else kv_len
+    if Tk % block_k:
+        pad = -Tk % block_k
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        Tk = Tk + pad
+    nk = Tk // block_k
+    kb = k.reshape(BHkv, nk, block_k, d).transpose(1, 0, 2, 3)
+    vb = v.reshape(BHkv, nk, block_k, d).transpose(1, 0, 2, 3)
+    qf = q.astype(jnp.float32)
+    rows = jnp.arange(Tq)[:, None]
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kj, kblk, vblk = blk
+        kr = jnp.repeat(kblk, group, axis=0).astype(jnp.float32)
+        vr = jnp.repeat(vblk, group, axis=0).astype(jnp.float32)
+        s = jnp.einsum("hqd,hkd->hqk", qf, kr) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = kj * block_k + jnp.arange(block_k)[None, :]
+        s = jnp.where(_mask(rows, cols, kv_len, causal, window)[None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("hqk,hkd->hqd", p, vr)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((BH, Tq, 1), NEG_INF, jnp.float32),
+        jnp.zeros((BH, Tq, 1), jnp.float32),
+        jnp.zeros((BH, Tq, d), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (jnp.arange(nk), kb, vb),
+                                  unroll=True if unroll else 1)
+    safe = jnp.where(l == 0.0, 1.0, l)
+    return (acc / safe).astype(q.dtype)
+
+
+def banded_ref(
+    q, k, v, *, scale, window, softcap=None, kv_len=None,
+    block_q=512, block_k=512, unroll=False,
+):
+    """Sliding-window attention touching ONLY the in-window KV band.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Perf): the plain blockwise
+    scan walks ALL Tk/block_k KV blocks per query and relies on masking;
+    for a local (windowed) layer the live band is just ``window + bq``
+    wide. We slice that band per query block — compute and bytes drop by
+    ~Tk / (window + bq), e.g. 21x for gemma3's 1024-window local layers
+    at 32k context. Causality is implied (band ends at the query block's
+    last row); front zero-padding keeps the dynamic slice in bounds.
+
+    LAYOUT: q (B, H, Tq, d), k/v (B, Hkv, Tk, d) — batch and head axes
+    stay SEPARATE so GSPMD sharding (batch→data, heads→model) propagates
+    without the all-gathering (B·H) merge reshape (measured regression,
+    EXPERIMENTS.md §Perf iteration 2).
+    """
+    B, H, Tq, d = q.shape
+    _, Hkv, Tk, _ = k.shape
+    g = H // Hkv
+    kv_len = Tk if kv_len is None else kv_len
+    bq = bk = min(block_q, block_k)  # equal blocks: static band indexing
+    if Tq % bq:
+        raise ValueError(f"Tq={Tq} must divide block {bq}")
+    nq = Tq // bq
+    # Band of nband KV blocks per query block: {i-nband+1, ..., i}.
+    nband = min((window - 1) // bk + 2, nq)
+    L = nband * bk
+
+    # STATIC shifted stacks instead of per-block dynamic slices: the VJP
+    # of a dynamic slice materializes a full-size zero buffer PER BLOCK
+    # (measured +8% memory, §Perf iteration); static slicing keeps the
+    # cotangent as nband cheap pad-slice adds.
+    front = (nband - 1) * bk
+    kp = jnp.pad(k, ((0, 0), (0, 0), (front, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (front, 0), (0, 0)))
+    # kb_stack[j] = blocks shifted by (nband-1-j): shape (B,Hkv,nq,bk,d)
+    kb = jnp.stack([
+        kp[:, :, j * bk: j * bk + Tq].reshape(B, Hkv, nq, bk, d)
+        for j in range(nband)], axis=3)            # (B,Hkv,nq,nband,bk,d)
+    vb = jnp.stack([
+        vp[:, :, j * bk: j * bk + Tq].reshape(B, Hkv, nq, bk, d)
+        for j in range(nband)], axis=3)
+    kb = kb.reshape(B, Hkv, nq, L, d).transpose(2, 0, 1, 3, 4)
+    vb = vb.reshape(B, Hkv, nq, L, d).transpose(2, 0, 1, 3, 4)
+    qb = q.reshape(B, Hkv, g, nq, bq, d).transpose(3, 0, 1, 2, 4, 5)
+
+    def one_block(_, blk):
+        i, qi, ki, vi = blk                        # ki/vi: (B,Hkv,L,d)
+        qs = i * bq
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                       ki.astype(jnp.float32)) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = qs + jnp.arange(bq)[:, None]
+        cols = qs + bq - L + jnp.arange(L)[None, :]
+        m = ((cols >= 0) & (cols < kv_len) & (cols <= rows)
+             & (cols > rows - window))
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32))
+        return None, out.astype(q.dtype)
+
+    _, ob = jax.lax.scan(one_block, None, (jnp.arange(nq), qb, kb, vb),
+                         unroll=True if unroll else 1)
+    # (nq, B, Hkv, g, bq, d) -> (B, H, Tq, d)
+    return ob.transpose(1, 2, 3, 0, 4, 5).reshape(B, H, Tq, d)

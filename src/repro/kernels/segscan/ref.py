@@ -1,0 +1,24 @@
+"""Oracle for the segmented-scan kernel: sequential lax.scan of the
+segmented-sum monoid (restart at every nonzero flag)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_cumsum_ref(values: jax.Array, flags: jax.Array) -> jax.Array:
+    """Inclusive segmented cumsum along the LAST axis.
+
+    values: (..., N) numeric; flags: (..., N), nonzero starts a segment.
+    """
+    v = jnp.moveaxis(values.astype(jnp.float32), -1, 0)
+    f = jnp.moveaxis(flags != 0, -1, 0)
+
+    def step(carry, xs):
+        fi, vi = xs
+        out = jnp.where(fi, vi, carry + vi)
+        return out, out
+
+    _, ys = jax.lax.scan(step, jnp.zeros_like(v[0]), (f, v))
+    return jnp.moveaxis(ys, 0, -1).astype(values.dtype)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: VMEM-blocked SEGMENTED prefix sum.
+
+The paper's §1 partitioning primitive on-chip: a segmented cumsum
+restarts at every flag — MoE per-expert ranking, packed-sequence
+boundaries, and stream compaction are all this operator (DESIGN.md §3).
+
+Same schedule as ``kernels/scan_blocked`` (the paper's §2.2 partitioned
+scan): VMEM tiles, fused two passes per block, grid-carried state —
+except the carry is the segmented monoid's, a ``(value, flag_seen)``
+pair:
+
+    combine((f1, v1), (f2, v2)) = (f1 | f2,  f2 ? v2 : v1 + v2)
+
+The in-block pass is the Hillis–Steele log-step network over the pair
+(the paper's §3.1 horizontal scan lifted to a richer monoid). Because a
+flag anywhere in a block KILLS the incoming carry, the inter-block carry
+only survives flag-free prefixes — handled with one where() per block
+against the running flag-OR.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _seg_log_scan(v: jax.Array, f: jax.Array):
+    """In-block inclusive segmented scan along axis 1 of (bb, bn) tiles."""
+    n = v.shape[1]
+    k = 1
+    while k < n:
+        v_sh = jnp.pad(v, ((0, 0), (k, 0)))[:, :n]
+        f_sh = jnp.pad(f, ((0, 0), (k, 0)))[:, :n]
+        # combine(left=shifted, right=current)
+        v = jnp.where(f, v, v_sh + v)
+        f = jnp.logical_or(f, f_sh)
+        k *= 2
+    return v, f
+
+
+def _kernel(v_ref, f_ref, o_ref, carry_ref, *, acc_dtype):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    v = v_ref[...].astype(acc_dtype)
+    f = f_ref[...] != 0
+    local_v, local_f = _seg_log_scan(v, f)          # pass 1 in VMEM
+    carry = carry_ref[...]                          # (bb, 1) running value
+    # pass 2 fused: the carry only reaches positions with NO flag yet.
+    out = jnp.where(local_f, local_v, local_v + carry)
+    o_ref[...] = out.astype(o_ref.dtype)
+    carry_ref[...] = out[:, -1:]                    # segmented `sums` update
+
+
+def segscan_kernel(
+    values: jax.Array,
+    flags: jax.Array,
+    *,
+    block_b: int = 8,
+    block_n: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """Segmented cumsum along the last axis of 2D (B, N) inputs."""
+    if values.shape != flags.shape or values.ndim != 2:
+        raise ValueError(
+            f"expect matching 2D inputs, got {values.shape} {flags.shape}")
+    B, N = values.shape
+    if B % block_b or N % block_n:
+        raise ValueError(
+            f"shape {values.shape} not divisible by ({block_b}, {block_n})")
+    acc_dtype = jnp.float32 if values.dtype in (jnp.bfloat16, jnp.float16) \
+        else values.dtype
+    grid = (B // block_b, N // block_n)
+    spec = pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(values.shape, values.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, 1), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="segscan",
+    )(values, flags)

@@ -1,0 +1,5 @@
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_kernel
+
+__all__ = ["ssm_scan", "ssm_scan_ref", "ssm_scan_kernel"]

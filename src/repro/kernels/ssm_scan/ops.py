@@ -1,0 +1,51 @@
+"""Jitted public wrapper for the SSM affine-scan kernel.
+
+Pads T to a block multiple with the identity element (a=1, b=0) — identity
+padding keeps the carried state unchanged, so results are exact after the
+slice — and pads D with zeros.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_t", "block_d", "interpret")
+)
+def _impl(a, b, block_t, block_d, interpret):
+    B, T, D = a.shape
+    bt = min(block_t, _round_up(T, 8))
+    bd = min(block_d, _round_up(D, 128))
+    pad_t = (-T) % bt
+    pad_d = (-D) % bd
+    a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_d)), constant_values=1)
+    b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_d)))
+    out = ssm_scan_kernel(a, b, block_t=bt, block_d=bd, interpret=interpret)
+    return out[:, :T, :D]
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def ssm_scan(
+    a: jax.Array,
+    b: jax.Array,
+    block_t: int = 256,
+    block_d: int = 512,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """Kernel-backed h_t = a_t ⊙ h_{t-1} + b_t over (B, T, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _impl(a, b, block_t, block_d, interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the SSM affine-scan kernel: sequential lax.scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 of (B, T, D); h_{-1} = 0."""
+    acc = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.float16) else a.dtype
+    a32, b32 = a.astype(acc), b.astype(acc)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    def per_batch(a1, b1):
+        h0 = jnp.zeros(a1.shape[-1], acc)
+        _, hs = jax.lax.scan(step, h0, (a1, b1))
+        return hs
+
+    return jax.vmap(per_batch)(a32, b32).astype(b.dtype)

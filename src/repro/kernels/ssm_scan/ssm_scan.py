@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: chunked affine scan — SSM recurrences as prefix sums.
+
+Computes, along the time axis,
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over the channel axis)
+
+which is the inclusive scan of the *affine monoid* (see
+``repro.core.scan.assoc.AFFINE``). Diagonal SSM recurrences (Mamba2 decay,
+xLSTM forget/input gates, RetNet-style linear attention denominators) all
+have this form.
+
+Paper mapping — this kernel is the paper's two techniques composed, with a
+richer operator:
+
+  * §3.2 *vertical SIMD*: channels are the SIMD lanes. Each lane carries an
+    independent recurrence — the work-efficient O(n) schedule with no
+    horizontal interaction, which on TPU is the natural layout (channels on
+    the 128-lane axis), not a gather/scatter penalty (Observation 5
+    inverts).
+  * §2.2 *cache-friendly partitioning*: the time axis is cut into
+    VMEM-sized chunks; within a chunk a log-step Hillis–Steele scan of the
+    (a, b) pairs runs in registers; the inter-chunk state is the grid-
+    carried `sums` array.
+
+Grid: (batch, channel_blocks, time_blocks) — time innermost so the carry in
+VMEM scratch chains across time blocks of one (batch, channel) stripe.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _affine_log_scan(a: jax.Array, b: jax.Array, axis: int):
+    """In-block inclusive scan of affine pairs (Hillis–Steele, paper §3.1).
+
+    combine(left, right) = (a_l·a_r, a_r·b_l + b_r); shifts fill with the
+    identity (1, 0).
+    """
+    n = a.shape[axis]
+    k = 1
+    while k < n:
+        a_sh = _shift(a, k, axis, fill=1.0)
+        b_sh = _shift(b, k, axis, fill=0.0)
+        b = a * b_sh + b
+        a = a * a_sh
+        k *= 2
+    return a, b
+
+
+def _shift(x: jax.Array, k: int, axis: int, fill: float) -> jax.Array:
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (k, 0)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, x.shape[axis])
+    return jnp.pad(x, pad, constant_values=fill)[tuple(sl)]
+
+
+def _kernel(a_ref, b_ref, o_ref, carry_ref, *, acc_dtype):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _reset():
+        carry_ref[...] = jnp.zeros_like(carry_ref)  # h before the sequence
+
+    a = a_ref[0].astype(acc_dtype)  # (bt, bd)
+    b = b_ref[0].astype(acc_dtype)
+    # Pass 1 (in VMEM): cumulative affine maps within the chunk.
+    A, B = _affine_log_scan(a, b, axis=0)
+    # Pass 2 (fused): apply the carried state h ⇒ h_t = B_t + A_t · h_in.
+    h_in = carry_ref[...]  # (1, bd)
+    out = B + A * h_in
+    o_ref[0] = out.astype(o_ref.dtype)
+    carry_ref[...] = out[-1:, :]  # the paper's `sums` update
+
+
+def ssm_scan_kernel(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_t: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Affine scan along axis 1 of (B, T, D) inputs; returns h of same shape.
+
+    Caller contract (see ops.py): T % block_t == 0 and D % block_d == 0.
+    """
+    if a.shape != b.shape or a.ndim != 3:
+        raise ValueError(f"expect matching (B, T, D) inputs, got {a.shape} {b.shape}")
+    B, T, D = a.shape
+    if T % block_t or D % block_d:
+        raise ValueError(f"({T}, {D}) not divisible by ({block_t}, {block_d})")
+    acc_dtype = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.float16) else a.dtype
+    grid = (B, D // block_d, T // block_t)
+    spec = pl.BlockSpec((1, block_t, block_d), lambda i, d, t: (i, t, d))
+    return pl.pallas_call(
+        functools.partial(_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, b.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_d), acc_dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="ssm_scan",
+    )(a, b)

@@ -1,0 +1,33 @@
+"""Production mesh builders (functions — importing never touches devices).
+
+Target: TPU v5e. Single pod = 16×16 = 256 chips (data, model); multi-pod
+= 2 pods = 512 chips with a leading 'pod' axis. DCN links the pods; ICI
+links chips in-pod — the axis order (pod outermost) matches GSPMD's
+expectation that the slowest collective axis is outermost.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small debug mesh over however many devices exist (tests)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"asked for {data}x{model} but only {n} devices")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants (v5e) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per-direction)
+ICI_LINKS = 4                   # 2D torus in-pod: 4 links per chip
+DCN_BW = 25e9                   # bytes/s per host NIC class (pod axis)

@@ -1,0 +1,106 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs(arch, shape)`` returns the *model inputs* (batch / request
+tensors); ``state_specs`` the param/optimizer trees via ``jax.eval_shape``
+(no allocation — exact shapes for 235B configs on a CPU container);
+``step_bundle`` assembles everything a dry-run lower() needs for the
+cell's step kind (train / prefill / decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.serve.steps import init_cache_for
+
+Pytree = Any
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str                  # train | prefill | decode
+    cfg: ModelConfig
+    inputs: dict               # name -> ShapeDtypeStruct (model inputs)
+
+
+def _token_split(cfg: ModelConfig, seq_len: int) -> tuple[int, int]:
+    """(frontend positions, text positions) summing to seq_len."""
+    if cfg.is_encdec:
+        f = min(cfg.frontend_tokens, seq_len // 2)
+        return f, seq_len - f
+    if cfg.frontend_tokens:
+        f = min(cfg.frontend_tokens, seq_len // 2)
+        return f, seq_len - f
+    return 0, seq_len
+
+
+def input_specs(arch: str, shape: str,
+                cfg: Optional[ModelConfig] = None) -> dict:
+    """Model-input ShapeDtypeStructs for one dry-run cell."""
+    cfg = cfg or configs.get_config(arch)
+    sp: ShapeSpec = SHAPES[shape]
+    B, L = sp.global_batch, sp.seq_len
+    F, T = _token_split(cfg, L)
+    fdim = 1024  # precomputed patch/frame embedding width (stub frontends)
+
+    if sp.step == "train":
+        batch = {
+            "tokens": S((B, T), jnp.int32),
+            "labels": S((B, T), jnp.int32),
+            "mask": S((B, T), jnp.float32),
+        }
+        if F:
+            batch["embeds"] = S((B, F, fdim), jnp.float32)
+        return {"batch": batch}
+
+    if sp.step == "prefill":
+        out = {"tokens": S((B, T), jnp.int32)}
+        if F:
+            out["embeds"] = S((B, F, fdim), jnp.float32)
+        return out
+
+    # decode: ONE new token against a cache of L slots.
+    out = {
+        "tokens": S((B, 1), jnp.int32),
+        "cache": jax.eval_shape(
+            lambda: init_cache_for(cfg, B, L)),
+        "cache_len": S((), jnp.int32),
+    }
+    if cfg.is_encdec:
+        # Fixed encoder memory (≈3 min of audio) for the decode shapes.
+        out["memory"] = S((B, min(cfg.frontend_tokens, 4096), cfg.d_model),
+                          jnp.float32)
+    return out
+
+
+def state_specs(cfg: ModelConfig) -> tuple[Pytree, Pytree]:
+    """(params, opt_state) ShapeDtypeStruct trees — no allocation."""
+    key = S((2,), jnp.uint32)
+
+    def init(k):
+        if cfg.is_encdec:
+            return encdec_mod.init_encdec(k, cfg)
+        return lm_mod.init_lm(k, cfg)
+
+    params = jax.eval_shape(init, key)
+    opt = jax.eval_shape(adamw.adamw_init, params)
+    return params, opt
+
+
+def batch_dims(arch: str, shape: str) -> tuple[int, int]:
+    sp = SHAPES[shape]
+    return sp.global_batch, sp.seq_len

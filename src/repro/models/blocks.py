@@ -1,0 +1,202 @@
+"""Per-kind residual blocks and their caches.
+
+Block kinds (``ModelConfig.layer_pattern``):
+  global       pre-norm GQA attention (full causal) + pre-norm MLP
+  local        same with sliding-window attention (+ local rope theta)
+  moe          pre-norm attention + pre-norm MoE FFN (scan-offset dispatch)
+  mamba        pre-norm Mamba2 (SSD blocked scan)
+  mlstm        pre-norm mLSTM block (chunkwise scan, own up/down proj)
+  slstm        pre-norm sLSTM + pre-norm gated FFN (pf = 4/3)
+  shared_attn  zamba2-style: concat(x, x0) -> per-layer in-proj -> SHARED
+               attention+MLP block -> per-layer out-proj, residual to x
+
+Every ``apply_block`` returns ``(x, aux, cache)`` where ``aux`` is a dict of
+scalar f32 auxiliaries (moe losses; zeros elsewhere so the lax.scan over
+layers has a uniform carry).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import xlstm
+from repro.models.layers.attention import (apply_attention, init_attention,
+                                           init_kv_cache)
+from repro.models.layers.common import compute_dtype, dense_init, split_keys
+from repro.models.layers.mlp import apply_mlp, init_mlp
+from repro.models.layers.moe import apply_moe, init_moe
+from repro.models.layers.norms import apply_norm, init_norm
+from repro.models.layers.ssm import apply_ssm, init_ssm, init_ssm_cache
+
+ATTN_KINDS = ("global", "local", "moe", "shared_attn")
+
+
+def zero_aux() -> dict:
+    return {
+        "load_balance_loss": jnp.zeros((), jnp.float32),
+        "router_z_loss": jnp.zeros((), jnp.float32),
+        "dropped_fraction": jnp.zeros((), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    ks = split_keys(key, 4)
+    if kind in ("global", "local"):
+        p = {"norm1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+             "norm2": init_norm(cfg), "mlp": init_mlp(ks[1], cfg)}
+        if cfg.post_block_norm:
+            p["post_norm1"] = init_norm(cfg)
+            p["post_norm2"] = init_norm(cfg)
+        return p
+    if kind == "moe":
+        return {"norm1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+                "norm2": init_norm(cfg), "moe": init_moe(ks[1], cfg)}
+    if kind == "mamba":
+        return {"norm1": init_norm(cfg), "ssm": init_ssm(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"norm1": init_norm(cfg), "mlstm": xlstm.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"norm1": init_norm(cfg), "slstm": xlstm.init_slstm(ks[0], cfg),
+                "norm2": init_norm(cfg),
+                "mlp": init_mlp(ks[1], cfg, d_ff=4 * cfg.d_model // 3)}
+    if kind == "shared_attn":
+        d = cfg.d_model
+        dt = compute_dtype(cfg)
+        return {
+            "norm1": init_norm(cfg, 2 * d),
+            "shared_proj_in": {"w": dense_init(ks[0], (2 * d, d), 2 * d, dt)},
+            "shared_proj_out": {"w": dense_init(ks[1], (d, d), d, dt)},
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def init_shared_block(key, cfg: ModelConfig):
+    """The zamba2 SHARED attention+MLP block (one copy for the model)."""
+    ks = split_keys(key, 2)
+    return {"norm1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+            "norm2": init_norm(cfg), "mlp": init_mlp(ks[1], cfg)}
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ("global", "local", "moe", "shared_attn"):
+        window_kind = "local" if kind == "local" else None
+        return {"kv": init_kv_cache(cfg, batch, max_len, window_kind)}
+    if kind == "mamba":
+        return {"ssm": init_ssm_cache(cfg, batch)}
+    if kind == "mlstm":
+        return {"mlstm": xlstm.init_mlstm_cache(cfg, batch)}
+    if kind == "slstm":
+        return {"slstm": xlstm.init_slstm_cache(cfg, batch)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+
+def _attn_mlp_core(params, x, cfg, *, kind, positions, cache, cache_len,
+                   attn_impl, ffn, unroll=False):
+    """Shared wiring for attention blocks; ``ffn`` runs the second half."""
+    h = apply_norm(params["norm1"], x, cfg)
+    attn_out, new_kv = apply_attention(
+        params["attn"], h, cfg, kind=("local" if kind == "local" else
+                                      "global"),
+        positions=positions, cache=None if cache is None else cache["kv"],
+        cache_len=cache_len, impl=attn_impl, unroll=unroll,
+    )
+    if cfg.post_block_norm:
+        attn_out = apply_norm(params["post_norm1"], attn_out, cfg)
+    x = x + attn_out
+    h = apply_norm(params["norm2"], x, cfg)
+    ffn_out, aux = ffn(h)
+    if cfg.post_block_norm:
+        ffn_out = apply_norm(params["post_norm2"], ffn_out, cfg)
+    x = x + ffn_out
+    new_cache = None if cache is None else {"kv": new_kv}
+    return x, aux, new_cache
+
+
+def apply_block(
+    params,
+    x,
+    cfg: ModelConfig,
+    kind: str,
+    *,
+    shared: Any = None,
+    x0: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    cache_len: Optional[jax.Array] = None,
+    attn_impl: Optional[str] = None,
+    unroll: bool = False,
+):
+    if kind in ("global", "local"):
+        def ffn(h):
+            return apply_mlp(params["mlp"], h, cfg), zero_aux()
+        return _attn_mlp_core(
+            params, x, cfg, kind=kind, positions=positions, cache=cache,
+            cache_len=cache_len, attn_impl=attn_impl, ffn=ffn,
+            unroll=unroll)
+
+    if kind == "moe":
+        def ffn(h):
+            y, moe_aux = apply_moe(params["moe"], h, cfg)
+            return y, dict(zero_aux(),
+                           load_balance_loss=moe_aux.load_balance_loss,
+                           router_z_loss=moe_aux.router_z_loss,
+                           dropped_fraction=moe_aux.dropped_fraction)
+        return _attn_mlp_core(
+            params, x, cfg, kind=kind, positions=positions, cache=cache,
+            cache_len=cache_len, attn_impl=attn_impl, ffn=ffn,
+            unroll=unroll)
+
+    if kind == "mamba":
+        h = apply_norm(params["norm1"], x, cfg)
+        y, new_ssm = apply_ssm(
+            params["ssm"], h, cfg,
+            cache=None if cache is None else cache["ssm"])
+        new_cache = None if cache is None else {"ssm": new_ssm}
+        return x + y, zero_aux(), new_cache
+
+    if kind == "mlstm":
+        h = apply_norm(params["norm1"], x, cfg)
+        y, new_m = xlstm.apply_mlstm(
+            params["mlstm"], h, cfg,
+            cache=None if cache is None else cache["mlstm"])
+        new_cache = None if cache is None else {"mlstm": new_m}
+        return x + y, zero_aux(), new_cache
+
+    if kind == "slstm":
+        h = apply_norm(params["norm1"], x, cfg)
+        y, new_s = xlstm.apply_slstm(
+            params["slstm"], h, cfg,
+            cache=None if cache is None else cache["slstm"])
+        x = x + y
+        h = apply_norm(params["norm2"], x, cfg)
+        x = x + apply_mlp(params["mlp"], h, cfg)
+        new_cache = None if cache is None else {"slstm": new_s}
+        return x, zero_aux(), new_cache
+
+    if kind == "shared_attn":
+        assert shared is not None and x0 is not None
+        cat = jnp.concatenate([x, x0], axis=-1)
+        h = apply_norm(params["norm1"], cat, cfg)
+        h = jnp.einsum("btc,cd->btd", h, params["shared_proj_in"]["w"])
+        h, aux, new_cache = _attn_mlp_core(
+            shared, h, cfg, kind="global", positions=positions, cache=cache,
+            cache_len=cache_len, attn_impl=attn_impl, unroll=unroll,
+            ffn=lambda hh: (apply_mlp(shared["mlp"], hh, cfg), zero_aux()))
+        y = jnp.einsum("btd,de->bte", h, params["shared_proj_out"]["w"])
+        return x + y, aux, new_cache
+
+    raise ValueError(f"unknown block kind {kind!r}")

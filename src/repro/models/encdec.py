@@ -1,0 +1,145 @@
+"""Encoder–decoder backbone (seamless-m4t): audio-frame encoder + text
+decoder with cross attention.
+
+The speech frontend (w2v-BERT conformer) is stubbed per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, F, 1024) that a
+learned adapter projects into d_model. Encoder layers are non-causal
+attention blocks; decoder layers are causal self-attention + cross
+attention + MLP, stacked with the same periods-scan as ``lm.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import shard
+from repro.models import blocks as blk
+from repro.models.config import ModelConfig
+from repro.models.layers.attention import (apply_attention,
+                                           apply_cross_attention,
+                                           init_attention, init_cross_attention,
+                                           init_kv_cache)
+from repro.models.layers.common import split_keys
+from repro.models.layers.embedding import (embed_tokens, init_embedding,
+                                           lm_logits)
+from repro.models.layers.frontend import apply_frontend, init_frontend
+from repro.models.layers.mlp import apply_mlp, init_mlp
+from repro.models.layers.norms import apply_norm, init_norm
+
+Pytree = Any
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    ks = split_keys(key, 3)
+    return {
+        "norm1": init_norm(cfg), "attn": init_attention(ks[0], cfg),
+        "norm2": init_norm(cfg), "cross_attn": init_cross_attention(ks[1], cfg),
+        "norm3": init_norm(cfg), "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Pytree:
+    assert cfg.encoder_layers > 0
+    ks = split_keys(key, 5)
+    params: dict = init_embedding(ks[0], cfg)
+    params["frontend"] = init_frontend(ks[1], cfg)
+    enc_keys = jnp.stack(split_keys(ks[2], cfg.encoder_layers))
+    params["encoder_blocks"] = jax.vmap(
+        lambda k: blk.init_block(k, cfg, "global"))(enc_keys)
+    dec_keys = jnp.stack(split_keys(ks[3], cfg.num_layers))
+    params["decoder_blocks"] = jax.vmap(
+        lambda k: _init_dec_block(k, cfg))(dec_keys)
+    params["enc_norm"] = init_norm(cfg)
+    params["final_norm"] = init_norm(cfg)
+    return params
+
+
+def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    one = {"kv": init_kv_cache(cfg, batch, max_len)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+
+
+def encode(params, frame_embeds, cfg: ModelConfig, remat: bool = False,
+           unroll: bool = False):
+    """(B, F, 1024) precomputed frames -> encoder memory (B, F, D)."""
+    x = apply_frontend(params["frontend"], frame_embeds, cfg)
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, p_sl):
+        h = apply_norm(p_sl["norm1"], carry, cfg)
+        a, _ = apply_attention(p_sl["attn"], h, cfg, positions=positions,
+                               causal=False)
+        carry = carry + a
+        h = apply_norm(p_sl["norm2"], carry, cfg)
+        carry = carry + apply_mlp(p_sl["mlp"], h, cfg)
+        return carry, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder_blocks"],
+                        unroll=True if unroll else 1)
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def decode_forward(
+    params, tokens, memory, cfg: ModelConfig, *,
+    cache: Optional[Pytree] = None, cache_len: Optional[jax.Array] = None,
+    remat: bool = False, unroll: bool = False,
+):
+    """Decoder stack -> final-norm hidden (B, S, D); cache for serving."""
+    x = embed_tokens(params, tokens, cfg)
+    S = x.shape[1]
+    start = 0 if cache_len is None else cache_len
+    positions = start + jnp.arange(S)
+    decode = cache is not None
+
+    def body(carry, per_layer):
+        x = carry
+        p_sl = per_layer[0] if decode else per_layer
+        c_sl = per_layer[1] if decode else None
+        h = apply_norm(p_sl["norm1"], x, cfg)
+        a, new_kv = apply_attention(
+            p_sl["attn"], h, cfg, positions=positions,
+            cache=None if c_sl is None else c_sl["kv"], cache_len=cache_len)
+        x = x + a
+        h = apply_norm(p_sl["norm2"], x, cfg)
+        x = x + apply_cross_attention(p_sl["cross_attn"], h, memory, cfg)
+        h = apply_norm(p_sl["norm3"], x, cfg)
+        x = x + apply_mlp(p_sl["mlp"], h, cfg)
+        return x, ({"kv": new_kv} if decode else None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (params["decoder_blocks"], cache) if decode \
+        else params["decoder_blocks"]
+    x, new_cache = jax.lax.scan(body, x, xs, unroll=True if unroll else 1)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, (new_cache if decode else None)
+
+
+def encdec_loss(params, batch: dict, cfg: ModelConfig, *,
+                remat: bool = False, loss_chunk: int = 512,
+                attn_impl: "str | None" = None, unroll: bool = False):
+    """batch: embeds (B,F,1024), tokens (B,S), labels, mask."""
+    from repro.models.lm import chunked_ce_loss
+    memory = encode(params, batch["embeds"], cfg, remat=remat,
+                    unroll=unroll)
+    hidden, _ = decode_forward(params, batch["tokens"], memory, cfg,
+                               remat=remat, unroll=unroll)
+    ce = chunked_ce_loss(params, hidden, batch["labels"], batch["mask"],
+                         cfg, chunk=loss_chunk, unroll=unroll)
+    return ce, {"ce": ce, "loss": ce}
+
+
+def serve_step(params, tokens, memory, cache, cache_len, cfg: ModelConfig,
+               unroll: bool = False):
+    """One decoder token against a precomputed encoder memory."""
+    hidden, new_cache = decode_forward(
+        params, tokens, memory, cfg, cache=cache, cache_len=cache_len,
+        unroll=unroll)
+    logits = lm_logits(params, hidden[:, -1:], cfg)[:, 0]
+    return logits, new_cache

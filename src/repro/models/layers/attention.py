@@ -1,0 +1,280 @@
+"""Attention: GQA + RoPE + sliding windows + softcap + qk-norm + KV cache.
+
+Implementation selection mirrors the scan policy (paper §5): small sequences
+use the dense form; long sequences use the *blockwise online-softmax scan*
+(`repro.kernels.flash_attention.ref.blockwise_ref`, autodiff-able) and the
+Pallas flash kernel on TPU for inference — all three compute the same
+softmax-pair monoid scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import shard
+from repro.kernels.flash_attention import (banded_ref, blockwise_ref,
+                                            flash_attention)
+from repro.models.config import ModelConfig
+from repro.models.layers.common import compute_dtype, dense_init
+from repro.models.layers.norms import rms_norm_headwise
+from repro.models.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig):
+    dt = compute_dtype(cfg)
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), d, dt),
+        "wk": dense_init(ks[1], (d, hk * hd), d, dt),
+        "wv": dense_init(ks[2], (d, hk * hd), d, dt),
+        "wo": dense_init(ks[3], (h * hd, d), h * hd, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones(hd, jnp.float32)
+        p["k_norm"] = jnp.ones(hd, jnp.float32)
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window_kind:
+                  "str | None" = None):
+    """Empty cache for one attention layer. Local (sliding-window) layers
+    allocate only `window` slots — the 500k-context memory saver."""
+    dt = compute_dtype(cfg)
+    slots = max_len
+    if window_kind == "local" and cfg.sliding_window:
+        slots = min(max_len, cfg.sliding_window)
+    shape = (batch, cfg.num_kv_heads, slots, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _project(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dm->bsm", x, params["wq"]).reshape(B, S, h, hd)
+    k = jnp.einsum("bsd,dm->bsm", x, params["wk"]).reshape(B, S, hk, hd)
+    v = jnp.einsum("bsd,dm->bsm", x, params["wv"]).reshape(B, S, hk, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(params["q_norm"], q, cfg.norm_eps)
+        k = rms_norm_headwise(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _theta(cfg: ModelConfig, kind: str) -> float:
+    if kind == "local" and cfg.rope_theta_local is not None:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def _dense_attn(q, k, v, *, scale, causal, window, softcap, q_pos, k_pos,
+                kv_len):
+    """q (B,H,Sq,hd), k/v (B,Hkv,Sk,hd); GQA via head reshape."""
+    B, H, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qf = q.reshape(B, Hkv, g, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (k_pos[None, :] < kv_len) & (k_pos[None, :] >= 0)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def apply_attention(
+    params,
+    x,
+    cfg: ModelConfig,
+    *,
+    kind: str = "global",
+    positions: Optional[jax.Array] = None,
+    cache: Optional[dict] = None,
+    cache_len: Optional[jax.Array] = None,
+    impl: Optional[str] = None,
+    causal: bool = True,
+    unroll: bool = False,
+):
+    """Self-attention over (B, S, D).
+
+    Training/prefill: ``cache=None``; decode: pass the layer cache and the
+    number of valid entries ``cache_len`` — new K/V are written at
+    ``cache_len`` (modulo window for local layers) and attention spans the
+    cache. Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    window = cfg.sliding_window if kind == "local" else None
+    scale = cfg.query_scale if cfg.query_scale is not None \
+        else cfg.head_dim ** -0.5
+    if positions is None:
+        positions = jnp.arange(S)
+
+    q, k, v = _project(params, x, cfg)
+    theta = _theta(cfg, kind)
+    q = apply_rope(q.swapaxes(1, 2), positions, theta).swapaxes(1, 2)
+    k = apply_rope(k.swapaxes(1, 2), positions, theta).swapaxes(1, 2)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    qh = q.swapaxes(1, 2)  # (B, H, S, hd)
+    kh = k.swapaxes(1, 2)
+    vh = v.swapaxes(1, 2)
+
+    new_cache = cache
+    import os as _os
+    _baseline = bool(_os.environ.get("REPRO_BASELINE"))
+    if cache is not None and window is not None and S >= cache["k"].shape[2]:
+        # Prefill covering the whole ring (S ≥ window slots): attention is
+        # computed from the in-segment keys directly (window-masked), and
+        # the ring is (re)filled with the last `slots` keys. Only valid
+        # when prefilling from an empty cache (the serve engine does).
+        slots = cache["k"].shape[2]
+        if window < S and S % min(512, S) == 0 and not _baseline:
+            # banded: touch only the in-window KV band (§Perf) — at 32k
+            # prefill this is 21x less attention traffic than masking.
+            # K/V repeat to full heads FIRST: kv_heads (e.g. 8) cannot
+            # shard 16-way, but repeated heads can — keeps the banded
+            # einsums fully local under TP (§Perf iteration 3).
+            g_rep = cfg.num_heads // cfg.num_kv_heads
+            kr = shard(jnp.repeat(kh, g_rep, axis=1).swapaxes(1, 2),
+                       "batch", "seq", "heads", None).swapaxes(1, 2)
+            vr = shard(jnp.repeat(vh, g_rep, axis=1).swapaxes(1, 2),
+                       "batch", "seq", "heads", None).swapaxes(1, 2)
+            out = banded_ref(
+                qh, kr, vr, scale=scale, window=window,
+                softcap=cfg.attn_softcap, block_q=min(512, S),
+                block_k=min(512, S), unroll=unroll)
+        else:
+            out = _dense_attn(
+                qh, kh, vh, scale=scale, causal=causal, window=window,
+                softcap=cfg.attn_softcap, q_pos=positions, k_pos=positions,
+                kv_len=positions[-1] + 1,
+            )
+        roll = (cache_len + S) % slots  # ring write head after this segment
+        ktail = kh[:, :, -slots:]
+        vtail = vh[:, :, -slots:]
+        idx = (jnp.arange(slots) - roll) % slots
+        new_cache = {"k": ktail[:, :, idx], "v": vtail[:, :, idx]}
+    elif (cache is not None and window is None and S == cache["k"].shape[2]
+          and S > 4096 and not _baseline):
+        # Full-cache prefill of a GLOBAL layer at long S: the O(S²) f32
+        # logits of the dense path dwarf HBM — use the blockwise
+        # online-softmax scan and write the cache directly (§Perf).
+        H, Hkv = cfg.num_heads, cfg.num_kv_heads
+        out = blockwise_ref(
+            qh.reshape(B * H, S, cfg.head_dim),
+            kh.reshape(B * Hkv, S, cfg.head_dim),
+            vh.reshape(B * Hkv, S, cfg.head_dim),
+            group=H // Hkv, scale=scale, causal=causal,
+            softcap=cfg.attn_softcap, block_k=1024, unroll=unroll,
+        ).reshape(B, H, S, cfg.head_dim)
+        new_cache = {"k": kh, "v": vh}
+    elif cache is not None:
+        slots = cache["k"].shape[2]
+        # Ring-buffer write for windowed layers, append otherwise.
+        write_at = (cache_len % slots) if window is not None else cache_len
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], kh, (0, 0, write_at, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], vh, (0, 0, write_at, 0))
+        new_cache = {"k": kc, "v": vc}
+        k_slot = jnp.arange(slots)
+        if window is not None:
+            # Recover absolute positions of ring slots.
+            total = cache_len + S
+            wrap = (k_slot - (total % slots)) % slots
+            k_pos = total - slots + wrap
+        else:
+            k_pos = k_slot
+        out = _dense_attn(
+            qh, kc, vc, scale=scale, causal=causal, window=window,
+            softcap=cfg.attn_softcap, q_pos=positions,
+            k_pos=k_pos, kv_len=cache_len + S,
+        )
+    else:
+        if impl is None:
+            import os
+            if os.environ.get("REPRO_BASELINE"):
+                impl = "dense" if S <= 4096 else "blockwise"
+            elif window is not None and window < S:
+                # Local layer: touch only the in-window KV band (banded
+                # flash — beyond-paper opt, EXPERIMENTS.md §Perf).
+                impl = "banded"
+            else:
+                impl = "dense" if S <= 2048 else "blockwise"
+        if impl == "banded":
+            g_rep = cfg.num_heads // cfg.num_kv_heads
+            kr = shard(jnp.repeat(kh, g_rep, axis=1).swapaxes(1, 2),
+                       "batch", "seq", "heads", None).swapaxes(1, 2)
+            vr = shard(jnp.repeat(vh, g_rep, axis=1).swapaxes(1, 2),
+                       "batch", "seq", "heads", None).swapaxes(1, 2)
+            out = banded_ref(
+                qh, kr, vr, scale=scale, window=window,
+                softcap=cfg.attn_softcap, block_q=min(512, S),
+                block_k=min(512, S), unroll=unroll,
+            )
+        elif impl == "dense":
+            out = _dense_attn(
+                qh, kh, vh, scale=scale, causal=causal, window=window,
+                softcap=cfg.attn_softcap, q_pos=positions,
+                k_pos=positions, kv_len=positions[-1] + 1,
+            )
+        elif impl == "blockwise":
+            H, Hkv = cfg.num_heads, cfg.num_kv_heads
+            out = blockwise_ref(
+                qh.reshape(B * H, S, cfg.head_dim),
+                kh.reshape(B * Hkv, S, cfg.head_dim),
+                vh.reshape(B * Hkv, S, cfg.head_dim),
+                group=H // Hkv, scale=scale, causal=causal, window=window,
+                softcap=cfg.attn_softcap, block_k=1024, unroll=unroll,
+            ).reshape(B, H, S, cfg.head_dim)
+        elif impl == "flash":
+            out = flash_attention(
+                qh, kh, vh, scale=scale, causal=causal, window=window,
+                softcap=cfg.attn_softcap,
+            )
+        else:
+            raise ValueError(f"unknown attention impl {impl!r}")
+
+    out = out.swapaxes(1, 2).reshape(B, S, cfg.num_heads * cfg.head_dim)
+    y = jnp.einsum("bsm,md->bsd", out, params["wo"])
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+# --- cross attention (seamless decoder) -----------------------------------
+
+
+def init_cross_attention(key, cfg: ModelConfig):
+    return init_attention(key, cfg)
+
+
+def apply_cross_attention(params, x, memory, cfg: ModelConfig):
+    """x (B,S,D) attends into encoder memory (B,Sm,D); not causal, no rope."""
+    B, S, _ = x.shape
+    Sm = memory.shape[1]
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dm->bsm", x, params["wq"]).reshape(B, S, h, hd)
+    k = jnp.einsum("bsd,dm->bsm", memory, params["wk"]).reshape(B, Sm, hk, hd)
+    v = jnp.einsum("bsd,dm->bsm", memory, params["wv"]).reshape(B, Sm, hk, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(params["q_norm"], q, cfg.norm_eps)
+        k = rms_norm_headwise(params["k_norm"], k, cfg.norm_eps)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    out = _dense_attn(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        scale=scale, causal=False, window=None, softcap=cfg.attn_softcap,
+        q_pos=jnp.arange(S), k_pos=jnp.arange(Sm), kv_len=Sm,
+    )
+    out = out.swapaxes(1, 2).reshape(B, S, h * hd)
+    y = jnp.einsum("bsm,md->bsd", out, params["wo"])
+    return shard(y, "batch", "seq", "embed")

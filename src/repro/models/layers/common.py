@@ -1,0 +1,37 @@
+"""Shared helpers for functional layers: init, dtypes, activations."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, fan_in=None, dtype=jnp.bfloat16):
+    """Truncated-normal with 1/sqrt(fan_in) scaling (lecun-ish)."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,43 @@
+"""Token embedding and LM head (optionally tied)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import shard
+from repro.models.config import ModelConfig
+from repro.models.layers.common import compute_dtype, embed_init
+
+
+def init_embedding(key, cfg: ModelConfig):
+    dt = compute_dtype(cfg)
+    p = {"embed": {"table": embed_init(key, (cfg.vocab_size, cfg.d_model), dt)}}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["lm_head"] = {"w": embed_init(k2, (cfg.d_model, cfg.vocab_size), dt)}
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    """tokens (B, S) int32 -> (B, S, D). Gemma-style sqrt(d) scaling when
+    embeddings are tied (keeps tied-logit scale sane)."""
+    table = params["embed"]["table"]
+    x = jnp.take(table, tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_logits(params, h, cfg: ModelConfig):
+    """(B, S, D) -> (B, S, V) float32 logits (+ gemma2 final softcap)."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(jnp.float32)  # (V, D)
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), w)
+    else:
+        w = params["lm_head"]["w"].astype(jnp.float32)  # (D, V)
+        logits = jnp.einsum("bsd,dv->bsv", h.astype(jnp.float32), w)
+    if cfg.final_softcap is not None:
+        c = cfg.final_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(logits, "batch", "seq", "vocab")

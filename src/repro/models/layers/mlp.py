@@ -1,0 +1,34 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) or plain two-layer."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import shard
+from repro.models.config import ModelConfig
+from repro.models.layers.common import activation, compute_dtype, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: "int | None" = None):
+    dt = compute_dtype(cfg)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[1], (d, f), d, dt),
+         "w_down": dense_init(ks[2], (f, d), f, dt)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[0], (d, f), d, dt)
+    return p
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    act = activation(cfg.act)
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = shard(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    return shard(out, "batch", "seq", "embed")

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with prefix-sum (scan-offset) dispatch.
+
+This is the paper's §1 database use case embedded in an LM: partitioning
+tokens by expert is a radix-partitioning step whose write offsets come from
+an exclusive prefix sum over the expert histogram
+(`repro.core.scan.dispatch_offsets`):
+
+    counts[e]  = histogram of routed tokens            (paper: histogram)
+    offsets[e] = exclusive_scan(counts)                (paper: prefix sum)
+    rank[t]    = running per-expert count before t     (segmented scan)
+    dest[t]    = offsets[expert[t]] + rank[t]          (paper: new index)
+
+Tokens are scattered into per-expert capacity buffers at ``dest``, the
+expert FFNs run as a batched einsum sharded over the 'experts' (model) mesh
+axis, and results scatter back weighted by router probabilities. Tokens
+whose rank exceeds capacity are dropped (standard capacity-factor routing);
+their residual path passes through unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan as scanlib
+from repro.dist import shard
+from repro.dist.sharding import current_mesh
+from repro.models.config import ModelConfig
+from repro.models.layers.common import activation, compute_dtype, dense_init
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    dropped_fraction: jax.Array
+
+
+def init_moe(key, cfg: ModelConfig):
+    dt = compute_dtype(cfg)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), d, jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), d, dt),
+        "w_up": dense_init(ks[2], (e, d, f), d, dt),
+        "w_down": dense_init(ks[3], (e, f, d), f, dt),
+    }
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for tiling
+
+
+def _data_shards() -> int:
+    """Data-parallel shard count under the installed mesh (1 otherwise).
+
+    REPRO_BASELINE=1 forces the paper-faithful global dispatch (the
+    pre-optimization baseline measured in EXPERIMENTS.md §Perf).
+    """
+    import os
+    if os.environ.get("REPRO_BASELINE"):
+        return 1
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    n = 1
+    for ax in ("pod", "data"):
+        n *= mesh.shape.get(ax, 1)
+    return n
+
+
+def apply_moe(params, x, cfg: ModelConfig):
+    """x (B, S, D) -> (y, MoEAux). Routing in float32.
+
+    SHARDED DISPATCH (beyond-paper optimization, EXPERIMENTS.md §Perf):
+    the naive formulation scatters all T tokens into ONE global
+    (E·C, D) buffer — under pjit that scatter's operands get all-gathered
+    across the data axis (measured: 34 GB/layer for granite train_4k).
+    Instead tokens are dispatched WITHIN each data shard: reshape the
+    token axis to (shards, T/shards), run routing/offsets/scatter
+    batched over the (data-sharded) shard dim — every step is local —
+    and give each shard its own capacity C/shards (GShard-style
+    per-shard capacity; same aggregate slots, drops decided per shard).
+    The expert einsum then carries both parallel axes:
+    (shards@data, E@model, C_loc, D).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    G = _data_shards()
+    if B % G:
+        G = 1                       # fallback: undivisible batch
+    TL = T // G                     # tokens per data shard
+    xt = x.reshape(G, TL, D)
+    xt = shard(xt, "batch", None, "embed")
+
+    # --- routing (per shard; all ops batched over the shard dim) ---
+    logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), params["router"]
+    )  # (G, TL, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (G, TL, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # --- prefix-sum partitioning per shard (paper's offsets use case) ---
+    flat_ids = expert_ids.reshape(G, TL * K)
+    plan = jax.vmap(lambda ids: scanlib.dispatch_offsets(ids, E))(flat_ids)
+    C = _capacity(TL, cfg)
+    keep = plan.ranks < C                       # (G, TL*K)
+    slot = jnp.where(keep, flat_ids * C + plan.ranks, E * C)
+
+    # --- scatter tokens into PER-SHARD expert buffers (local) ---
+    x_rep = jnp.repeat(xt, K, axis=1)           # (G, TL*K, D)
+    buf = jnp.zeros((G, E * C + 1, D), xt.dtype)
+    buf = jax.vmap(lambda b, s_, v: b.at[s_].set(v))(buf, slot, x_rep)
+    buf = buf[:, : E * C].reshape(G, E, C, D)
+    buf = shard(buf, "batch", "experts", "capacity", "embed")
+
+    # --- expert FFNs (parallel over data shards AND experts) ---
+    act = activation(cfg.act)
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+        h = act(g) * up
+    else:
+        h = act(up)
+    h = shard(h, "batch", "experts", "capacity", "mlp")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+
+    # --- gather back + combine with router weights (local) ---
+    flat_out = out_buf.reshape(G, E * C, D)
+    flat_out = jnp.concatenate(
+        [flat_out, jnp.zeros((G, 1, D), flat_out.dtype)], axis=1
+    )
+    y_rep = jax.vmap(lambda f, s_: f[s_])(flat_out, slot)  # (G, TL*K, D)
+    w = (gate_vals.reshape(G, TL * K) * keep.astype(jnp.float32))
+    y = jnp.sum(
+        (y_rep.astype(jnp.float32) * w[..., None]).reshape(G, TL, K, D),
+        axis=2)
+    y = y.astype(x.dtype).reshape(B, S, D)
+    y = shard(y, "batch", "seq", "embed")
+
+    # --- aux losses (Switch-style load balance + router z-loss) ---
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=(0, 1, 2)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    lb = E * jnp.sum(frac_tokens * frac_probs)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, MoEAux(lb, z, dropped)

@@ -1,0 +1,40 @@
+"""Normalization layers (params and compute kept in float32)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def init_norm(cfg: ModelConfig, dim: "int | None" = None):
+    d = dim or cfg.d_model
+    p = {"w": jnp.zeros(d, jnp.float32) if cfg.norm == "gemma_rmsnorm"
+         else jnp.ones(d, jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros(d, jnp.float32)
+    return p
+
+
+def apply_norm(params, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) / jnp.sqrt(var + cfg.norm_eps)
+        out = out * params["w"] + params["b"]
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        out = xf / jnp.sqrt(ms + cfg.norm_eps)
+        if cfg.norm == "gemma_rmsnorm":
+            out = out * (1.0 + params["w"])  # gemma's (1+w) convention
+        else:
+            out = out * params["w"]
+    return out.astype(x.dtype)
+
+
+def rms_norm_headwise(w, x, eps=1e-6):
+    """Per-head RMS norm for qk-norm (qwen3 / gemma3); w: (head_dim,)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return ((xf / jnp.sqrt(ms + eps)) * w).astype(x.dtype)

@@ -1,0 +1,253 @@
+"""Mamba2 (SSD) layer — the paper's blocked scan generalized to matrix state.
+
+The chunked SSD algorithm *is* the paper's §2.2 cache-friendly partitioned
+scan, instantiated twice:
+
+  1. WITHIN a chunk: ``cumsum(log decay)`` — a plain prefix sum
+     (``repro.core.scan``), used to build the intra-chunk decay kernel.
+  2. ACROSS chunks: the matrix-valued state ``S_c`` carries through the
+     affine monoid ``h_c = a_c · h_{c-1} + S_c`` — an exclusive scan with
+     the MATRIX_AFFINE monoid. This is the two-pass structure of Fig. 1:
+     pass 1 reduces each chunk to a total (``S_c``), the carry exchange is
+     the scan over chunk totals, pass 2 combines the exclusive prefix back
+     into each chunk's outputs.
+
+The inter-chunk scan runs through ``repro.core.scan`` (autodiff-able) by
+default; ``impl="kernel"`` routes the diagonal-decay carry through the
+Pallas ``ssm_scan`` kernel (inference path).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan as scanlib
+from repro.dist import shard
+from repro.models.config import ModelConfig
+from repro.models.layers.common import compute_dtype, dense_init
+
+
+def _dims(cfg: ModelConfig):
+    inner = cfg.ssm_heads * cfg.ssm_head_dim
+    conv_dim = inner + 2 * cfg.ssm_state
+    return inner, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig):
+    """Mamba2 parameters. in_proj emits [z | x | B | C | dt]."""
+    dt = compute_dtype(cfg)
+    d = cfg.d_model
+    inner, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * inner + 2 * cfg.ssm_state + cfg.ssm_heads
+    # dt bias initialized so softplus(dt_bias) spans ~[1e-3, 1e-1].
+    u = jax.random.uniform(ks[2], (cfg.ssm_heads,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inv_softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), d, dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim),
+                             cfg.conv_kernel, dt),
+        "conv_b": jnp.zeros(conv_dim, jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, cfg.ssm_heads + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias,
+        "d_skip": jnp.ones(cfg.ssm_heads, jnp.float32),
+        "norm_w": jnp.ones(inner, jnp.float32),
+        "out_proj": dense_init(ks[3], (inner, d), inner, dt),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    """Decode-time cache: depthwise-conv tail + SSM state (f32)."""
+    dtc = compute_dtype(cfg)
+    inner, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtc),
+        "h": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    inner, _ = _dims(cfg)
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :inner]
+    xBC = zxbcdt[..., inner: 2 * inner + 2 * N]
+    dt_raw = zxbcdt[..., 2 * inner + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC, params, cfg: ModelConfig, tail: Optional[jax.Array]):
+    """Depthwise causal conv over (B, T, conv_dim); ``tail`` is the cached
+    last (K-1) inputs for decode continuity. Returns (y, new_tail)."""
+    K = cfg.conv_kernel
+    w = params["conv_w"].astype(jnp.float32)  # (K, C)
+    if tail is None:
+        tail = jnp.zeros(
+            (xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype
+        )
+    xfull = jnp.concatenate([tail, xBC], axis=1)  # (B, K-1+T, C)
+    T = xBC.shape[1]
+    y = sum(
+        xfull[:, k: k + T].astype(jnp.float32) * w[k]
+        for k in range(K)
+    )
+    y = y + params["conv_b"]
+    new_tail = xfull[:, -(K - 1):]
+    return jax.nn.silu(y).astype(xBC.dtype), new_tail
+
+
+def _gated_norm(y, z, norm_w, eps):
+    """Mamba2's RMSNorm(y * silu(z)) output gate (computed in f32)."""
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), -1, keepdims=True)
+    return (g / jnp.sqrt(ms + eps)) * norm_w
+
+
+def apply_ssm(
+    params,
+    x,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    impl: str = "chunked",
+):
+    """Mamba2 over (B, T, D) -> (y, new_cache).
+
+    Training / prefill: ``cache=None`` (or a prior state to continue from),
+    chunked SSD path. Decode: ``T == 1`` recurrent update.
+    """
+    B, T, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner, _ = _dims(cfg)
+
+    zxbcdt = jnp.einsum("btd,dm->btm", x, params["in_proj"])
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC, new_tail = _causal_conv(
+        xBC, params, cfg, None if cache is None else cache["conv"]
+    )
+    xs = xBC[..., :inner].reshape(B, T, H, P)
+    Bm = xBC[..., inner: inner + N]          # (B, T, N) one state group
+    Cm = xBC[..., inner + N:]                # (B, T, N)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"]
+    )                                         # (B, T, H)
+    a = -jnp.exp(params["a_log"])             # (H,) negative decay rates
+    da = dt * a                               # (B, T, H) log decay ≤ 0
+
+    h_prev = None if cache is None else cache["h"]
+    if T == 1 and cache is not None:
+        y, h_new = _ssm_step(xs, Bm, Cm, dt, da, h_prev)
+    else:
+        y, h_new = _ssd_chunked(
+            xs, Bm, Cm, dt, da, cfg.ssm_chunk, h_prev, impl
+        )
+
+    y = y + (
+        params["d_skip"][:, None] * xs.astype(jnp.float32)
+    )                                         # (B, T, H, P) skip connection
+    y = y.reshape(B, T, inner)
+    y = _gated_norm(y, z, params["norm_w"], cfg.norm_eps)
+    y = shard(y.astype(x.dtype), "batch", "seq", "ssm_inner")
+    out = jnp.einsum("btm,md->btd", y, params["out_proj"])
+    out = shard(out, "batch", "seq", "embed")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail, "h": h_new}
+    return out, new_cache
+
+
+def _ssm_step(xs, Bm, Cm, dt, da, h_prev):
+    """One-token recurrent update. h: (B, H, P, N)."""
+    B, _, H, P = xs.shape
+    N = Bm.shape[-1]
+    if h_prev is None:
+        h_prev = jnp.zeros((B, H, P, N), jnp.float32)
+    decay = jnp.exp(da[:, 0])[:, :, None, None]             # (B,H,1,1)
+    dBx = jnp.einsum(
+        "bh,bn,bhp->bhpn", dt[:, 0], Bm[:, 0].astype(jnp.float32),
+        xs[:, 0].astype(jnp.float32),
+    )
+    h = decay * h_prev + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    return y[:, None], h                                     # (B,1,H,P)
+
+
+def _ssd_chunked(xs, Bm, Cm, dt, da, chunk, h_prev, impl):
+    """Chunked SSD: intra-chunk quadratic + inter-chunk affine scan."""
+    B, T, H, P = xs.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+
+    xs = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    dac = da.reshape(B, nc, Q, H)
+
+    # (1) WITHIN-chunk prefix sum of log-decays — the paper's primitive.
+    A = scanlib.cumsum(dac, axis=2, algorithm="ref")  # (B,nc,Q,H) inclusive
+    A_tot = A[:, :, -1]                               # (B,nc,H)
+
+    # Intra-chunk (causal masked) contribution.
+    # L[i,j] = exp(A_i - A_j) for j <= i.
+    rel = A[:, :, :, None, :] - A[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)        # (B,nc,Q,Q)
+    W = CB[..., None] * L * dtc[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xs)
+
+    # (2) ACROSS-chunk carry — chunk totals + affine scan (paper Fig. 1b:
+    # accumulate-first). S_c = Σ_j exp(A_tot - A_j) dt_j B_j ⊗ x_j.
+    decay_out = jnp.exp(A_tot[:, :, None] - A)        # (B,nc,Q,H)
+    S = jnp.einsum(
+        "bcjh,bcjn,bcjhp->bchpn", decay_out * dtc, Bc, xs
+    )                                                 # (B,nc,H,P,N)
+    a_chunk = jnp.exp(A_tot)                          # (B,nc,H)
+    if impl == "kernel":
+        from repro.kernels.ssm_scan import ops as kops
+        flatS = S.reshape(B, nc, H * P * N)
+        flata = jnp.broadcast_to(
+            a_chunk[..., None, None], S.shape
+        ).reshape(B, nc, H * P * N)
+        states = kops.ssm_scan(flata, flatS).reshape(S.shape)
+    else:
+        ab = jnp.broadcast_to(a_chunk[..., None, None], S.shape)
+        _, states = scanlib.scan(
+            (ab, S), op="affine", axis=1, algorithm="ref"
+        )                                             # inclusive over chunks
+    # Fold a non-zero entering state through every chunk's inclusive state
+    # (affine identity: states_c += (Π_{c'<=c} a_c') · h_prev).
+    if h_prev is None:
+        h_prev = jnp.zeros((B, H, P, N), jnp.float32)
+    cumdecay = jnp.cumprod(a_chunk, axis=1)           # (B,nc,H)
+    states = states + cumdecay[..., None, None] * h_prev[:, None]
+    # Exclusive prefix: the state ENTERING each chunk.
+    h_in = jnp.concatenate(
+        [h_prev[:, None], states[:, :-1]], axis=1
+    )                                                 # (B,nc,H,P,N)
+
+    # (3) Pass 2: combine exclusive carry into chunk outputs.
+    decay_in = jnp.exp(A)                             # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcin,bcihpn->bcihp",
+        Cc, decay_in[..., None, None] * h_in[:, :, None],
+    )
+    y = (y_intra + y_inter).reshape(B, Tp, H, P)[:, :T]
+    h_last = states[:, -1]
+    return y, h_last

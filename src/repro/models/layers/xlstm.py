@@ -1,0 +1,327 @@
+"""xLSTM layers: mLSTM (chunkwise-parallel) and sLSTM (sequential).
+
+mLSTM is a matrix-memory linear recurrence — the same blocked-scan shape as
+Mamba2's SSD: within-chunk ``cumsum(log f)`` (prefix sum), across-chunk
+affine carry of the matrix state ``S`` and normalizer ``n``. sLSTM has a
+true hidden-to-gate recurrence (nonlinear), so it cannot be scanned in
+parallel — it runs as a ``lax.scan`` over time, with the exp-gate max
+stabilizer carried exactly as in the xLSTM paper.
+
+Numerics note (recorded in DESIGN.md): the chunked mLSTM path runs the gate
+algebra in float32 *without* the max stabilizer. With ``logsigmoid`` forget
+gates (decays ≤ 1) and input gates bounded near init, every exponent is
+≤ i_max ≈ O(10), which is safe in f32; the sequential sLSTM keeps the
+stabilizer because its exponents accumulate.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan as scanlib
+from repro.dist import shard
+from repro.models.config import ModelConfig
+from repro.models.layers.common import compute_dtype, dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _m_dims(cfg: ModelConfig):
+    inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or cfg.num_heads
+    return inner, heads, inner // heads
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    dt = compute_dtype(cfg)
+    d = cfg.d_model
+    inner, H, _ = _m_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * inner), d, dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, inner),
+                             cfg.conv_kernel, dt),
+        "conv_b": jnp.zeros(inner, jnp.float32),
+        "w_q": dense_init(ks[2], (inner, inner), inner, dt),
+        "w_k": dense_init(ks[3], (inner, inner), inner, dt),
+        "w_v": dense_init(ks[4], (inner, inner), inner, dt),
+        "w_i": dense_init(ks[5], (inner, H), inner, jnp.float32),
+        "w_f": dense_init(ks[6], (inner, H), inner, jnp.float32),
+        "b_i": jnp.zeros(H, jnp.float32),
+        # positive forget bias ⇒ sigmoid(f) ≈ 1 at init (long memory).
+        "b_f": 3.0 * jnp.ones(H, jnp.float32),
+        "norm_w": jnp.ones(inner, jnp.float32),
+        "w_out": dense_init(ks[7], (inner, d), inner, dt),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    inner, H, dh = _m_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, inner),
+                          compute_dtype(cfg)),
+        "S": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+    }
+
+
+def _conv_silu(xm, w, b, tail):
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xm.shape[0], K - 1, xm.shape[-1]), xm.dtype)
+    xfull = jnp.concatenate([tail, xm], axis=1)
+    T = xm.shape[1]
+    y = sum(xfull[:, k: k + T].astype(jnp.float32) *
+            w[k].astype(jnp.float32) for k in range(K))
+    return jax.nn.silu(y + b).astype(xm.dtype), xfull[:, -(K - 1):]
+
+
+def _headwise_norm(h, w, H, eps):
+    """GroupNorm over each head's channels (f32)."""
+    B, T, inner = h.shape
+    hh = h.reshape(B, T, H, inner // H)
+    mu = jnp.mean(hh, -1, keepdims=True)
+    var = jnp.var(hh, -1, keepdims=True)
+    out = ((hh - mu) / jnp.sqrt(var + eps)).reshape(B, T, inner)
+    return out * w
+
+
+def apply_mlstm(
+    params, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
+):
+    """mLSTM block over (B, T, D) -> (y, new_cache). Includes the block's
+    own up/down projection (pf=2) and output skip gate (xLSTM wiring)."""
+    B, T, D = x.shape
+    inner, H, dh = _m_dims(cfg)
+    up = jnp.einsum("btd,dm->btm", x, params["w_up"])
+    xm, zg = up[..., :inner], up[..., inner:]
+    xm = shard(xm, "batch", "seq", "ssm_inner")
+    xc, new_tail = _conv_silu(
+        xm, params["conv_w"], params["conv_b"],
+        None if cache is None else cache["conv"],
+    )
+    q = jnp.einsum("btm,mn->btn", xc, params["w_q"]).reshape(B, T, H, dh)
+    k = jnp.einsum("btm,mn->btn", xc, params["w_k"]).reshape(B, T, H, dh)
+    v = jnp.einsum("btm,mn->btn", xm, params["w_v"]).reshape(B, T, H, dh)
+    i_raw = jnp.einsum(
+        "btm,mh->bth", xc.astype(jnp.float32), params["w_i"]
+    ) + params["b_i"]
+    f_raw = jnp.einsum(
+        "btm,mh->bth", xc.astype(jnp.float32), params["w_f"]
+    ) + params["b_f"]
+    log_f = jax.nn.log_sigmoid(f_raw)                  # (B,T,H) ≤ 0
+    log_i = -jax.nn.softplus(-i_raw) - 3.0             # bounded input gate
+
+    S_prev = n_prev = None
+    if cache is not None:
+        S_prev, n_prev = cache["S"], cache["n"]
+    if T == 1 and cache is not None:
+        h, S_new, n_new = _mlstm_step(q, k, v, log_i, log_f, S_prev, n_prev)
+    else:
+        h, S_new, n_new = _mlstm_chunked(
+            q, k, v, log_i, log_f, cfg.ssm_chunk, S_prev, n_prev
+        )
+    h = h.reshape(B, T, inner)
+    h = _headwise_norm(h, params["norm_w"], H, cfg.norm_eps)
+    h = h * jax.nn.silu(zg.astype(jnp.float32))
+    h = shard(h.astype(x.dtype), "batch", "seq", "ssm_inner")
+    y = jnp.einsum("btm,md->btd", h, params["w_out"])
+    y = shard(y, "batch", "seq", "embed")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_tail, "S": S_new, "n": n_new}
+    return y, new_cache
+
+
+def _mlstm_step(q, k, v, log_i, log_f, S_prev, n_prev):
+    B, _, H, dh = q.shape
+    if S_prev is None:
+        S_prev = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n_prev = jnp.zeros((B, H, dh), jnp.float32)
+    scale = dh ** -0.5
+    f = jnp.exp(log_f[:, 0])[:, :, None, None]
+    i = jnp.exp(log_i[:, 0])[:, :, None, None]
+    kv = jnp.einsum("bhk,bhv->bhkv", k[:, 0].astype(jnp.float32),
+                    v[:, 0].astype(jnp.float32))
+    S = f * S_prev + i * kv
+    n = f[..., 0] * n_prev + i[..., 0] * k[:, 0].astype(jnp.float32)
+    qf = q[:, 0].astype(jnp.float32) * scale
+    num = jnp.einsum("bhk,bhkv->bhv", qf, S)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return h[:, None], S, n
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk, S_prev, n_prev):
+    """Chunkwise-parallel mLSTM: the paper's partitioned two-pass scan with
+    the (decay, [S;n]) affine monoid across chunks."""
+    B, T, H, dh = q.shape
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        zf = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(u, zf) for u in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)  # exp → 0 contribution
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+    scale = dh ** -0.5
+
+    qc = (q.reshape(B, nc, Q, H, dh) * scale).astype(jnp.float32)
+    kc = k.reshape(B, nc, Q, H, dh).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, dh).astype(jnp.float32)
+    ic = log_i.reshape(B, nc, Q, H)
+    fc = log_f.reshape(B, nc, Q, H)
+
+    # (1) prefix sum of log-forget within each chunk.
+    F = scanlib.cumsum(fc, axis=2, algorithm="ref")    # (B,nc,Q,H)
+    F_tot = F[:, :, -1]
+
+    # Intra-chunk: W[i,j] = exp(F_i - F_j + i_j) (q_i·k_j), j ≤ i.
+    rel = F[:, :, :, None, :] - F[:, :, None, :, :] + ic[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    G = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    qk = jnp.einsum("bcihd,bcjhd->bcijh", qc, kc)
+    W = qk * G                                         # (B,nc,Q,Q,H)
+    num_intra = jnp.einsum("bcijh,bcjhd->bcihd", W, vc)
+    den_intra = jnp.sum(W, axis=3)                     # (B,nc,Q,H)
+
+    # (2) chunk totals (accumulate-first, Fig 1b) + affine scan across
+    # chunks for matrix state S and normalizer n.
+    w_out = jnp.exp(F_tot[:, :, None] - F + ic)        # (B,nc,Q,H)
+    S_tot = jnp.einsum("bcjh,bcjhk,bcjhv->bchkv", w_out, kc, vc)
+    n_tot = jnp.einsum("bcjh,bcjhk->bchk", w_out, kc)
+    a_chunk = jnp.exp(F_tot)                           # (B,nc,H)
+    aS = jnp.broadcast_to(a_chunk[..., None, None], S_tot.shape)
+    an = jnp.broadcast_to(a_chunk[..., None], n_tot.shape)
+    _, S_inc = scanlib.scan((aS, S_tot), op="affine", axis=1,
+                            algorithm="ref")
+    _, n_inc = scanlib.scan((an, n_tot), op="affine", axis=1,
+                            algorithm="ref")
+    if S_prev is None:
+        S_prev = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n_prev = jnp.zeros((B, H, dh), jnp.float32)
+    cum = jnp.cumprod(a_chunk, axis=1)
+    S_inc = S_inc + cum[..., None, None] * S_prev[:, None]
+    n_inc = n_inc + cum[..., None] * n_prev[:, None]
+    S_in = jnp.concatenate([S_prev[:, None], S_inc[:, :-1]], axis=1)
+    n_in = jnp.concatenate([n_prev[:, None], n_inc[:, :-1]], axis=1)
+
+    # (3) pass 2: fold the exclusive carry into per-position outputs.
+    decay_in = jnp.exp(F)                              # (B,nc,Q,H)
+    num_inter = jnp.einsum(
+        "bcihk,bchkv->bcihv", qc * decay_in[..., None], S_in
+    )
+    den_inter = jnp.einsum(
+        "bcihk,bchk->bcih", qc * decay_in[..., None], n_in
+    )
+    num = num_intra + num_inter
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+    h = (num / den[..., None]).reshape(B, Tp, H, dh)[:, :T]
+    return h, S_inc[:, -1], n_inc[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig):
+    """sLSTM at model width with block-diagonal recurrence over heads."""
+    d = cfg.d_model
+    H = cfg.ssm_heads or cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 9)
+    p = {}
+    for idx, g in enumerate("ifoz"):
+        p[f"w_{g}"] = dense_init(ks[idx], (d, d), d, jnp.float32)
+        p[f"r_{g}"] = dense_init(ks[4 + idx], (H, dh, dh), dh, jnp.float32)
+        p[f"b_{g}"] = (3.0 * jnp.ones(d // H * H, jnp.float32)
+                       .reshape(H, dh) if g == "f"
+                       else jnp.zeros((H, dh), jnp.float32))
+    p["norm_w"] = jnp.ones(d, jnp.float32)
+    p["w_out"] = dense_init(ks[8], (d, d), d, compute_dtype(cfg))
+    return p
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    H = cfg.ssm_heads or cfg.num_heads
+    dh = d // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1.0, "m": z}
+
+
+def apply_slstm(
+    params, x, cfg: ModelConfig, *, cache: Optional[dict] = None,
+):
+    """Sequential sLSTM over (B, T, D) via lax.scan (stabilized exp gates)."""
+    B, T, D = x.shape
+    H = cfg.ssm_heads or cfg.num_heads
+    dh = D // H
+    xf = x.astype(jnp.float32)
+    # Precompute input contributions for all gates: (B,T,H,dh) each.
+    pre = {
+        g: jnp.einsum("btd,de->bte", xf, params[f"w_{g}"])
+        .reshape(B, T, H, dh) + params[f"b_{g}"]
+        for g in "ifoz"
+    }
+    if cache is None:
+        state0 = init_slstm_cache(cfg, B)
+    else:
+        state0 = cache
+
+    r = {g: params[f"r_{g}"] for g in "ifoz"}
+
+    def step(s, t_in):
+        pi, pf, po, pz = t_in
+        rec = {
+            g: jnp.einsum("bhe,hde->bhd", s["h"], r[g]) for g in "ifoz"
+        }
+        i_t = pi + rec["i"]
+        f_t = pf + rec["f"]
+        o_t = jax.nn.sigmoid(po + rec["o"])
+        z_t = jnp.tanh(pz + rec["z"])
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + s["m"], i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(log_f + s["m"] - m_new)
+        c = f_p * s["c"] + i_p * z_t
+        n = jnp.maximum(f_p * s["n"] + i_p, 1e-6)
+        h = o_t * c / n
+        return {"h": h, "c": c, "n": n, "m": m_new}, h
+
+    seq = tuple(jnp.moveaxis(pre[g], 1, 0) for g in "ifoz")
+    import os
+    chunk = cfg.ssm_chunk or 128
+    if (T > 4 * chunk and T % chunk == 0
+            and not os.environ.get("REPRO_BASELINE")):
+        # Cache-sized partitioning applied to BACKWARD memory (paper §2.2
+        # generalized): an outer scan over T/chunk chunks whose body is
+        # rematerialized — the VJP saves only chunk-boundary states and
+        # recomputes the T-step residuals one chunk at a time, cutting
+        # the saved-residual footprint by T/chunk.
+        seq_c = tuple(
+            x.reshape(T // chunk, chunk, *x.shape[1:]) for x in seq)
+
+        @jax.checkpoint
+        def chunk_body(state, chunk_in):
+            return jax.lax.scan(step, state, chunk_in)
+
+        state, hs = jax.lax.scan(chunk_body, state0, seq_c)
+        hs = hs.reshape(T, *hs.shape[2:])
+    else:
+        state, hs = jax.lax.scan(step, state0, seq)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, D)
+    # Headwise group norm + projection.
+    h = _headwise_norm(h, params["norm_w"], H, cfg.norm_eps)
+    y = jnp.einsum("btd,de->bte", h.astype(x.dtype), params["w_out"])
+    y = shard(y, "batch", "seq", "embed")
+    return y, (state if cache is not None else None)

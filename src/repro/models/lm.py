@@ -1,0 +1,244 @@
+"""Causal LM: init / forward / loss / decode for every decoder-only arch.
+
+Layer stacking: ``cfg.layer_pattern`` must tile ``num_layers`` exactly
+(``periods = num_layers / len(pattern)``). Parameters for pattern position
+``k`` are stacked across periods into leaves with leading dim ``periods``
+and the forward pass is a single ``lax.scan`` over periods whose body runs
+one period (len(pattern) blocks). This keeps the HLO size O(pattern) rather
+than O(layers) — essential for 94-layer dry-run compiles — and is the
+idiomatic pjit pattern (params sharded per PARAM_RULES with a leading
+unsharded 'layers' axis).
+
+The cross-entropy loss is computed in SEQUENCE CHUNKS so the (B, S, V)
+logits tensor is never materialized (V up to 262k): an online logsumexp —
+i.e. one more scan with the paper's blocked structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import shard
+from repro.models import blocks as blk
+from repro.models.config import ModelConfig
+from repro.models.layers.common import split_keys
+from repro.models.layers.embedding import (embed_tokens, init_embedding,
+                                           lm_logits)
+from repro.models.layers.frontend import apply_frontend, init_frontend
+from repro.models.layers.norms import apply_norm, init_norm
+
+Pytree = Any
+
+
+def _periods(cfg: ModelConfig) -> int:
+    periods, rem = cfg.pattern_periods
+    if rem:
+        raise ValueError(
+            f"layer_pattern {cfg.layer_pattern} must tile num_layers="
+            f"{cfg.num_layers} exactly")
+    return periods
+
+
+def init_lm(key, cfg: ModelConfig) -> Pytree:
+    periods = _periods(cfg)
+    ks = split_keys(key, 4 + len(cfg.layer_pattern))
+    params: dict = init_embedding(ks[0], cfg)
+    params["final_norm"] = init_norm(cfg)
+    if "shared_attn" in cfg.layer_pattern:
+        params["shared"] = blk.init_shared_block(ks[1], cfg)
+    if cfg.frontend_tokens:
+        params["frontend"] = init_frontend(ks[2], cfg)
+    stacked = {}
+    for pos, kind in enumerate(cfg.layer_pattern):
+        keys = jnp.stack(split_keys(ks[4 + pos], periods))
+        stacked[f"p{pos}_{kind}"] = jax.vmap(
+            lambda k: blk.init_block(k, cfg, kind)
+        )(keys)
+    params["blocks"] = stacked
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    """Stacked (periods-leading) decode caches mirroring params['blocks']."""
+    periods = _periods(cfg)
+
+    def stack(kind):
+        one = blk.init_block_cache(cfg, kind, batch, max_len)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (periods,) + x.shape), one)
+
+    return {f"p{pos}_{kind}": stack(kind)
+            for pos, kind in enumerate(cfg.layer_pattern)}
+
+
+def _body_fn(cfg: ModelConfig, x0, positions, cache_len, attn_impl, decode,
+             shared, unroll=False):
+    """Returns the lax.scan body over periods."""
+
+    def body(carry, per_layer):
+        x, aux = carry
+        params_sl = per_layer[0] if decode else per_layer
+        cache_sl = per_layer[1] if decode else None
+        new_cache_sl = {}
+        for pos, kind in enumerate(cfg.layer_pattern):
+            name = f"p{pos}_{kind}"
+            cache = cache_sl[name] if decode else None
+            x, a, new_c = blk.apply_block(
+                params_sl[name], x, cfg, kind, shared=shared, x0=x0,
+                positions=positions, cache=cache, cache_len=cache_len,
+                attn_impl=attn_impl, unroll=unroll)
+            aux = jax.tree.map(jnp.add, aux, a)
+            if decode:
+                new_cache_sl[name] = new_c
+        return (x, aux), (new_cache_sl if decode else None)
+
+    return body
+
+
+def forward(
+    params: Pytree,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    embeds: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[Pytree] = None,
+    cache_len: Optional[jax.Array] = None,
+    attn_impl: Optional[str] = None,
+    remat: bool = False,
+    unroll: bool = False,
+):
+    """tokens (B, S) [+ frontend embeds (B, F, E)] -> (hidden, aux, cache).
+
+    ``unroll=True`` fully unrolls the layer scan — used by the dry-run so
+    ``cost_analysis`` sees every layer's flops/bytes/collectives (XLA
+    counts a while-loop body ONCE, not x trip count).
+
+    Returns final-norm hidden states — callers pick ``lm_logits`` (full) or
+    the chunked loss below. With ``cache`` (decode), S is the new-token
+    count and ``cache_len`` the count of valid cache entries.
+    """
+    x = embed_tokens(params, tokens, cfg)
+    if embeds is not None:
+        fe = apply_frontend(params["frontend"], embeds, cfg)
+        x = jnp.concatenate([fe, x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        start = 0 if cache_len is None else cache_len
+        positions = start + jnp.arange(S)
+    x = shard(x, "batch", "seq", "embed")
+
+    decode = cache is not None
+    shared = params.get("shared")
+    body = _body_fn(cfg, x, positions, cache_len, attn_impl, decode, shared,
+                    unroll=unroll)
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    aux0 = blk.zero_aux()
+    xs = (params["blocks"], cache) if decode else params["blocks"]
+    (x, aux), new_cache = jax.lax.scan(body, (x, aux0), xs,
+                                       unroll=True if unroll else 1)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux, (new_cache if decode else None)
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked over sequence so B×S×V never materializes)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(
+    params, hidden, labels, mask, cfg: ModelConfig, chunk: int = 512,
+    unroll: bool = False,
+):
+    """Mean CE over valid tokens; logits produced chunk-by-chunk."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nch = (S + pad) // chunk
+    hs = hidden.reshape(B, nch, chunk, D).swapaxes(0, 1)
+    ls = labels.reshape(B, nch, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, nch, chunk).swapaxes(0, 1)
+
+    def step(carry, xs):
+        total, count = carry
+        h, lab, m = xs
+        logits = lm_logits(params, h, cfg)            # (B, chunk, V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lab[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * m
+        return (total + jnp.sum(ce), count + jnp.sum(m)), None
+
+    (total, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms), unroll=True if unroll else 1)
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_loss(
+    params, batch: dict, cfg: ModelConfig, *, remat: bool = False,
+    loss_chunk: int = 512, attn_impl: Optional[str] = None,
+    unroll: bool = False,
+):
+    """batch: tokens (B,S) int32, labels (B,S) int32, mask (B,S) f32,
+    optional embeds (B,F,E). Returns (loss, metrics)."""
+    hidden, aux, _ = forward(
+        params, batch["tokens"], cfg, embeds=batch.get("embeds"),
+        remat=remat, attn_impl=attn_impl, unroll=unroll)
+    embeds = batch.get("embeds")
+    F = embeds.shape[1] if embeds is not None else 0
+    hidden = hidden[:, F:]
+    ce = chunked_ce_loss(
+        params, hidden, batch["labels"], batch["mask"], cfg,
+        chunk=loss_chunk, unroll=unroll)
+    loss = (ce
+            + cfg.router_aux_coef * aux["load_balance_loss"]
+            + cfg.router_z_coef * aux["router_z_loss"])
+    metrics = {"ce": ce, "loss": loss, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params, tokens, cache, cache_len, cfg: ModelConfig, unroll: bool = False,
+):
+    """One decode step: tokens (B, 1) + cache -> (logits (B, V), cache)."""
+    hidden, _, new_cache = forward(
+        params, tokens, cfg, cache=cache, cache_len=cache_len,
+        unroll=unroll)
+    logits = lm_logits(params, hidden[:, -1:], cfg)[:, 0]
+    return logits, new_cache
+
+
+def prefill(
+    params, tokens, cfg: ModelConfig, max_len: int,
+    embeds: Optional[jax.Array] = None, attn_impl: Optional[str] = None,
+    unroll: bool = False,
+):
+    """Run the prompt through the model, returning (logits_last, cache).
+
+    The KV/state caches are filled by running forward in decode mode with
+    cache_len=0 over the whole prompt.
+    """
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    hidden, _, cache = forward(
+        params, tokens, cfg, embeds=embeds, cache=cache,
+        cache_len=jnp.zeros((), jnp.int32), attn_impl=attn_impl,
+        unroll=unroll)
+    logits = lm_logits(params, hidden[:, -1:], cfg)[:, 0]
+    return logits, cache

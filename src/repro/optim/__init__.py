@@ -1,0 +1,11 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               global_norm)
+from repro.optim.compression import (compress_grads, decompress_grads,
+                                     init_error_feedback)
+from repro.optim.schedule import cosine_schedule
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "compress_grads",
+    "cosine_schedule", "decompress_grads", "global_norm",
+    "init_error_feedback",
+]

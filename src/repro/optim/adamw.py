@@ -1,0 +1,97 @@
+"""AdamW with f32 master weights over bf16 compute params.
+
+State layout mirrors the param pytree (so ``spec_for_params`` shards the
+optimizer state identically to the parameters — ZeRO-style when
+``embed_fsdp`` maps to the data axis). ``mu``/``nu`` are f32; ``master``
+holds f32 weights when the params themselves are lower precision, else it
+is an empty sentinel and updates apply directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # () int32
+    mu: Pytree                 # f32, like params
+    nu: Pytree                 # f32, like params
+    master: Pytree             # f32 master copy (or params when already f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # decay only matrices (ndim >= 2); norms/biases are excluded, matching
+    # standard LM practice.
+    decay_min_ndim: int = 2
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    f32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+    # copy=True: an f32 param must not ALIAS its master copy, or donating
+    # params and opt_state to the same jitted step double-donates a buffer.
+    master = jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=master,
+    )
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Pytree,
+    state: AdamWState,
+    params: Pytree,
+    cfg: AdamWConfig = AdamWConfig(),
+    lr: Optional[jax.Array] = None,
+) -> tuple[Pytree, AdamWState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr_t = cfg.lr if lr is None else lr
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+
+    def upd(w, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if w.ndim >= cfg.decay_min_ndim:
+            delta = delta + cfg.weight_decay * w
+        return w - lr_t * delta
+
+    master = jax.tree.map(upd, state.master, mu, nu)
+    new_params = jax.tree.map(
+        lambda mw, p: mw.astype(p.dtype), master, params)
+    new_state = AdamWState(step=step, mu=mu, nu=nu, master=master)
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr_t, jnp.float32)}
+    return new_params, new_state, metrics

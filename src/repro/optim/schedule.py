@@ -1,0 +1,22 @@
+"""Learning-rate schedules (cosine with linear warmup)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(
+    step,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    min_ratio: float = 0.1,
+):
+    """Linear warmup to ``peak_lr`` then cosine decay to ``min_ratio·peak``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,92 @@
+"""Per-op breakdowns of a compiled module — the dry-run 'profiler'.
+
+No wall-clock exists on this container, so hypothesis formation works on
+the optimized HLO: which collectives move the most bytes, how many dots /
+how much dot-flops, what the biggest temp buffers are. This is the
+"enumerate → napkin-math → pick the biggest win" input (EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.roofline.analyze import _COLLECTIVES, _SHAPE_RE, _shape_bytes
+
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[a-z0-9]+\[[0-9,]*\][^\s]*)\s+"
+    r"([a-z\-]+)")
+
+
+def top_collectives(hlo_text: str, k: int = 15) -> list[dict]:
+    """Largest collective ops: kind, bytes, shape, metadata op_name."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        total = sum(_shape_bytes(p.group(0)) for p in
+                    re.finditer(r"[a-z0-9]+\[[0-9,]*\]", shape_str))
+        meta = re.search(r'op_name="([^"]*)"', line)
+        out.append({"name": name, "kind": base, "bytes": total,
+                    "shape": shape_str[:60],
+                    "op_name": (meta.group(1)[:90] if meta else "")})
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:k]
+
+
+def collective_summary_by_source(hlo_text: str) -> dict[str, int]:
+    """Collective bytes grouped by the annotated source op_name prefix."""
+    agg: dict[str, int] = defaultdict(int)
+    for rec in top_collectives(hlo_text, k=10**9):
+        key = rec["op_name"].split("/")[:3]
+        agg["/".join(key) or "(unannotated)"] += rec["bytes"]
+    return dict(sorted(agg.items(), key=lambda kv: -kv[1]))
+
+
+def dot_flops(hlo_text: str, k: int = 10) -> list[dict]:
+    """Largest dot/convolution ops by output size (flops proxy)."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        if op not in ("dot", "convolution"):
+            continue
+        sm = _SHAPE_RE.match(shape_str)
+        if not sm:
+            continue
+        meta = re.search(r'op_name="([^"]*)"', line)
+        out.append({"name": name, "out_bytes": _shape_bytes(shape_str),
+                    "shape": shape_str[:50],
+                    "op_name": (meta.group(1)[:80] if meta else "")})
+    out.sort(key=lambda d: -d["out_bytes"])
+    return out[:k]
+
+
+def top_outputs(hlo_text: str, k: int = 15, exclude=("parameter",)) -> list:
+    """Largest op outputs (peak-memory suspects), excluding parameters."""
+    out = []
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op = m.groups()
+        if op in exclude:
+            continue
+        total = sum(_shape_bytes(p.group(0)) for p in
+                    re.finditer(r"[a-z0-9]+\[[0-9,]*\]", shape_str))
+        meta = re.search(r'op_name="([^"]*)"', line)
+        out.append({"name": name[:28], "op": op, "bytes": total,
+                    "shape": shape_str[:44],
+                    "op_name": (meta.group(1)[:70] if meta else "")})
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:k]

@@ -1,0 +1,6 @@
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.sampling import sample_logits
+from repro.serve.steps import make_prefill_fn, make_serve_step
+
+__all__ = ["Engine", "EngineConfig", "Request", "make_prefill_fn",
+           "make_serve_step", "sample_logits"]

@@ -1,0 +1,170 @@
+"""Serving engine: continuous batching over a fixed slot pool.
+
+vLLM-style scheduling reduced to its JAX-native core: a fixed decode batch
+of ``max_slots`` sequences; finished sequences free their slot; waiting
+requests are admitted by prefilling into the freed slot. Slot bookkeeping
+(free-slot compaction) is an exclusive prefix sum over the free bitmap —
+the paper's stream-compaction use case running the engine.
+
+The decode step is ONE jitted call for the whole pool (padded, masked);
+prefill is a second jitted call per admitted request batch. Caches are
+donated across decode steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scan as scanlib
+from repro.models.config import ModelConfig
+from repro.serve.sampling import sample_logits
+from repro.serve.steps import init_cache_for, make_prefill_fn, make_serve_step
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_len: int = 512
+    max_new_tokens: int = 64
+    temperature: float = 0.0       # greedy default
+    top_p: float = 1.0
+    eos_id: int = 1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: Optional[int] = None
+    # filled by the engine:
+    output: Optional[list] = None
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, params: Pytree, cfg: ModelConfig, ecfg: EngineConfig):
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+        self._prefill_cache = {}
+        self.key = jax.random.PRNGKey(ecfg.seed)
+
+        B, L = ecfg.max_slots, ecfg.max_len
+        self.cache = init_cache_for(cfg, B, L)
+        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.lengths = np.zeros(B, np.int64)          # per-slot position
+        self.budgets = np.zeros(B, np.int64)          # remaining new tokens
+        self.slot_req: list[Optional[Request]] = [None] * B
+        self.waiting: list[Request] = []
+        self.finished: list[Request] = []
+
+    # -- slot bookkeeping (scan-based compaction) -----------------------
+    def _free_slots(self) -> np.ndarray:
+        free = np.array([r is None for r in self.slot_req], np.int32)
+        # Exclusive prefix sum of the free bitmap = compacted rank of each
+        # free slot (paper §1: "new offsets during a partitioning step").
+        ranks = np.asarray(
+            scanlib.cumsum(jnp.asarray(free), exclusive=True,
+                           algorithm="blocked"))
+        return np.where(free)[0], ranks
+
+    # -- admission ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.output = []
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        free_idx, _ = self._free_slots()
+        while self.waiting and len(free_idx):
+            slot = int(free_idx[0])
+            free_idx = free_idx[1:]
+            req = self.waiting.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            S = prompt.shape[1]
+            pf = self._prefill_for(S)
+            logits, cache1 = pf(self.params, prompt)
+            # Copy the single-row prefill cache into the pool at `slot`
+            # (cache leaves are (layers, batch, ...); prefill batch = 1).
+            self.cache = jax.tree.map(
+                lambda pool, one: _scatter_row(pool, one.astype(pool.dtype),
+                                               slot),
+                self.cache, cache1)
+            first = self._sample(logits)[0]
+            req.output.append(int(first))
+            budget = (req.max_new_tokens or self.ecfg.max_new_tokens) - 1
+            if budget <= 0 or int(first) == self.ecfg.eos_id:
+                req.done = True          # prefill token exhausted the budget
+                self.finished.append(req)
+                continue
+            self.tokens = self.tokens.at[slot, 0].set(first)
+            self.lengths[slot] = S
+            self.budgets[slot] = budget
+            self.slot_req[slot] = req
+
+    def _prefill_for(self, S: int):
+        if S not in self._prefill_cache:
+            self._prefill_cache[S] = jax.jit(
+                make_prefill_fn(self.cfg, self.ecfg.max_len))
+        return self._prefill_cache[S]
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sample_logits(sub, logits, self.ecfg.temperature,
+                             self.ecfg.top_p)
+
+    # -- decode ---------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit waiting, decode one token for all active.
+        Returns the number of active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        cache_len = jnp.asarray(int(max(self.lengths[i] for i in active)),
+                                jnp.int32)
+        logits, self.cache = self.serve_step(
+            self.params, self.tokens, self.cache, cache_len)
+        nxt = self._sample(logits)
+        nxt_np = np.asarray(nxt)
+        new_tokens = self.tokens
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(nxt_np[i])
+            req.output.append(tok)
+            self.lengths[i] += 1
+            self.budgets[i] -= 1
+            hit_eos = tok == self.ecfg.eos_id
+            out_of_budget = self.budgets[i] <= 0
+            out_of_cache = self.lengths[i] + 1 >= self.ecfg.max_len
+            if hit_eos or out_of_budget or out_of_cache:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[i] = None
+            else:
+                new_tokens = new_tokens.at[i, 0].set(tok)
+        self.tokens = new_tokens
+        return len(active)
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+        for _ in range(max_ticks):
+            if not self.waiting and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return self.finished
+
+
+def _scatter_row(pool: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Write prefill cache row(s) into the pool slot.
+
+    pool: (L, B, ...) stacked cache; one: (L, 1, ...) single-row cache.
+    """
+    return jax.lax.dynamic_update_slice_in_dim(pool, one, slot, axis=1)

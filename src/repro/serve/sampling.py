@@ -1,0 +1,34 @@
+"""Token sampling. Top-p nucleus filtering is a prefix-sum application:
+the nucleus is {tokens whose sorted-prob cumulative sum < p} — computed
+with the scan substrate (paper §1's 'parallel filtering' use case)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan as scanlib
+
+
+def sample_logits(
+    key: jax.Array,
+    logits: jax.Array,                  # (B, V) f32
+    temperature: float = 1.0,
+    top_p: float = 1.0,
+) -> jax.Array:
+    """Sample token ids (B,) with temperature + nucleus (top-p)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        # Exclusive cumulative probability mass before each rank: the
+        # nucleus keeps ranks whose preceding mass is < top_p.
+        cum = scanlib.cumsum(probs, axis=-1, exclusive=True,
+                             algorithm="blocked")
+        cutoff_logit = jnp.min(
+            jnp.where(cum < top_p, sorted_logits, jnp.inf), axis=-1,
+            keepdims=True)
+        logits = jnp.where(logits < cutoff_logit, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,108 @@
+"""Jittable serving step functions (these are what the dry-run lowers).
+
+``serve_step``: ONE new token for every sequence in the batch against a KV
+cache of ``max_len`` slots (the decode_32k / long_500k shapes).
+``prefill``: the full-prompt pass that fills the cache (prefill_32k).
+
+Shardings: batch over ('pod','data'); cache heads over 'model' — the KV
+cache is a pytree whose leaves follow PARAM-style logical rules resolved
+in ``cache_shardings``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import encdec as encdec_mod
+from repro.models import lm as lm_mod
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+
+def make_serve_step(cfg: ModelConfig, unroll: bool = False):
+    """(params, tokens (B,1), cache, cache_len ()) -> (logits, new_cache)."""
+
+    if cfg.is_encdec:
+        def step(params, tokens, cache, cache_len, memory):
+            return encdec_mod.serve_step(
+                params, tokens, memory, cache, cache_len, cfg,
+                unroll=unroll)
+        return step
+
+    def step(params, tokens, cache, cache_len):
+        return lm_mod.decode_step(params, tokens, cache, cache_len, cfg,
+                                  unroll=unroll)
+
+    return step
+
+
+def make_prefill_fn(cfg: ModelConfig, max_len: int, unroll: bool = False):
+    if cfg.is_encdec:
+        def fn(params, tokens, embeds):
+            memory = encdec_mod.encode(params, embeds, cfg, unroll=unroll)
+            cache = encdec_mod.init_dec_cache(cfg, tokens.shape[0], max_len)
+            hidden, cache = encdec_mod.decode_forward(
+                params, tokens, memory, cfg, cache=cache,
+                cache_len=jnp.zeros((), jnp.int32), unroll=unroll)
+            from repro.models.layers.embedding import lm_logits
+            return lm_logits(params, hidden[:, -1:], cfg)[:, 0], cache, memory
+        return fn
+
+    def fn(params, tokens, embeds=None):
+        logits, cache = lm_mod.prefill(
+            params, tokens, cfg, max_len, embeds=embeds, unroll=unroll)
+        return logits, cache
+
+    return fn
+
+
+def init_cache_for(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    if cfg.is_encdec:
+        return encdec_mod.init_dec_cache(cfg, batch, max_len)
+    return lm_mod.init_cache(cfg, batch, max_len)
+
+
+_CACHE_AXES = {
+    # leaf name fragment -> logical axes (cache leaves, by convention).
+    # KV caches shard the SEQUENCE over 'model' (seq_shard) — kv_heads are
+    # as low as 4 (qwen3) so head-sharding caps at 4-way; seq-sharding
+    # always gives the full 16-way split and the softmax combine across
+    # shards is the distributed online-softmax scan (DESIGN.md §3).
+    "k": ("layers", "batch", None, "seq_shard", None),
+    "v": ("layers", "batch", None, "seq_shard", None),
+    "conv": ("layers", "batch", None, "ssm_inner"),
+    # ssm: h (L,B,heads,hd,state); mlstm: S (L,B,H,dh,dh), n (L,B,H,dh);
+    # slstm: h/c/n/m (L,B,H,dh)
+    "h": ("layers", "batch", "heads", None, None),
+    "S": ("layers", "batch", "heads", None, None),
+    "c": ("layers", "batch", "heads", None),
+    "n": ("layers", "batch", "heads", None),
+    "m": ("layers", "batch", "heads", None),
+}
+
+
+def cache_shardings(cache: Pytree, mesh: Mesh) -> Pytree:
+    """NamedSharding tree for a decode cache under ``mesh``."""
+
+    def one(path_entries, leaf):
+        name = str(getattr(path_entries[-1], "key", path_entries[-1]))
+        axes = _CACHE_AXES.get(name)
+        if axes is not None and len(axes) != leaf.ndim and leaf.ndim >= 3:
+            axes = ("layers", "batch", "heads") + (None,) * (leaf.ndim - 3)
+        if axes is None or len(axes) != leaf.ndim:
+            axes = ("layers", "batch") + (None,) * (leaf.ndim - 2)
+        if shd.current_mesh() is None:
+            with shd.use_mesh(mesh):
+                spec = shd.resolve(axes)
+        else:  # inherit the caller's rule overrides (e.g. long_500k)
+            spec = shd.resolve(axes)
+        spec = shd.sanitize_spec(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,4 @@
+from repro.train.step import TrainStepConfig, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainStepConfig", "Trainer", "TrainerConfig", "make_train_step"]

@@ -1,0 +1,260 @@
+"""Pallas kernels vs their pure-jnp oracles (interpret mode on CPU).
+
+Per assignment: sweep shapes/dtypes per kernel and assert_allclose
+against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.scan_blocked import ops as sb_ops
+from repro.kernels.ssm_scan import ops as ssm_ops
+
+
+# ---------------------------------------------------------------------------
+# scan_blocked: VMEM-partitioned cumsum (paper §2.2 on TPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(1, 128), (4, 1024), (8, 4096), (3, 517),
+                                   (16, 2048), (2, 8192)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_scan_blocked_shapes_dtypes(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    if dtype == jnp.int32:
+        x = jnp.asarray(rng.integers(-9, 9, shape), dtype)
+    else:
+        x = jnp.asarray(rng.standard_normal(shape), dtype)
+    got = sb_ops.cumsum(x, axis=-1, interpret=True)
+    ref = jnp.cumsum(x.astype(jnp.float32), axis=-1)
+    tol = 0.15 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(ref, np.float64),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_n", [128, 256, 2048])
+def test_scan_blocked_block_invariance(block_n):
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((4, 4096)), jnp.float32)
+    got = sb_ops.cumsum(x, axis=-1, block_n=block_n, interpret=True)
+    ref = jnp.cumsum(x, axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_scan_blocked_exclusive_and_axis():
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal((5, 300)), jnp.float32)
+    got = sb_ops.cumsum(x, axis=0, exclusive=True, interpret=True)
+    inc = jnp.cumsum(x, axis=0)
+    ref = jnp.concatenate([jnp.zeros_like(x[:1]), inc[:-1]], axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_scan_blocked_3d():
+    x = jnp.asarray(
+        np.random.default_rng(2).standard_normal((2, 3, 640)), jnp.float32)
+    got = sb_ops.cumsum(x, axis=-1, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.cumsum(np.asarray(x), -1), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan: chunked affine scan (Mamba2/xLSTM recurrence)
+# ---------------------------------------------------------------------------
+
+
+def _ssm_ref(a, b):
+    def step(h, ab):
+        h = ab[0] * h + ab[1]
+        return h, h
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a[:, 0]),
+                         (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 128), (2, 256, 512), (3, 100, 64),
+                                   (1, 1024, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_shapes_dtypes(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    a = jnp.asarray(rng.uniform(0.7, 1.0, shape), dtype)
+    b = jnp.asarray(rng.standard_normal(shape) * 0.1, dtype)
+    got = ssm_ops.ssm_scan(a, b, interpret=True)
+    ref = _ssm_ref(a.astype(jnp.float32), b.astype(jnp.float32))
+    tol = 0.1 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(ref, np.float64),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_t", [32, 128, 512])
+def test_ssm_scan_block_invariance(block_t):
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.uniform(0.8, 1.0, (2, 512, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((2, 512, 128)), jnp.float32)
+    got = ssm_ops.ssm_scan(a, b, block_t=block_t, interpret=True)
+    ref = _ssm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssm_scan_vs_core_affine():
+    """Kernel and core-library AFFINE scans agree (two implementations of
+    the same monoid)."""
+    from repro.core import scan as scanlib
+    rng = np.random.default_rng(8)
+    a = jnp.asarray(rng.uniform(0.8, 1.0, (1, 200, 32)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((1, 200, 32)), jnp.float32)
+    got = ssm_ops.ssm_scan(a, b, interpret=True)
+    _, hb = scanlib.scan((a, b), "affine", axis=1, algorithm="blocked",
+                         block_size=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(hb), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: online-softmax scan kernel
+# ---------------------------------------------------------------------------
+
+
+def _rand_qkv(rng, B, Hq, Hkv, T, D, dtype=jnp.float32):
+    q = jnp.asarray(rng.standard_normal((B, Hq, T, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("T", [128, 256, 300])
+@pytest.mark.parametrize("gqa", [1, 4])
+def test_flash_matches_dense(T, gqa):
+    rng = np.random.default_rng(T * gqa)
+    B, Hkv, D = 2, 2, 32
+    q, k, v = _rand_qkv(rng, B, Hkv * gqa, Hkv, T, D)
+    got = fa_ops.flash_attention(q, k, v, scale=D ** -0.5, interpret=True)
+    ref = fa_ref.mha_ref(
+        q.reshape(B * Hkv * gqa, T, D), k.reshape(B * Hkv, T, D),
+        v.reshape(B * Hkv, T, D), group=gqa, scale=D ** -0.5,
+    ).reshape(B, Hkv * gqa, T, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [None, 64])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_flash_window_softcap(window, softcap):
+    rng = np.random.default_rng(11)
+    B, H, T, D = 1, 2, 256, 32
+    q, k, v = _rand_qkv(rng, B, H, H, T, D)
+    got = fa_ops.flash_attention(
+        q, k, v, scale=D ** -0.5, window=window, softcap=softcap,
+        interpret=True)
+    ref = fa_ref.mha_ref(
+        q.reshape(B * H, T, D), k.reshape(B * H, T, D),
+        v.reshape(B * H, T, D), group=1, scale=D ** -0.5, window=window,
+        softcap=softcap).reshape(B, H, T, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_blockwise_ref_matches_dense_and_grads():
+    """The training-path blockwise scan: values AND gradients match."""
+    rng = np.random.default_rng(12)
+    BH, T, D = 4, 192, 16
+    q = jnp.asarray(rng.standard_normal((BH, T, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, T, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, T, D)), jnp.float32)
+
+    f_block = lambda q, k, v: jnp.sum(
+        fa_ref.blockwise_ref(q, k, v, scale=0.25, block_k=64) ** 2)
+    f_dense = lambda q, k, v: jnp.sum(
+        fa_ref.mha_ref(q, k, v, scale=0.25) ** 2)
+    np.testing.assert_allclose(f_block(q, k, v), f_dense(q, k, v), rtol=1e-4)
+    g_block = jax.grad(f_block, argnums=(0, 1, 2))(q, k, v)
+    g_dense = jax.grad(f_dense, argnums=(0, 1, 2))(q, k, v)
+    for gb, gd in zip(g_block, g_dense):
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(gd),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(13)
+    B, H, T, D = 1, 1, 128, 32
+    q, k, v = _rand_qkv(rng, B, H, H, T, D, jnp.bfloat16)
+    got = fa_ops.flash_attention(q, k, v, scale=D ** -0.5, interpret=True)
+    ref = fa_ref.mha_ref(
+        q.reshape(H, T, D), k.reshape(H, T, D), v.reshape(H, T, D),
+        group=1, scale=D ** -0.5).reshape(B, H, T, D)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# segscan: segmented prefix sum (paper §1 partitioning primitive on-chip)
+# ---------------------------------------------------------------------------
+
+
+from repro.kernels.segscan import ops as seg_ops
+from repro.kernels.segscan import ref as seg_ref
+
+
+@pytest.mark.parametrize("shape", [(1, 128), (4, 1024), (3, 517),
+                                   (2, 4096)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+def test_segscan_shapes_dtypes(shape, dtype):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    if dtype == jnp.int32:
+        v = jnp.asarray(rng.integers(-9, 9, shape), dtype)
+    else:
+        v = jnp.asarray(rng.standard_normal(shape), dtype)
+    f = jnp.asarray(rng.random(shape) < 0.05, jnp.int32)
+    got = seg_ops.segmented_cumsum(v, f, interpret=True)
+    ref = seg_ref.segmented_cumsum_ref(v, f)
+    tol = 0.15 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(ref, np.float64),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_n", [128, 512])
+def test_segscan_block_invariance_and_cross_block_segments(block_n):
+    """Segments spanning block boundaries must carry correctly, and a
+    flag INSIDE a later block must kill the incoming carry."""
+    rng = np.random.default_rng(5)
+    v = jnp.asarray(rng.standard_normal((2, 1024)), jnp.float32)
+    f = jnp.zeros((2, 1024), jnp.int32)
+    # one segment start mid-block-2, none in block 1 => carry must cross
+    f = f.at[:, 0].set(1).at[0, 700].set(1).at[1, 130].set(1)
+    got = seg_ops.segmented_cumsum(v, f, block_n=block_n, interpret=True)
+    ref = seg_ref.segmented_cumsum_ref(v, f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_segscan_matches_core_segmented():
+    """Kernel and core-library segmented scans agree."""
+    from repro.core import scan as scanlib
+    rng = np.random.default_rng(6)
+    v = jnp.asarray(rng.standard_normal(512), jnp.float32)
+    f = jnp.asarray(rng.random(512) < 0.1, jnp.int32)
+    got = seg_ops.segmented_cumsum(v, f, interpret=True)
+    want = scanlib.segmented_scan(v, f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_segscan_no_flags_equals_cumsum():
+    v = jnp.asarray(np.random.default_rng(7).standard_normal((2, 300)),
+                    jnp.float32)
+    f = jnp.zeros((2, 300), jnp.int32)
+    got = seg_ops.segmented_cumsum(v, f, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.cumsum(np.asarray(v), -1),
+                               rtol=1e-4, atol=1e-4)

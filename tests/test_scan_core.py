@@ -1,0 +1,169 @@
+"""Core scan algorithms vs the sequential oracle (paper Table 2 rows)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scan as scanlib
+
+ALGOS = ("ref", "horizontal", "vertical", "tree", "blocked", "two_pass")
+
+
+def _np_ref(x, exclusive=False):
+    inc = np.cumsum(x, axis=-1, dtype=np.float64)
+    if not exclusive:
+        return inc
+    exc = np.zeros_like(inc)
+    exc[..., 1:] = inc[..., :-1]
+    return exc
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("n", [1, 2, 7, 16, 100, 1024, 4100])
+def test_cumsum_matches_numpy(algo, n):
+    x = np.random.default_rng(n).standard_normal(n).astype(np.float32)
+    got = scanlib.scan(jnp.asarray(x), "sum", algorithm=algo)
+    np.testing.assert_allclose(np.asarray(got), _np_ref(x), rtol=2e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_exclusive(algo):
+    x = np.arange(1, 65, dtype=np.float32)
+    got = scanlib.scan(jnp.asarray(x), "sum", algorithm=algo, exclusive=True)
+    np.testing.assert_allclose(np.asarray(got), _np_ref(x, True), rtol=1e-5)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32, jnp.bfloat16])
+def test_dtypes(algo, dtype):
+    x = jnp.asarray(np.random.default_rng(0).integers(-5, 5, 257), dtype)
+    got = scanlib.scan(x, "sum", algorithm=algo)
+    ref = scanlib.scan_ref(x, "sum")
+    tol = 0.1 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(ref, np.float64),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("axis", [0, 1, -1])
+def test_axes_2d(algo, axis):
+    x = np.random.default_rng(1).standard_normal((6, 33)).astype(np.float32)
+    got = scanlib.scan(jnp.asarray(x), "sum", axis=axis, algorithm=algo)
+    ref = np.cumsum(x, axis=axis, dtype=np.float64)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("op", ["max", "min", "prod"])
+@pytest.mark.parametrize("algo", ["horizontal", "tree", "blocked"])
+def test_other_monoids(op, algo):
+    rng = np.random.default_rng(2)
+    x = rng.uniform(0.5, 1.5, 100).astype(np.float32)
+    got = scanlib.scan(jnp.asarray(x), op, algorithm=algo)
+    ref = scanlib.scan_ref(jnp.asarray(x), op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5)
+
+
+def test_affine_monoid_blocked_vs_ref():
+    rng = np.random.default_rng(3)
+    a = rng.uniform(0.8, 1.0, 200).astype(np.float32)
+    b = rng.standard_normal(200).astype(np.float32)
+    got_a, got_b = scanlib.scan((jnp.asarray(a), jnp.asarray(b)), "affine",
+                                algorithm="blocked", block_size=32)
+    # sequential recurrence h_t = a_t h_{t-1} + b_t  (h_0 = 0)
+    h = np.zeros(200)
+    prev = 0.0
+    for i in range(200):
+        prev = a[i] * prev + b[i]
+        h[i] = prev
+    np.testing.assert_allclose(np.asarray(got_b), h, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=300),
+       st.sampled_from(["horizontal", "blocked", "tree", "vertical"]))
+@settings(max_examples=30, deadline=None)
+def test_property_recurrence(xs, algo):
+    """y[i] - y[i-1] == x[i] (the defining recurrence)."""
+    x = np.asarray(xs, np.float32)
+    y = np.asarray(scanlib.scan(jnp.asarray(x), "sum", algorithm=algo),
+                   np.float64)
+    np.testing.assert_allclose(np.diff(y), x[1:], rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(y[0], x[0], rtol=1e-5)
+
+
+@given(st.integers(1, 200), st.integers(1, 200))
+@settings(max_examples=20, deadline=None)
+def test_property_concat(n1, n2):
+    """scan(a ++ b) == scan(a) ++ (scan(b) + sum(a))."""
+    rng = np.random.default_rng(n1 * 1000 + n2)
+    a = rng.standard_normal(n1).astype(np.float32)
+    b = rng.standard_normal(n2).astype(np.float32)
+    whole = np.asarray(
+        scanlib.cumsum(jnp.asarray(np.concatenate([a, b])),
+                       algorithm="blocked"), np.float64)
+    pa = np.asarray(scanlib.cumsum(jnp.asarray(a), algorithm="blocked"),
+                    np.float64)
+    pb = np.asarray(scanlib.cumsum(jnp.asarray(b), algorithm="blocked"),
+                    np.float64)
+    np.testing.assert_allclose(whole, np.concatenate([pa, pb + pa[-1]]),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(2, 512), st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_property_block_size_invariance(n, block):
+    """The blocked result must not depend on the block size."""
+    x = np.random.default_rng(n).standard_normal(n).astype(np.float32)
+    y1 = scanlib.scan(jnp.asarray(x), "sum", algorithm="blocked",
+                      block_size=block)
+    y2 = scanlib.scan(jnp.asarray(x), "sum", algorithm="blocked",
+                      block_size=max(1, n))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(st.integers(1, 8), st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_property_dilation_partitions(parts, dilation):
+    """partition_sizes: sums to n, first partition scaled by d."""
+    n = 1000
+    sizes = scanlib.partition_sizes(n, parts, dilation)
+    assert sum(sizes) == n
+    assert all(s > 0 for s in sizes)
+
+
+@pytest.mark.parametrize("variant", [1, 2])
+@pytest.mark.parametrize("dilation", [0.0, 0.3, 1.0])
+def test_two_pass_variants_dilation(variant, dilation):
+    x = np.random.default_rng(9).standard_normal(515).astype(np.float32)
+    got = scanlib.scan_two_pass(jnp.asarray(x), "sum", num_partitions=5,
+                                variant=variant, dilation=dilation)
+    np.testing.assert_allclose(np.asarray(got), _np_ref(x), rtol=2e-4,
+                               atol=1e-4)
+
+
+def test_policy_choices():
+    from repro.core.scan.policy import choose
+    small = choose(1024)
+    assert small.algorithm == "horizontal"  # fits fast memory (Obs 2)
+    big = choose(1 << 26)
+    assert big.algorithm in ("kernel", "blocked")  # partitioned (Obs 3)
+    assert big.variant == 2                        # reduce-first (SIMD2-P)
+    hbm = choose(1 << 26, bandwidth_abundant=True)
+    assert big.algorithm != hbm.algorithm or hbm.algorithm == "two_pass"
+
+
+def test_segmented_scan_restarts():
+    vals = jnp.asarray(np.ones(10, np.float32))
+    flags = jnp.asarray([1, 0, 0, 1, 0, 0, 0, 1, 0, 0], jnp.int32)
+    out = scanlib.segmented_scan(vals, flags)
+    np.testing.assert_allclose(
+        np.asarray(out), [1, 2, 3, 1, 2, 3, 4, 1, 2, 3])

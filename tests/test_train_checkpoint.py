@@ -1,0 +1,201 @@
+"""Trainer loop, fault tolerance, checkpoint/restart, optimizer."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+from repro.data import DataConfig, SyntheticDataset
+from repro.optim import adamw_init
+from repro.optim.adamw import AdamWConfig, adamw_update, global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.train.step import TrainStepConfig, init_params, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig, _StragglerTracker
+
+
+@pytest.fixture
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _tiny_setup(arch="xlstm-125m", steps=6, **tkw):
+    cfg = configs.get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(
+        cfg, TrainStepConfig(remat=False, total_steps=steps)))
+    ds = SyntheticDataset(DataConfig(
+        seq_len=32, global_batch=2, vocab_size=cfg.vocab_size))
+    return cfg, params, opt, step, ds
+
+
+def test_loss_decreases(tmp_ckpt):
+    cfg, params, opt, step, ds = _tiny_setup(steps=30)
+    tr = Trainer(step, ds, TrainerConfig(
+        total_steps=30, checkpoint_every=100, checkpoint_dir=tmp_ckpt,
+        log_every=100))
+    tr.run(params, opt)
+    first = np.mean([h["loss"] for h in tr.history[:5]])
+    last = np.mean([h["loss"] for h in tr.history[-5:]])
+    assert last < first, (first, last)
+
+
+def test_checkpoint_restart_resumes_exactly(tmp_ckpt):
+    cfg, params, opt, step, ds = _tiny_setup(steps=8)
+    tr = Trainer(step, ds, TrainerConfig(
+        total_steps=8, checkpoint_every=4, checkpoint_dir=tmp_ckpt,
+        log_every=100))
+    p_final, o_final = tr.run(params, opt)
+
+    # new process analogue: fresh params, restore, run the remaining steps
+    params2 = init_params(jax.random.PRNGKey(0), cfg)
+    opt2 = adamw_init(params2)
+    tr2 = Trainer(step, ds, TrainerConfig(
+        total_steps=8, checkpoint_every=4, checkpoint_dir=tmp_ckpt))
+    start, p_r, o_r = tr2.maybe_restore(params2, opt2)
+    assert start == 8  # final commit
+    for a, b in zip(jax.tree.leaves(p_r), jax.tree.leaves(p_final)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_commit_marker_protects_partial(tmp_ckpt):
+    cfg, params, opt, step, ds = _tiny_setup()
+    save_checkpoint(tmp_ckpt, 5, {"params": params})
+    # simulate a crash mid-write: a step dir without COMMIT
+    os.makedirs(os.path.join(tmp_ckpt, "step_9"), exist_ok=True)
+    assert latest_step(tmp_ckpt) == 5
+
+
+def test_checkpoint_retention(tmp_ckpt):
+    mgr = CheckpointManager(tmp_ckpt, keep=2)
+    x = {"w": jnp.arange(4.0)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, x, block=True)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_ckpt)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+
+
+def test_bf16_roundtrip(tmp_ckpt):
+    x = {"w": jnp.asarray([1.5, -2.25, 3.0], jnp.bfloat16)}
+    save_checkpoint(tmp_ckpt, 1, x)
+    back = restore_checkpoint(tmp_ckpt, 1, x)
+    assert back["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["w"], np.float32),
+                                  np.asarray(x["w"], np.float32))
+
+
+def test_nan_guard_skips_update(tmp_ckpt):
+    cfg, params, opt, step, ds = _tiny_setup()
+    calls = {"n": 0}
+
+    def poisoned(p, o, b, i):
+        calls["n"] += 1
+        p2, o2, m = step(p, o, b, i)
+        if calls["n"] == 2:
+            m = dict(m, loss=jnp.float32(float("nan")))
+        return p2, o2, m
+
+    tr = Trainer(poisoned, ds, TrainerConfig(
+        total_steps=4, checkpoint_every=100, checkpoint_dir=tmp_ckpt,
+        max_nan_skips=2))
+    tr.run(params, opt)
+    steps_logged = [h["step"] for h in tr.history]
+    assert 1 not in steps_logged          # the poisoned step was skipped
+    assert len(tr.history) == 3
+
+
+def test_step_retry_on_failure(tmp_ckpt):
+    cfg, params, opt, step, ds = _tiny_setup()
+    boom = {"armed": True}
+
+    def flaky(p, o, b, i):
+        if boom["armed"] and int(i) == 2:
+            boom["armed"] = False
+            raise RuntimeError("simulated preemption")
+        return step(p, o, b, i)
+
+    tr = Trainer(flaky, ds, TrainerConfig(
+        total_steps=4, checkpoint_every=2, checkpoint_dir=tmp_ckpt,
+        max_step_retries=1))
+    tr.run(params, opt)
+    assert [h["step"] for h in tr.history][-1] == 3  # completed despite fail
+
+
+def test_straggler_tracker_flags_outlier():
+    t = _StragglerTracker(zscore=3.0, min_samples=10)
+    for i in range(30):
+        assert not t.observe(i, 1.0 + 0.01 * (i % 3))
+    assert t.observe(31, 10.0)   # 10s step vs ~1s mean
+
+
+def test_adamw_converges_quadratic():
+    w = {"w": jnp.asarray([5.0, -3.0])}
+    st = adamw_init(w)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        g = jax.tree.map(lambda x: 2 * x, w)   # d/dw w^2
+        w, st, _ = adamw_update(g, st, w, cfg)
+    assert float(jnp.max(jnp.abs(w["w"]))) < 0.1
+
+
+def test_grad_clip_and_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    assert abs(float(global_norm(g)) - 5.0) < 1e-6
+    w = {"a": jnp.zeros(2)}
+    st = adamw_init(w)
+    _, _, m = adamw_update(g, st, w, AdamWConfig(grad_clip=1.0))
+    assert abs(float(m["grad_norm"]) - 5.0) < 1e-5
+
+
+def test_cosine_schedule_shape():
+    lr0 = float(cosine_schedule(0, peak_lr=1.0, warmup_steps=10,
+                                total_steps=100))
+    lrw = float(cosine_schedule(10, peak_lr=1.0, warmup_steps=10,
+                                total_steps=100))
+    lre = float(cosine_schedule(100, peak_lr=1.0, warmup_steps=10,
+                                total_steps=100, min_ratio=0.1))
+    assert lr0 == 0.0 and abs(lrw - 1.0) < 1e-6 and abs(lre - 0.1) < 1e-6
+
+
+def test_microbatch_equals_full_batch():
+    """Gradient accumulation must match the single-batch gradient."""
+    cfg = configs.get_smoke_config("phi3-medium-14b")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    opt = adamw_init(params)
+    toks = jax.random.randint(key, (4, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks,
+             "mask": jnp.ones((4, 16), jnp.float32)}
+    s1 = make_train_step(cfg, TrainStepConfig(microbatches=1, remat=False))
+    s2 = make_train_step(cfg, TrainStepConfig(microbatches=2, remat=False))
+    p1, _, m1 = jax.jit(s1)(params, opt, batch, jnp.asarray(0))
+    p2, _, m2 = jax.jit(s2)(params, adamw_init(params), batch,
+                            jnp.asarray(0))
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_data_pipeline_deterministic():
+    cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=100, seed=3)
+    a = SyntheticDataset(cfg).batch_at(7)
+    b = SyntheticDataset(cfg).batch_at(7)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = SyntheticDataset(cfg).batch_at(8)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))

@@ -1,0 +1,33 @@
+"""Insert generated tables at the EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python tools/inject_tables.py
+"""
+
+import io
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "tools")
+from make_experiments_tables import perf_table, roofline_table  # noqa: E402
+
+
+def capture(fn, *a):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        fn(*a)
+    return buf.getvalue().strip()
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->",
+                        capture(roofline_table, "experiments/roofline"))
+    text = text.replace("<!-- PERF_TABLE -->",
+                        capture(perf_table, "experiments/perf"))
+    open(path, "w").write(text)
+    print("tables injected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON records.
+
+    PYTHONPATH=src python tools/make_experiments_tables.py roofline
+    PYTHONPATH=src python tools/make_experiments_tables.py dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        r["_file"] = os.path.basename(p)
+        recs.append(r)
+    return recs
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b:.0f}"
+
+
+def roofline_table(d="experiments/roofline"):
+    print("| arch | shape | mode | compute s | memory s | collective s | "
+          "dcn s | dominant | bound s | useful | MODEL_TFLOPs |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in load(d):
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | | FAIL: "
+                  f"{r.get('error','')[:40]} | | | | | | | |")
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"],
+                    r["dcn_s"])
+        mode = ("unrolled" if r.get("knobs", {}).get("unroll", True)
+                else "scanned†")
+        print(f"| {r['arch']} | {r['shape']} | {mode} | "
+              f"{r['compute_s']:.4f} | "
+              f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+              f"{r['dcn_s']:.4f} | {r['dominant']} | {bound:.4f} | "
+              f"{100*r['useful_ratio']:.0f}% | "
+              f"{r['model_flops']/1e12:.0f} |")
+
+
+def dryrun_table(d="experiments/dryrun"):
+    print("| arch | shape | mesh | status | HLO flops/dev | HLO bytes/dev |"
+          " coll bytes/dev | cross-pod | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in load(d):
+        if r.get("status") != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | "
+                  f"| | | {r.get('compile_s',0):.0f} |")
+            continue
+        coll = sum(r["collective_bytes"].values())
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{r['hlo_flops']:.2e} | {fmt_bytes(r['hlo_bytes'])} | "
+              f"{fmt_bytes(coll)} | {fmt_bytes(r['cross_pod_bytes'])} | "
+              f"{r['compile_s']:.0f} |")
+
+
+def perf_table(d="experiments/perf"):
+    print("| cell | variant | compute s | memory s | collective s | "
+          "bound s | Δbound |")
+    print("|---|---|---|---|---|---|---|")
+    rows = {}
+    for r in load(d):
+        if r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"])
+        tag = r["_file"].rsplit("_", 1)[-1].replace(".json", "") \
+            if "_" in r["_file"] else "base"
+        if not r.get("knobs", {}).get("unroll", True):
+            tag += "(scanned)"
+        if r.get("knobs", {}).get("override_layers"):
+            tag += f"@{r['knobs']['override_layers']}L"
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"],
+                    r["dcn_s"])
+        rows.setdefault(key, []).append((tag, r, bound))
+    for key, variants in rows.items():
+        base = None
+        for tag, r, bound in variants:
+            delta = "" if base is None else f"{(bound/base-1)*100:+.0f}%"
+            base = base or bound
+            print(f"| {key[0]} × {key[1]} | {tag} | {r['compute_s']:.4f} |"
+                  f" {r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                  f"{bound:.4f} | {delta} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    {"roofline": roofline_table, "dryrun": dryrun_table,
+     "perf": perf_table}[which](*sys.argv[2:])
