@@ -1,0 +1,78 @@
+"""Decoupled vs carry-chain kernel schedules across the (B, N) plane.
+
+The paper's Observation 3 says the winning multithreaded organization is
+reduce-first two-phase (SIMD2-P); our carry-chain kernel is instead the
+fused single-pass with a sequential sequence axis. This table measures
+where each wins — long single rows (the serve-engine / SSM decode shape)
+versus batched training shapes — plus the library two-pass baseline, and
+prints what ``policy.choose_schedule`` would pick so the policy rule can
+be eyeballed against measurement.
+
+On the CPU container the kernels run in interpret mode, so wall-clock
+mostly reflects algorithmic structure; compiled-HLO bytes (``hlo_bytes``)
+show the traffic trade (decoupled reads the data twice).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, hlo_bytes, throughput, time_fn
+from repro.core import scan as scanlib
+from repro.core.scan import policy
+from repro.kernels.scan_blocked import ops as sb_ops
+
+# (B, N) cells: equal element count, batch collapsing toward one long row.
+CELLS = [
+    (64, 1 << 16),
+    (8, 1 << 19),
+    (1, 1 << 22),
+]
+
+
+def run() -> Table:
+    t = Table("Decoupled vs carry grid schedule (kernel interpret mode)",
+              ["B", "N", "schedule", "policy", "Belem/s", "ms"])
+    for B, N in CELLS:
+        x = jnp.asarray(
+            np.random.default_rng(B).standard_normal((B, N)), jnp.float32)
+        ref = np.cumsum(np.asarray(x, np.float64), axis=-1)
+        chosen = policy.choose_schedule(B, N)
+        for schedule in ("carry", "decoupled", "two_pass"):
+            if schedule == "two_pass":
+                fn = jax.jit(functools.partial(
+                    scanlib.scan_two_pass, op="sum",
+                    num_partitions=policy.NUM_CORES))
+            else:
+                fn = functools.partial(
+                    sb_ops.cumsum, interpret=True, schedule=schedule)
+            got = np.asarray(fn(x), np.float64)
+            np.testing.assert_allclose(got, ref, rtol=5e-3, atol=5e-1)
+            sec = time_fn(fn, x, iters=3, warmup=1)
+            mark = " <- policy" if schedule == chosen else ""
+            t.add(B, N, schedule + mark,
+                  chosen if schedule == "carry" else "",
+                  throughput(B * N, sec), sec * 1e3)
+    return t
+
+
+def run_traffic() -> Table:
+    """Compiled-HLO bytes per schedule: the read-2n price of decoupling."""
+    t = Table("Schedule HBM-traffic model (compiled bytes, B=1)",
+              ["N", "schedule", "bytes", "bytes/elem"])
+    for N in (1 << 18, 1 << 20):
+        x = jnp.zeros((1, N), jnp.float32)
+        for schedule in ("carry", "decoupled"):
+            cost = hlo_bytes(functools.partial(
+                sb_ops.cumsum, interpret=True, schedule=schedule), x)
+            t.add(N, schedule, cost["bytes"], cost["bytes"] / N)
+    return t
+
+
+if __name__ == "__main__":
+    run().show()
+    run_traffic().show()

@@ -11,7 +11,7 @@ import time
 
 from benchmarks import (fig6_single_thread, fig7_traffic, fig8_inplace,
                         fig10_partition_size, fig11_dilation, fig13_policy,
-                        moe_dispatch, roofline_table)
+                        fig_decoupled, moe_dispatch, roofline_table)
 
 SUITES = {
     "fig6": [fig6_single_thread.run],
@@ -21,6 +21,7 @@ SUITES = {
               fig10_partition_size.run_kernel_vmem],
     "fig11": [fig11_dilation.run],
     "fig13": [fig13_policy.run, fig13_policy.run_traffic_model],
+    "decoupled": [fig_decoupled.run, fig_decoupled.run_traffic],
     "moe": [moe_dispatch.run],
     "roofline": [roofline_table.run],
 }

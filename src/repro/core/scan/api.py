@@ -46,13 +46,17 @@ def scan(
     if algorithm == "auto":
         leaves = jax.tree.leaves(elems)
         n = leaves[0].shape[axis]
+        batch = max(leaves[0].size // max(n, 1), 1)
         itemsize = sum(l.dtype.itemsize for l in leaves)
         kernel_ok = monoid.name == "sum" and len(leaves) == 1
-        choice = policy.choose(n, itemsize, kernel_available=kernel_ok)
+        choice = policy.choose(n, itemsize, kernel_available=kernel_ok,
+                               batch=batch)
         algorithm = choice.algorithm
         kw.setdefault("block_size", choice.block_size)
         if algorithm == "two_pass":
             kw.setdefault("variant", choice.variant)
+        if algorithm == "kernel":
+            kw.setdefault("schedule", choice.schedule)
 
     if algorithm == "kernel":
         from repro.kernels.scan_blocked import ops as kernel_ops

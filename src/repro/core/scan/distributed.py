@@ -185,7 +185,9 @@ def scan_sharded(
             )
         return jax.tree.map(lambda x: jnp.moveaxis(x, 0, scan_axis), out)
 
-    fn = jax.shard_map(
+    from repro.dist.sharding import shard_map
+
+    fn = shard_map(
         local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec
     )
     return fn(elems)

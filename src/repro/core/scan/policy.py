@@ -15,6 +15,30 @@ can pick a sensible default, and so the choice is documented in one place:
          donation in the jitted wrappers, not an algorithm change.
   Obs 5  Tree/vertical lose on memory access → never auto-picked; they
          remain available for study and as oracles.
+
+Kernel SCHEDULE rule (Obs 2/3 applied to the Pallas grid): the kernel-
+backed scans run one of two grid organizations, picked by
+``choose_schedule`` (also surfaced as ``Choice.schedule``):
+
+  'carry'      grid-carried total: ("parallel", "arbitrary") — one fused
+               HBM pass (read n + write n), but the sequence axis is a
+               sequential carry chain, so parallelism == batch rows. The
+               winner whenever ``batch >= cores`` keeps every core busy
+               (the paper's SIMD-P single-pass organization).
+  'decoupled'  reduce-then-scan: a fully parallel pass 1b emits per-chunk
+               totals only, a tiny exclusive scan combines them, and a
+               fully parallel pass 2 redoes the in-chunk scan with the
+               chunk offset fused into the writeback — both grids are
+               ("parallel", "parallel"), so a LONG row spreads across
+               cores at the price of reading the data twice
+               (read 2n + write n; the paper's SIMD2-P, Observation 3).
+
+  The flip: carry-chain when ``batch >= cores`` (enough rows to fill the
+  machine; cheapest traffic), decoupled when a long row would otherwise
+  serialize — ``batch < cores`` AND the row spans multiple blocks AND
+  there are at least ``cores // batch`` chunks to spread. Serve-engine
+  decode and SSM prefill (B=1, N ≥ 2^22) land decoupled; training shapes
+  (B ≥ 8) keep the carry chain.
 """
 
 from __future__ import annotations
@@ -27,6 +51,11 @@ VMEM_BYTES = 64 * 1024 * 1024  # per-core VMEM class budget we plan against
 VMEM_BLOCK_BUDGET = VMEM_BYTES // 8  # working set ≤ 1/8 VMEM: in+out+slack
 L2_HALF_FLOATS = 128 * 1024  # the paper's best CPU partition: ½ L2 in elems
 
+# Cores one kernel launch can spread over (the paper's thread count): the
+# v5e chip exposes a handful of Mosaic-parallelizable cores per launch
+# class; 8 also matches the paper's CPU thread sweet spot (Fig. 7).
+NUM_CORES = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class Choice:
@@ -35,6 +64,32 @@ class Choice:
     variant: int  # two-pass organization (1 = scan-first, 2 = reduce-first)
     carry_exchange: str  # distributed sums exchange
     reason: str
+    schedule: str = "carry"  # kernel grid organization: 'carry'|'decoupled'
+
+
+def choose_schedule(
+    batch: int,
+    n: int,
+    cores: int = NUM_CORES,
+    block_elems: int = 2048,
+) -> str:
+    """Kernel grid organization for a (batch, n) scan — see module doc.
+
+    ``block_elems`` must be the chunk length the kernel will actually
+    tile with — the chunks-per-spare-core test is meaningless against
+    any other block size.
+    """
+    batch = max(int(batch), 1)
+    if batch >= cores:
+        return "carry"  # rows alone fill every core; cheapest HBM traffic
+    chunks = -(-n // max(block_elems, 1))
+    spare = cores // batch  # cores idle under the carry chain
+    # Decoupled pays a second read of the data; only worth it when the
+    # idle cores can actually be fed — at least ``spare`` chunks per row
+    # (a row inside one block has nothing to parallelize).
+    if spare >= 2 and chunks >= spare:
+        return "decoupled"
+    return "carry"
 
 
 def choose(
@@ -44,10 +99,18 @@ def choose(
     bandwidth_abundant: bool = False,
     carry_bytes: int = 4,
     kernel_available: bool = True,
+    batch: int = NUM_CORES,
+    cores: int = NUM_CORES,
 ) -> Choice:
-    """Pick a scan algorithm for ``n`` elements of ``itemsize`` bytes."""
+    """Pick a scan algorithm for ``n`` elements of ``itemsize`` bytes.
+
+    ``batch`` is the number of independent rows scanned together (defaults
+    to "plenty" so shape-oblivious callers keep the carry-chain default);
+    it only affects ``Choice.schedule``.
+    """
     bytes_total = n * itemsize
     block = max(1024, min(VMEM_BLOCK_BUDGET // max(itemsize, 1), n))
+    schedule = choose_schedule(batch, n, cores)
 
     if bytes_total <= VMEM_BLOCK_BUDGET:
         # Fits in fast memory: one horizontal pass, no partitioning (Obs 2).
@@ -62,6 +125,7 @@ def choose(
         return Choice(
             "two_pass", block, 2, "all_gather",
             "bandwidth abundant: skip partitioning (paper Fig 13)",
+            schedule,
         )
 
     algo = "kernel" if kernel_available else "blocked"
@@ -70,7 +134,7 @@ def choose(
     exchange = "all_gather"
     if n_devices > 1 and carry_bytes * n_devices > 1 << 20:
         exchange = "hillis_permute"
-    return Choice(
-        algo, block, 2, exchange,
-        "bandwidth-bound: cache/VMEM partitioning, reduce-first (SIMD2-P)",
-    )
+    reason = "bandwidth-bound: cache/VMEM partitioning, reduce-first (SIMD2-P)"
+    if schedule == "decoupled":
+        reason += "; decoupled grid (batch < cores, long row)"
+    return Choice(algo, block, 2, exchange, reason, schedule)

@@ -1,0 +1,10 @@
+"""Distribution layer: logical-axis sharding over the installed mesh."""
+
+from repro.dist import sharding
+from repro.dist.sharding import (current_mesh, resolve, sanitize_spec, shard,
+                                 shard_map, spec_for_params, use_mesh)
+
+__all__ = [
+    "current_mesh", "resolve", "sanitize_spec", "shard", "shard_map",
+    "sharding", "spec_for_params", "use_mesh",
+]

@@ -1,10 +1,20 @@
 """Pallas TPU kernels for the performance-critical compute layers.
 
-Every kernel follows the same blocked-scan schedule (the paper's §2.2):
-sequential grid along the scanned axis, VMEM scratch carry, both logical
-passes fused while the block is VMEM-resident.
+The scan kernels run one of two grid schedules (`schedule=` knob on each
+``ops`` wrapper, arbitrated by ``core/scan/policy.choose_schedule``):
 
-  scan_blocked     — prefix sum with a grid-carried running total
+  carry      — the paper's §2.2 partitioned single pass: sequential grid
+               along the scanned axis, VMEM scratch carry, both logical
+               passes fused while the block is VMEM-resident. Parallelism
+               across rows only.
+  decoupled  — the paper's SIMD2-P reduce-then-scan (Observation 3): a
+               fully parallel totals pass, a tiny exclusive combine, and
+               a fully parallel scan+offset pass — the scanned axis
+               itself spreads across cores (B=1, huge-N serve shapes).
+
+  scan_blocked     — prefix sum (``decoupled.py`` per package holds the
+                     second schedule)
+  segscan          — segmented prefix sum ((flag, value) monoid)
   ssm_scan         — affine-monoid scan (SSM/xLSTM recurrences)
   flash_attention  — online-softmax monoid scan over KV blocks
 """

@@ -1,0 +1,32 @@
+"""Version compat for the Pallas TPU API used by every kernel here.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-compat aliases differ across the 0.4.x / 0.5.x lines).  All four
+kernel packages build their ``compiler_params`` through this shim so a
+single place tracks the drift.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    _PARAMS_CLS = pltpu.CompilerParams
+elif hasattr(pltpu, "TPUCompilerParams"):
+    _PARAMS_CLS = pltpu.TPUCompilerParams
+else:  # very old jax: pallas_call takes a plain dict
+    _PARAMS_CLS = None
+
+
+def compiler_params(*, dimension_semantics=None, **kw):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    ``dimension_semantics`` is a tuple of 'parallel' / 'arbitrary' strings,
+    one per grid dimension (the knob every kernel in this repo sets).
+    """
+    if dimension_semantics is not None:
+        kw["dimension_semantics"] = tuple(dimension_semantics)
+    if _PARAMS_CLS is None:
+        # pre-TPUCompilerParams jax keyed compiler params by backend
+        return {"mosaic": dict(kw)}
+    return _PARAMS_CLS(**kw)

@@ -1,0 +1,133 @@
+"""Decoupled reduce-then-scan prefix sum: the sequence axis across cores.
+
+The carry-chain kernel (``scan_blocked.py``) makes the sequence grid axis
+``"arbitrary"`` — one core walks each row left-to-right. Great when
+``B >= cores`` (training shapes), but a single long row (serve decode,
+SSM prefill: small B, huge N) runs on ONE core. This module is the
+paper's multithreaded SIMD2-P organization (Observation 3) on the Mosaic
+grid instead of threads:
+
+  pass 1b  fully parallel grid over (row-block, chunk): each instance
+           reads its chunk and emits the chunk TOTAL only (reduce-first —
+           read n, write n/block).
+  combine  a tiny exclusive scan over the (B, chunks) totals — the
+           paper's serial `sums` scan, microscopic next to n. Runs as a
+           sequential ``lax.scan`` so the float addition order is
+           EXACTLY the carry chain's (bit-identical outputs).
+  pass 2   fully parallel grid: redo the in-chunk scan and fuse the
+           chunk offset into the writeback (read n, write n).
+
+HBM traffic is read 2n + write n versus the carry chain's read n +
+write n — the price of decoupling; ``core/scan/policy.choose_schedule``
+only picks this schedule when idle cores repay it.
+
+Both grids are ``("parallel", "parallel")``: no cross-instance state, no
+revisiting — Mosaic may run chunks of one row concurrently on every core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_compat import compiler_params
+from repro.kernels.scan_blocked.scan_blocked import (_accum_dtype,
+                                                     _inblock_scan)
+
+
+def _totals_kernel(x_ref, tot_ref, *, acc_dtype):
+    """Pass 1b: per-chunk totals via the same in-block scan network.
+
+    Using ``_inblock_scan(...)[:, -1:]`` (not a plain sum) keeps the
+    reduction tree identical to the carry kernel's running total, which
+    is what makes the two schedules bit-identical in floating point.
+    """
+    x = x_ref[...].astype(acc_dtype)
+    tot_ref[...] = _inblock_scan(x)[:, -1:]
+
+
+def _scan_kernel(x_ref, off_ref, o_ref, *, acc_dtype, exclusive):
+    """Pass 2: in-chunk scan + fused chunk-offset writeback."""
+    x = x_ref[...].astype(acc_dtype)
+    inc = _inblock_scan(x)
+    carry = off_ref[...]  # (bb, 1) exclusive chunk offset
+    if exclusive:
+        shifted = jnp.pad(inc, ((0, 0), (1, 0)))[:, :-1]
+        o_ref[...] = (shifted + carry).astype(o_ref.dtype)
+    else:
+        o_ref[...] = (inc + carry).astype(o_ref.dtype)
+
+
+def _exclusive_chain(totals: jax.Array) -> jax.Array:
+    """Sequential exclusive scan of (B, chunks) totals along axis 1.
+
+    Left-to-right ``lax.scan`` — the same association order as the
+    carry kernel's ``carry += total`` update.
+    """
+
+    def step(carry, t):
+        return carry + t, carry
+
+    zero = jnp.zeros_like(totals[:, 0])
+    _, offs = jax.lax.scan(step, zero, jnp.moveaxis(totals, 1, 0))
+    return jnp.moveaxis(offs, 0, 1)
+
+
+def scan_blocked_decoupled(
+    x: jax.Array,
+    *,
+    block_b: int = 8,
+    block_n: int = 2048,
+    exclusive: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decoupled prefix sum along the last axis of a 2D (B, N) array.
+
+    Same caller contract as ``scan_blocked_kernel``: shape divisible by
+    the block; results are bit-identical to the carry schedule.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"kernel expects 2D input, got {x.shape}")
+    B, N = x.shape
+    if B % block_b or N % block_n:
+        raise ValueError(
+            f"shape {x.shape} not divisible by block ({block_b}, {block_n})"
+        )
+    acc_dtype = _accum_dtype(x.dtype)
+    chunks = N // block_n
+    grid = (B // block_b, chunks)
+    xspec = pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))
+    tspec = pl.BlockSpec((block_b, 1), lambda i, j: (i, j))
+
+    totals = pl.pallas_call(
+        functools.partial(_totals_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[xspec],
+        out_specs=tspec,
+        out_shape=jax.ShapeDtypeStruct((B, chunks), acc_dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="scan_blocked_totals",
+    )(x)
+
+    offsets = _exclusive_chain(totals)
+
+    return pl.pallas_call(
+        functools.partial(
+            _scan_kernel, acc_dtype=acc_dtype, exclusive=exclusive
+        ),
+        grid=grid,
+        in_specs=[xspec, tspec],
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="scan_blocked_apply",
+    )(x, offsets)

@@ -1,8 +1,13 @@
-"""Jitted public wrapper for the blocked-scan Pallas kernel.
+"""Jitted public wrapper for the blocked-scan Pallas kernels.
 
 Handles arbitrary ranks/axes, padding to block multiples, dtype policy and
 interpret-mode fallback on CPU. ``in_place=True`` donates the input buffer —
 the paper's in-place variant (§4.2.3) expressed as XLA buffer donation.
+
+Two grid schedules (see ``core/scan/policy`` module doc):
+  * ``schedule="carry"``     — grid-carried total, sequence sequential;
+  * ``schedule="decoupled"`` — reduce-then-scan, sequence parallel;
+  * ``schedule="auto"``      — the policy's batch-vs-cores rule decides.
 """
 
 from __future__ import annotations
@@ -12,18 +17,39 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.scan import policy
+from repro.kernels.scan_blocked.decoupled import scan_blocked_decoupled
 from repro.kernels.scan_blocked.scan_blocked import scan_blocked_kernel
+
+SCHEDULES = ("carry", "decoupled", "auto")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_schedule(schedule: str, batch: int, n: int,
+                     block_elems: int) -> str:
+    """'auto' -> the policy's batch-vs-cores rule; else validate.
+
+    ``block_elems`` is the chunk length the kernel will ACTUALLY tile
+    the scanned axis with — the policy's chunks-per-core test is only
+    meaningful against the real grid.
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+    if schedule == "auto":
+        return policy.choose_schedule(batch, n, block_elems=block_elems)
+    return schedule
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("axis", "exclusive", "block_b", "block_n", "interpret"),
+    static_argnames=("axis", "exclusive", "block_b", "block_n", "interpret",
+                     "schedule"),
 )
-def _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret):
+def _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret, schedule):
     x = jnp.moveaxis(x, axis, -1)
     lead = x.shape[:-1]
     n = x.shape[-1]
@@ -38,7 +64,9 @@ def _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret):
     pad_n = (-n) % bn
     x2 = jnp.pad(x2, ((0, pad_b), (0, pad_n)))
 
-    out = scan_blocked_kernel(
+    kernel = (scan_blocked_decoupled if schedule == "decoupled"
+              else scan_blocked_kernel)
+    out = kernel(
         x2, block_b=bb, block_n=bn, exclusive=exclusive, interpret=interpret
     )
     out = out[:b, :n].reshape(lead + (n,))
@@ -56,11 +84,18 @@ def cumsum(
     block_b: int = 8,
     block_n: int = 2048,
     interpret: "bool | None" = None,
+    schedule: str = "auto",
 ) -> jax.Array:
     """Kernel-backed prefix sum along ``axis`` (any rank).
 
     ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere.
+    ``schedule`` picks the grid organization (carry | decoupled | auto).
     """
     if interpret is None:
         interpret = not _on_tpu()
-    return _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret)
+    n = x.shape[axis]
+    batch = max(x.size // max(n, 1), 1)
+    bn = min(block_n, _round_up(n, 128))  # the block _cumsum_impl uses
+    schedule = resolve_schedule(schedule, batch, n, bn)
+    return _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret,
+                        schedule)

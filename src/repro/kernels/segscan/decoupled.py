@@ -1,0 +1,113 @@
+"""Decoupled reduce-then-scan SEGMENTED prefix sum.
+
+Same two-phase organization as ``kernels/scan_blocked/decoupled.py``
+(paper Observation 3: reduce-first + partitioning), lifted to the
+segmented ``(flag, value)`` monoid:
+
+  pass 1b  parallel grid emits each chunk's monoid total: the pair
+           (any-flag-in-chunk, last element of the in-chunk segmented
+           scan).
+  combine  sequential exclusive chain with the segmented combine —
+           ``c' = f ? v : v + c`` — matching the carry kernel's update
+           order exactly (bit-identical).
+  pass 2   parallel grid redoes the in-chunk segmented scan and applies
+           the incoming carry only to the flag-free prefix.
+
+A flag anywhere in a chunk kills the incoming carry, so the chain is the
+only place chunk order matters — and it runs on the tiny totals array.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_compat import compiler_params
+from repro.kernels.segscan.segscan import _seg_log_scan
+
+
+def _totals_kernel(v_ref, f_ref, tot_v_ref, tot_f_ref, *, acc_dtype):
+    v = v_ref[...].astype(acc_dtype)
+    f = f_ref[...] != 0
+    local_v, local_f = _seg_log_scan(v, f)
+    tot_v_ref[...] = local_v[:, -1:]
+    tot_f_ref[...] = local_f[:, -1:].astype(jnp.int32)
+
+
+def _scan_kernel(v_ref, f_ref, off_ref, o_ref, *, acc_dtype):
+    v = v_ref[...].astype(acc_dtype)
+    f = f_ref[...] != 0
+    local_v, local_f = _seg_log_scan(v, f)
+    carry = off_ref[...]  # (bb, 1): segment value entering the chunk
+    out = jnp.where(local_f, local_v, local_v + carry)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _exclusive_chain(tot_v: jax.Array, tot_f: jax.Array) -> jax.Array:
+    """Exclusive segmented chain over (B, chunks) totals along axis 1."""
+
+    def step(carry, tf):
+        t, f = tf
+        new = jnp.where(f != 0, t, t + carry)
+        return new, carry
+
+    zero = jnp.zeros_like(tot_v[:, 0])
+    _, offs = jax.lax.scan(
+        step, zero,
+        (jnp.moveaxis(tot_v, 1, 0), jnp.moveaxis(tot_f, 1, 0)))
+    return jnp.moveaxis(offs, 0, 1)
+
+
+def segscan_decoupled(
+    values: jax.Array,
+    flags: jax.Array,
+    *,
+    block_b: int = 8,
+    block_n: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decoupled segmented cumsum along the last axis of 2D (B, N) inputs."""
+    if values.shape != flags.shape or values.ndim != 2:
+        raise ValueError(
+            f"expect matching 2D inputs, got {values.shape} {flags.shape}")
+    B, N = values.shape
+    if B % block_b or N % block_n:
+        raise ValueError(
+            f"shape {values.shape} not divisible by ({block_b}, {block_n})")
+    acc_dtype = jnp.float32 if values.dtype in (jnp.bfloat16, jnp.float16) \
+        else values.dtype
+    chunks = N // block_n
+    grid = (B // block_b, chunks)
+    spec = pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))
+    tspec = pl.BlockSpec((block_b, 1), lambda i, j: (i, j))
+    par = compiler_params(dimension_semantics=("parallel", "parallel"))
+
+    tot_v, tot_f = pl.pallas_call(
+        functools.partial(_totals_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[tspec, tspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, chunks), acc_dtype),
+            jax.ShapeDtypeStruct((B, chunks), jnp.int32),
+        ],
+        compiler_params=par,
+        interpret=interpret,
+        name="segscan_totals",
+    )(values, flags)
+
+    offsets = _exclusive_chain(tot_v, tot_f)
+
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[spec, spec, tspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(values.shape, values.dtype),
+        compiler_params=par,
+        interpret=interpret,
+        name="segscan_apply",
+    )(values, flags, offsets)

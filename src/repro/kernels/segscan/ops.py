@@ -1,7 +1,9 @@
-"""Jitted public wrapper for the segmented-scan kernel.
+"""Jitted public wrapper for the segmented-scan kernels.
 
 Pads with identity elements — (value 0, flag 0) extends the final
 segment, which the slice-back removes — and handles arbitrary rank.
+``schedule`` picks the grid organization (see ``core/scan/policy``):
+carry-chain, decoupled reduce-then-scan, or the policy's auto rule.
 """
 
 from __future__ import annotations
@@ -11,6 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.scan_blocked.ops import resolve_schedule
+from repro.kernels.segscan.decoupled import segscan_decoupled
 from repro.kernels.segscan.segscan import segscan_kernel
 
 
@@ -19,8 +23,8 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_n", "interpret"))
-def _impl(values, flags, block_b, block_n, interpret):
+    jax.jit, static_argnames=("block_b", "block_n", "interpret", "schedule"))
+def _impl(values, flags, block_b, block_n, interpret, schedule):
     lead = values.shape[:-1]
     n = values.shape[-1]
     b = 1
@@ -35,8 +39,8 @@ def _impl(values, flags, block_b, block_n, interpret):
     pad_n = (-n) % bn
     v2 = jnp.pad(v2, ((0, pad_b), (0, pad_n)))
     f2 = jnp.pad(f2, ((0, pad_b), (0, pad_n)))
-    out = segscan_kernel(v2, f2, block_b=bb, block_n=bn,
-                         interpret=interpret)
+    kernel = segscan_decoupled if schedule == "decoupled" else segscan_kernel
+    out = kernel(v2, f2, block_b=bb, block_n=bn, interpret=interpret)
     return out[:b, :n].reshape(lead + (n,))
 
 
@@ -46,8 +50,13 @@ def segmented_cumsum(
     block_b: int = 8,
     block_n: int = 2048,
     interpret: "bool | None" = None,
+    schedule: str = "auto",
 ) -> jax.Array:
     """Kernel-backed segmented cumsum along the last axis (any rank)."""
     if interpret is None:
         interpret = not _on_tpu()
-    return _impl(values, flags, block_b, block_n, interpret)
+    n = values.shape[-1]
+    batch = max(values.size // max(n, 1), 1)
+    bn = min(block_n, -(-n // 128) * 128)  # the block _impl uses
+    schedule = resolve_schedule(schedule, batch, n, bn)
+    return _impl(values, flags, block_b, block_n, interpret, schedule)

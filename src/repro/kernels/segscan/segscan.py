@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 
 def _seg_log_scan(v: jax.Array, f: jax.Array):
     """In-block inclusive segmented scan along axis 1 of (bb, bn) tiles."""
@@ -86,7 +88,7 @@ def segscan_kernel(
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(values.shape, values.dtype),
         scratch_shapes=[pltpu.VMEM((block_b, 1), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,113 @@
+"""Decoupled reduce-then-scan AFFINE scan (SSM recurrence) — time across
+cores.
+
+The carry-chain kernel (``ssm_scan.py``) serializes the time axis: grid
+``(B, D-blocks, T-blocks)`` with time ``"arbitrary"``, so a (B=1, huge T)
+decode/prefill recurrence runs on one core. Decoupled organization
+(paper Observation 3, SIMD2-P) over the affine monoid:
+
+  pass 1b  parallel grid emits each time-chunk's composed affine map
+           ``(A, B) = (prod a, cumulative b)`` — the last row of the
+           in-chunk Hillis–Steele pair scan.
+  combine  sequential exclusive chain ``h' = B + A * h`` over the
+           (batch, chunks, D) chunk maps — the same expression order as
+           the carry kernel's state update (bit-identical).
+  pass 2   parallel grid redoes the in-chunk pair scan and fuses the
+           incoming state into the writeback ``h_t = B_t + A_t * h_in``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_compat import compiler_params
+from repro.kernels.ssm_scan.ssm_scan import _affine_log_scan
+
+
+def _totals_kernel(a_ref, b_ref, tot_a_ref, tot_b_ref, *, acc_dtype):
+    a = a_ref[0].astype(acc_dtype)  # (bt, bd)
+    b = b_ref[0].astype(acc_dtype)
+    A, B = _affine_log_scan(a, b, axis=0)
+    tot_a_ref[0] = A[-1:, :]
+    tot_b_ref[0] = B[-1:, :]
+
+
+def _scan_kernel(a_ref, b_ref, h_ref, o_ref, *, acc_dtype):
+    a = a_ref[0].astype(acc_dtype)
+    b = b_ref[0].astype(acc_dtype)
+    A, B = _affine_log_scan(a, b, axis=0)
+    h_in = h_ref[0]  # (1, bd): state entering the chunk
+    o_ref[0] = (B + A * h_in).astype(o_ref.dtype)
+
+
+def _exclusive_chain(tot_a: jax.Array, tot_b: jax.Array) -> jax.Array:
+    """Exclusive affine chain over (B, chunks, D) maps along axis 1."""
+
+    def step(h, ab):
+        a, b = ab
+        return b + a * h, h  # same float-op order as the carry kernel
+
+    zero = jnp.zeros_like(tot_b[:, 0])
+    _, hs = jax.lax.scan(
+        step, zero,
+        (jnp.moveaxis(tot_a, 1, 0), jnp.moveaxis(tot_b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def ssm_scan_decoupled(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_t: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Decoupled affine scan along axis 1 of (B, T, D) inputs.
+
+    Same caller contract as ``ssm_scan_kernel``; bit-identical results.
+    """
+    if a.shape != b.shape or a.ndim != 3:
+        raise ValueError(
+            f"expect matching (B, T, D) inputs, got {a.shape} {b.shape}")
+    B, T, D = a.shape
+    if T % block_t or D % block_d:
+        raise ValueError(f"({T}, {D}) not divisible by ({block_t}, {block_d})")
+    acc_dtype = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.float16) \
+        else a.dtype
+    chunks = T // block_t
+    grid = (B, D // block_d, chunks)
+    spec = pl.BlockSpec((1, block_t, block_d), lambda i, d, t: (i, t, d))
+    tspec = pl.BlockSpec((1, 1, block_d), lambda i, d, t: (i, t, d))
+    par = compiler_params(
+        dimension_semantics=("parallel", "parallel", "parallel"))
+
+    tot_a, tot_b = pl.pallas_call(
+        functools.partial(_totals_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[tspec, tspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, chunks, D), acc_dtype),
+            jax.ShapeDtypeStruct((B, chunks, D), acc_dtype),
+        ],
+        compiler_params=par,
+        interpret=interpret,
+        name="ssm_scan_totals",
+    )(a, b)
+
+    h_in = _exclusive_chain(tot_a, tot_b)
+
+    return pl.pallas_call(
+        functools.partial(_scan_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[spec, spec, tspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, b.dtype),
+        compiler_params=par,
+        interpret=interpret,
+        name="ssm_scan_apply",
+    )(a, b, h_in)

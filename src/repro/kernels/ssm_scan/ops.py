@@ -1,8 +1,13 @@
-"""Jitted public wrapper for the SSM affine-scan kernel.
+"""Jitted public wrapper for the SSM affine-scan kernels.
 
 Pads T to a block multiple with the identity element (a=1, b=0) — identity
 padding keeps the carried state unchanged, so results are exact after the
-slice — and pads D with zeros.
+slice — and pads D with zeros.  ``schedule`` picks the grid organization
+(see ``core/scan/policy``): the carry chain walks time sequentially per
+(batch, channel) stripe; decoupled spreads time chunks across cores —
+the B=1 long-context prefill/decode shape. Channels count as batch for
+the policy rule (they are independent lanes the carry grid already
+parallelizes).
 """
 
 from __future__ import annotations
@@ -12,6 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.scan_blocked.ops import resolve_schedule
+from repro.kernels.ssm_scan.decoupled import ssm_scan_decoupled
 from repro.kernels.ssm_scan.ssm_scan import ssm_scan_kernel
 
 
@@ -20,9 +27,9 @@ def _on_tpu() -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_t", "block_d", "interpret")
+    jax.jit, static_argnames=("block_t", "block_d", "interpret", "schedule")
 )
-def _impl(a, b, block_t, block_d, interpret):
+def _impl(a, b, block_t, block_d, interpret, schedule):
     B, T, D = a.shape
     bt = min(block_t, _round_up(T, 8))
     bd = min(block_d, _round_up(D, 128))
@@ -30,7 +37,8 @@ def _impl(a, b, block_t, block_d, interpret):
     pad_d = (-D) % bd
     a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_d)), constant_values=1)
     b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_d)))
-    out = ssm_scan_kernel(a, b, block_t=bt, block_d=bd, interpret=interpret)
+    kernel = ssm_scan_decoupled if schedule == "decoupled" else ssm_scan_kernel
+    out = kernel(a, b, block_t=bt, block_d=bd, interpret=interpret)
     return out[:, :T, :D]
 
 
@@ -44,8 +52,17 @@ def ssm_scan(
     block_t: int = 256,
     block_d: int = 512,
     interpret: "bool | None" = None,
+    schedule: str = "auto",
 ) -> jax.Array:
     """Kernel-backed h_t = a_t ⊙ h_{t-1} + b_t over (B, T, D)."""
     if interpret is None:
         interpret = not _on_tpu()
-    return _impl(a, b, block_t, block_d, interpret)
+    B, T, D = a.shape
+    # Mirror _impl's actual tiling: the carry grid already parallelizes
+    # (B, D-blocks), so the policy's "batch" is the number of independent
+    # carry chains, and its chunk length is the real time block.
+    bt = min(block_t, _round_up(T, 8))
+    bd = min(block_d, _round_up(D, 128))
+    batch = B * max(-(-D // bd), 1)
+    schedule = resolve_schedule(schedule, batch, T, bt)
+    return _impl(a, b, block_t, block_d, interpret, schedule)

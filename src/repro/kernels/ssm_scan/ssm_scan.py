@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params
+
 
 def _affine_log_scan(a: jax.Array, b: jax.Array, axis: int):
     """In-block inclusive scan of affine pairs (Hillis–Steele, paper §3.1).
@@ -106,7 +108,7 @@ def ssm_scan_kernel(
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(a.shape, b.dtype),
         scratch_shapes=[pltpu.VMEM((1, block_d), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,101 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+The container bakes its dependency set; property tests fall back to a
+deterministic random sweep (seeded per example index) with the same
+`given`/`settings`/`strategies` surface the tests use. Shrinking and
+the database are out of scope — failures report the drawn values.
+
+Registered from conftest.py as `sys.modules["hypothesis"]` ONLY when the
+real package is missing.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def floats(min_value=0.0, max_value=1.0, width=64, **_):
+    def draw(rng):
+        v = float(rng.uniform(min_value, max_value))
+        return float(np.float32(v)) if width == 32 else v
+
+    return _Strategy(draw)
+
+
+def integers(min_value=0, max_value=100):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements, min_size=0, max_size=10, **_):
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(size)]
+
+    return _Strategy(draw)
+
+
+def tuples(*elems):
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def settings(max_examples=20, deadline=None, **_):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*sargs, **skwargs):
+    """Run the test over ``max_examples`` seeded draws.
+
+    Positional strategies bind to the function's last N parameters (the
+    hypothesis convention); keyword strategies bind by name. Remaining
+    parameters stay visible to pytest (fixtures / parametrize).
+    """
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        names = [p.name for p in params]
+        pos_names = names[len(names) - len(sargs):] if sargs else []
+        drawn = dict(zip(pos_names, sargs), **skwargs)
+        passthrough = [p for p in params if p.name not in drawn]
+        n_examples = getattr(fn, "_fallback_max_examples", 20)
+
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            bound = dict(zip([p.name for p in passthrough], args), **kwargs)
+            for i in range(n_examples):
+                rng = np.random.default_rng([0xF411, i])
+                vals = {k: s.example(rng) for k, s in drawn.items()}
+                try:
+                    fn(**bound, **vals)
+                except Exception as e:  # noqa: BLE001 — report the draw
+                    raise AssertionError(
+                        f"falsifying example (draw {i}): {vals!r}") from e
+
+        run.__signature__ = inspect.Signature(passthrough)
+        del run.__wrapped__  # keep pytest off fn's full signature
+        return run
+
+    return deco

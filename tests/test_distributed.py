@@ -18,6 +18,9 @@ def _run(body: str, devices: int = 8, timeout: int = 420):
             "--xla_force_host_platform_device_count={devices}")
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        if not hasattr(jax, "shard_map"):  # jax <= 0.4.37 compat
+            from repro.dist.sharding import shard_map as _sm
+            jax.shard_map = _sm
     """) + textwrap.dedent(body)
     env = dict(os.environ,
                PYTHONPATH=os.path.join(_ROOT, "src"))

@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Repo verification: import-smoke every repro.* module, then the tier-1
+# suite (ROADMAP.md). The smoke catches collection-time breakage —
+# ModuleNotFoundError / API drift in rarely-imported launch modules —
+# in seconds, before the multi-minute test run.
+#
+#   tools/verify.sh            # smoke + tier-1
+#   tools/verify.sh --smoke    # smoke only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== import smoke: every repro.* module =="
+python - <<'EOF'
+import importlib, pkgutil, sys, traceback
+
+import repro  # noqa: F401  (src on PYTHONPATH)
+
+failed = []
+mods = ["repro"]
+for m in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+    mods.append(m.name)
+for name in mods:
+    if name == "repro.launch.dryrun":
+        continue  # sets XLA_FLAGS for 512 host devices on import
+    try:
+        importlib.import_module(name)
+    except Exception:
+        failed.append(name)
+        traceback.print_exc()
+print(f"imported {len(mods) - len(failed)}/{len(mods)} modules")
+# dryrun gets a subprocess so its XLA_FLAGS mutation can't leak here
+import subprocess
+r = subprocess.run(
+    [sys.executable, "-c", "import repro.launch.dryrun"],
+    env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+if r.returncode:
+    failed.append("repro.launch.dryrun")
+if failed:
+    print("FAILED imports:", failed)
+    sys.exit(1)
+EOF
+
+if [[ "${1:-}" == "--smoke" ]]; then
+    exit 0
+fi
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
