@@ -1,0 +1,119 @@
+"""Relational operators on the scan substrate vs reference baselines.
+
+Two tables:
+  * filter selectivity sweep — prefix-sum stream compaction (library
+    scan and fused Pallas kernel paths) against XLA's nonzero-gather,
+    at low/mid/high selectivity (compaction work is selectivity-
+    independent; the gather baseline is not).
+  * sort / join — LSD radix sort (composed prefix-sum partition passes)
+    against ``jnp.sort``/``jnp.argsort``, and the partitioned hash join
+    against a sort-merge expansion, with correctness checked against
+    numpy on every cell.
+
+On the CPU container the Pallas path runs in interpret mode, so
+wall-clock reflects algorithmic structure, not TPU speed. ``smoke=True``
+shrinks every size so ``benchmarks.run --dry-run`` can exercise the
+whole figure in seconds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, throughput, time_fn
+from repro import relational as rel
+
+SELECTIVITIES = (0.01, 0.5, 0.99)
+
+
+def run(smoke: bool = False) -> Table:
+    """Filter (stream compaction) selectivity sweep."""
+    N = 1 << 12 if smoke else 1 << 18
+    t = Table("Relational filter: prefix-sum compaction vs nonzero-gather",
+              ["N", "selectivity", "path", "Melem/s", "ms"])
+    paths = {
+        "scan-ref": jax.jit(functools.partial(
+            rel.filter_compact, algorithm="ref")),
+        "kernel": jax.jit(functools.partial(
+            rel.filter_compact, algorithm="kernel", interpret=True)),
+        "nonzero-gather": jax.jit(
+            lambda v, m: (v[jnp.nonzero(m, size=v.shape[0],
+                                        fill_value=v.shape[0] - 1)[0]],
+                          jnp.sum(m.astype(jnp.int32)))),
+    }
+    for sel in SELECTIVITIES:
+        rng = np.random.default_rng(int(sel * 100))
+        x = jnp.asarray(rng.integers(0, 1 << 20, N), jnp.int32)
+        mask = jnp.asarray(rng.random(N) < sel)
+        want = np.asarray(x)[np.asarray(mask)]
+        for name, fn in paths.items():
+            out, count = fn(x, mask)
+            assert int(count) == len(want), name
+            np.testing.assert_array_equal(
+                np.asarray(out)[: len(want)], want, err_msg=name)
+            sec = time_fn(fn, x, mask, iters=3, warmup=1)
+            t.add(N, sel, name, throughput(N, sec) * 1e3, sec * 1e3)
+    return t
+
+
+def run_sort_join(smoke: bool = False) -> Table:
+    """Radix sort and partitioned hash join vs XLA sort baselines."""
+    N = 1 << 9 if smoke else 1 << 13
+    t = Table("Relational sort/join (prefix-sum partition passes)",
+              ["op", "N", "dtype", "path", "Melem/s", "ms"])
+    for dt, name in ((jnp.int32, "int32"), (jnp.float32, "float32")):
+        rng = np.random.default_rng(7)
+        if name == "int32":
+            x = jnp.asarray(rng.integers(-(1 << 30), 1 << 30, N), dt)
+        else:
+            x = jnp.asarray(rng.standard_normal(N), dt)
+        want = np.sort(np.asarray(x))
+        for path, fn in (("radix_sort", jax.jit(rel.radix_sort)),
+                         ("jnp.sort", jax.jit(jnp.sort))):
+            np.testing.assert_array_equal(np.asarray(fn(x)), want,
+                                          err_msg=path)
+            sec = time_fn(fn, x, iters=3, warmup=1)
+            t.add("sort", N, name, path, throughput(N, sec) * 1e3,
+                  sec * 1e3)
+
+    # Join: key range sized for ~4 matches per probe row.
+    L = R = N
+    rng = np.random.default_rng(11)
+    lk = jnp.asarray(rng.integers(0, max(R // 4, 1), L), jnp.int32)
+    rk = jnp.asarray(rng.integers(0, max(R // 4, 1), R), jnp.int32)
+    res = rel.hash_join(lk, rk)
+    pairs = int(res.count)
+    cap = res.left_index.shape[0]
+
+    def merge_baseline(lk, rk):
+        # sort-merge expansion with the same fixed-size output contract
+        order = jnp.argsort(rk)
+        srk = rk[order]
+        lo = jnp.searchsorted(srk, lk, side="left")
+        hi = jnp.searchsorted(srk, lk, side="right")
+        m = hi - lo
+        off = jnp.cumsum(m) - m
+        p = jnp.arange(cap, dtype=jnp.int32)
+        li = jnp.clip(jnp.searchsorted(off, p, side="right") - 1, 0, L - 1)
+        rs = jnp.clip(lo[li] + (p - off[li]), 0, R - 1)
+        return li, order[rs], off[-1] + m[-1]
+
+    for path, fn in (
+            ("hash_join", jax.jit(functools.partial(
+                rel.hash_join, max_matches=cap))),
+            ("sort-merge", jax.jit(merge_baseline))):
+        got = fn(lk, rk)
+        assert int(got[2]) == pairs, path  # count field in both contracts
+        sec = time_fn(fn, lk, rk, iters=3, warmup=1)
+        t.add("join", N, f"{pairs} pairs", path,
+              throughput(L + R, sec) * 1e3, sec * 1e3)
+    return t
+
+
+if __name__ == "__main__":
+    run().show()
+    run_sort_join().show()

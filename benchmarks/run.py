@@ -2,16 +2,23 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig6 fig10 # subset
+    PYTHONPATH=src python -m benchmarks.run --dry-run  # CI smoke
+
+``--dry-run`` resolves every registered suite (so a renamed or broken
+entry point fails loudly) and executes the figures that support a
+``smoke=True`` shrink at toy sizes, end to end.
 """
 
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 
 from benchmarks import (fig6_single_thread, fig7_traffic, fig8_inplace,
                         fig10_partition_size, fig11_dilation, fig13_policy,
-                        fig_decoupled, moe_dispatch, roofline_table)
+                        fig_decoupled, fig_relational, moe_dispatch,
+                        roofline_table)
 
 SUITES = {
     "fig6": [fig6_single_thread.run],
@@ -23,19 +30,30 @@ SUITES = {
     "fig13": [fig13_policy.run, fig13_policy.run_traffic_model],
     "decoupled": [fig_decoupled.run, fig_decoupled.run_traffic],
     "moe": [moe_dispatch.run],
+    "relational": [fig_relational.run, fig_relational.run_sort_join],
     "roofline": [roofline_table.run],
 }
 
 
 def main(argv=None):
-    names = (argv or sys.argv[1:]) or list(SUITES)
+    names = list(argv if argv is not None else sys.argv[1:])
+    dry_run = "--dry-run" in names
+    if dry_run:
+        names.remove("--dry-run")
+    names = names or list(SUITES)
     t0 = time.time()
     for name in names:
         if name not in SUITES:
             print(f"unknown suite {name!r}; known: {sorted(SUITES)}")
             return 1
         for fn in SUITES[name]:
-            fn().show()
+            if dry_run:
+                if "smoke" in inspect.signature(fn).parameters:
+                    fn(smoke=True).show()
+                else:
+                    print(f"[dry-run] {fn.__module__}.{fn.__name__}: ok")
+            else:
+                fn().show()
     print(f"[benchmarks done in {time.time() - t0:.1f}s]")
     return 0
 

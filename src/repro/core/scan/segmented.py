@@ -63,6 +63,23 @@ class DispatchPlan(NamedTuple):
     dest: jax.Array
 
 
+def _offsets_dtype(total: int):
+    """Offset/rank dtype safe for ``total`` dispatched items.
+
+    int32 covers totals below 2**31 (offsets and dest are bounded by the
+    item count). Beyond that the scan would silently wrap, so we require
+    x64 mode and widen — the join build path (``repro.relational.join``)
+    leans on these offsets for billion-row sides.
+    """
+    if total < 2 ** 31:
+        return jnp.int32
+    if not jax.config.jax_enable_x64:
+        raise OverflowError(
+            f"dispatch over {total} items overflows int32 offsets; "
+            "enable jax_enable_x64 for int64 dispatch")
+    return jnp.int64
+
+
 def dispatch_offsets(expert_ids: jax.Array, num_experts: int) -> DispatchPlan:
     """Compute partitioning offsets for tokens → experts via prefix sums.
 
@@ -76,7 +93,8 @@ def dispatch_offsets(expert_ids: jax.Array, num_experts: int) -> DispatchPlan:
       expert_ids: (T,) int32 expert assignment per token (already flattened
         over top-k: a token chosen by k experts appears k times upstream).
     """
-    onehot = jax.nn.one_hot(expert_ids, num_experts, dtype=jnp.int32)  # (T, E)
+    dt = _offsets_dtype(expert_ids.shape[0])
+    onehot = jax.nn.one_hot(expert_ids, num_experts, dtype=dt)  # (T, E)
     # Exclusive scan over tokens — per-expert running counts before me.
     running = reference.scan_ref(onehot, "sum", axis=0, exclusive=True)
     ranks = jnp.take_along_axis(

@@ -29,12 +29,18 @@ def packing_offsets(lengths: jax.Array, row_len: int):
     Implemented with the scan substrate (no Python loop over docs): the
     next-fit row assignment is itself computed by scanning the lengths
     with an affine-with-reset style recurrence expressed via lax.scan.
+
+    Zero-length documents are tolerated: they never advance the packing
+    state (no phantom row opens, later documents land exactly where they
+    would without the empty entry) and are assigned the current cursor
+    as a placeholder — callers must mask token writes by ``length > 0``
+    (``pack_documents`` does, via its ``valid`` mask).
     """
     lengths = lengths.astype(jnp.int32)
 
     def step(carry, ln):
         row, col = carry
-        overflow = col + ln > row_len
+        overflow = (ln > 0) & (col + ln > row_len)
         row = jnp.where(overflow, row + 1, row)
         start = jnp.where(overflow, 0, col)
         return (row, start + ln), (row, start)
@@ -74,6 +80,12 @@ def pack_documents(docs: jax.Array, lengths: jax.Array, row_len: int,
 
 
 def segment_starts_to_ids(starts: jax.Array) -> jax.Array:
-    """Begin-flags -> 1-based segment ids via inclusive cumsum (scan API)."""
-    return scanlib.cumsum(starts.astype(jnp.int32), axis=-1,
-                          algorithm="blocked")
+    """Begin-flags -> 1-based segment ids via inclusive cumsum (scan API).
+
+    Flags are clamped to 0/1 first: a slot where several documents
+    "start" because zero-length entries collapsed onto it (scatter-add
+    producing a flag of 2+) still begins exactly ONE segment — without
+    the clamp the cumsum would skip ids, emitting phantom segments.
+    """
+    flags = (starts != 0).astype(jnp.int32)
+    return scanlib.cumsum(flags, axis=-1, algorithm="blocked")

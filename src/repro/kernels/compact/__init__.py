@@ -1,0 +1,3 @@
+from repro.kernels.compact.ops import mask_compact
+
+__all__ = ["mask_compact"]

@@ -1,0 +1,107 @@
+"""Fused Pallas stream-compaction kernel: keep-mask -> scatter destinations.
+
+Stream compaction (filter) is the paper's §1 database use case: the new
+index of every surviving element is the exclusive prefix sum of the
+keep-mask at its position. This kernel computes those indices with the
+PR-1 *decoupled reduce-then-scan* schedule (see
+``kernels/scan_blocked/decoupled.py``) applied to the mask scan:
+
+  pass 1b  fully parallel grid over (row-block, chunk): each instance
+           reduces its mask chunk to a survivor COUNT (via the same
+           in-block scan network as the cumsum kernels, so the
+           association order matches the carry chain exactly).
+  combine  a tiny sequential exclusive scan over the (B, chunks) counts
+           — each chunk's base write offset.
+  pass 2   fully parallel grid: redo the in-chunk exclusive mask scan,
+           add the chunk offset, and FUSE the predicate select into the
+           writeback: surviving lanes emit their global destination,
+           dropped lanes emit the sentinel. The output feeds an XLA
+           scatter directly — no separate where/select pass over n.
+
+Both grids are ``("parallel", "parallel")``: a single long mask row
+spreads across every core, exactly like the decoupled cumsum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.pallas_compat import compiler_params
+from repro.kernels.scan_blocked.decoupled import _exclusive_chain
+from repro.kernels.scan_blocked.scan_blocked import _inblock_scan
+
+
+def _totals_kernel(m_ref, tot_ref):
+    """Pass 1b: survivors per chunk, via the in-block scan's last column."""
+    m = m_ref[...].astype(jnp.int32)
+    tot_ref[...] = _inblock_scan(m)[:, -1:]
+
+
+def _dest_kernel(m_ref, off_ref, dest_ref, *, sentinel):
+    """Pass 2: exclusive in-chunk mask scan + chunk offset + fused select."""
+    m = m_ref[...].astype(jnp.int32)
+    inc = _inblock_scan(m)
+    dest = inc - m + off_ref[...]  # exclusive scan of a 0/1 mask, offset
+    dest_ref[...] = jnp.where(m != 0, dest, sentinel)
+
+
+def mask_compact_kernel(
+    mask: jax.Array,
+    *,
+    block_b: int = 8,
+    block_n: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter destinations for a 2D (B, N) 0/1 mask.
+
+    Returns ``(dest, counts)``: ``dest[b, i]`` is the compacted write
+    index of element ``i`` when kept and the sentinel ``N`` when dropped;
+    ``counts[b]`` is the number of survivors per row. Same caller
+    contract as the cumsum kernels: shape divisible by the block.
+    """
+    if mask.ndim != 2:
+        raise ValueError(f"kernel expects 2D input, got {mask.shape}")
+    B, N = mask.shape
+    if B % block_b or N % block_n:
+        raise ValueError(
+            f"shape {mask.shape} not divisible by block ({block_b}, {block_n})"
+        )
+    mask = mask.astype(jnp.int32)
+    chunks = N // block_n
+    grid = (B // block_b, chunks)
+    mspec = pl.BlockSpec((block_b, block_n), lambda i, j: (i, j))
+    tspec = pl.BlockSpec((block_b, 1), lambda i, j: (i, j))
+
+    totals = pl.pallas_call(
+        _totals_kernel,
+        grid=grid,
+        in_specs=[mspec],
+        out_specs=tspec,
+        out_shape=jax.ShapeDtypeStruct((B, chunks), jnp.int32),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="mask_compact_totals",
+    )(mask)
+
+    offsets = _exclusive_chain(totals)
+    counts = offsets[:, -1] + totals[:, -1]
+
+    dest = pl.pallas_call(
+        functools.partial(_dest_kernel, sentinel=N),
+        grid=grid,
+        in_specs=[mspec, tspec],
+        out_specs=mspec,
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+        name="mask_compact_dest",
+    )(mask, offsets)
+    return dest, counts

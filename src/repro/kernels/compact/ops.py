@@ -1,0 +1,67 @@
+"""Jitted public wrapper for the stream-compaction kernel.
+
+Handles arbitrary ranks (last-axis semantics like the cumsum wrappers),
+padding to block multiples — padded positions carry mask 0, so they can
+never emit a phantom destination — and interpret-mode fallback off TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compact.compact import mask_compact_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_n", "interpret"))
+def _impl(mask, block_b, block_n, interpret):
+    lead = mask.shape[:-1]
+    n = mask.shape[-1]
+    b = 1
+    for d in lead:
+        b *= d
+    m2 = mask.reshape(b, n).astype(jnp.int32)
+
+    bb = min(block_b, b) if b % min(block_b, b) == 0 else 1
+    bn = min(block_n, _round_up(n, 128))
+    pad_n = (-n) % bn
+    m2 = jnp.pad(m2, ((0, 0), (0, pad_n)))  # padded mask is 0: no phantoms
+
+    dest, counts = mask_compact_kernel(
+        m2, block_b=bb, block_n=bn, interpret=interpret)
+    # Kernel sentinel is the PADDED length; remap to the caller's n so a
+    # size-(n+1) scatter buffer parks every dropped element at index n.
+    dest = jnp.minimum(dest[:, :n], n)
+    return dest.reshape(lead + (n,)), counts.reshape(lead)
+
+
+def mask_compact(
+    mask: jax.Array,
+    *,
+    block_b: int = 8,
+    block_n: int = 2048,
+    interpret: "bool | None" = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Kernel-backed compaction indices along the last axis (any rank).
+
+    Returns ``(dest, counts)`` with ``dest[..., i]`` the compacted write
+    index where ``mask`` is nonzero and ``n`` (the axis length) where it
+    is zero; ``counts[...]`` is the survivor count per row.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if mask.size == 0:  # zero-length axis OR zero-sized batch
+        return (jnp.zeros(mask.shape, jnp.int32),
+                jnp.zeros(mask.shape[:-1], jnp.int32))
+    return _impl(mask, block_b, block_n, interpret)

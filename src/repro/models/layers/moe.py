@@ -2,8 +2,9 @@
 
 This is the paper's §1 database use case embedded in an LM: partitioning
 tokens by expert is a radix-partitioning step whose write offsets come from
-an exclusive prefix sum over the expert histogram
-(`repro.core.scan.dispatch_offsets`):
+an exclusive prefix sum over the expert histogram — the relational
+subsystem's stable partition (`repro.relational.partition`), with experts
+playing the role of radix buckets:
 
     counts[e]  = histogram of routed tokens            (paper: histogram)
     offsets[e] = exclusive_scan(counts)                (paper: prefix sum)
@@ -24,11 +25,11 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import scan as scanlib
 from repro.dist import shard
 from repro.dist.sharding import current_mesh
 from repro.models.config import ModelConfig
 from repro.models.layers.common import activation, compute_dtype, dense_init
+from repro.relational.partition import partition_plan
 
 
 class MoEAux(NamedTuple):
@@ -107,7 +108,7 @@ def apply_moe(params, x, cfg: ModelConfig):
 
     # --- prefix-sum partitioning per shard (paper's offsets use case) ---
     flat_ids = expert_ids.reshape(G, TL * K)
-    plan = jax.vmap(lambda ids: scanlib.dispatch_offsets(ids, E))(flat_ids)
+    plan = jax.vmap(lambda ids: partition_plan(ids, E))(flat_ids)
     C = _capacity(TL, cfg)
     keep = plan.ranks < C                       # (G, TL*K)
     slot = jnp.where(keep, flat_ids * C + plan.ranks, E * C)

@@ -1,0 +1,31 @@
+"""Relational operators where every data movement is a prefix sum.
+
+The source paper motivates prefix sums as "a building block of many
+important operators including join, sort and filter queries"; this
+package is that claim as a library, layered on ``repro.core.scan``:
+
+  compact.py    filter / stream compaction — mask cumsum -> gather
+                (fused Pallas kernel in ``repro.kernels.compact``)
+  partition.py  stable radix partition — histogram + exclusive-cumsum
+                offsets (the MoE dispatch machinery, generalized)
+  sort.py       LSD radix sort — composed partition passes
+  groupby.py    group-by aggregate — partition/sort + segmented scan
+  join.py       partitioned equi-join — scan-built build/probe offsets
+
+Load-bearing consumers: ``models/layers/moe.py`` (expert dispatch via
+``partition``) and ``serve/engine.py`` (slot compaction via ``compact``).
+"""
+
+from repro.relational.compact import (compact_indices, filter_compact,
+                                      mask_ranks)
+from repro.relational.groupby import group_by, group_by_sorted
+from repro.relational.join import JoinResult, hash_join
+from repro.relational.partition import (PartitionPlan, partition_plan,
+                                        radix_partition)
+from repro.relational.sort import argsort, radix_sort
+
+__all__ = [
+    "JoinResult", "PartitionPlan", "argsort", "compact_indices",
+    "filter_compact", "group_by", "group_by_sorted", "hash_join",
+    "mask_ranks", "partition_plan", "radix_partition", "radix_sort",
+]

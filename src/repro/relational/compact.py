@@ -1,0 +1,99 @@
+"""Stream compaction (filter): predicate -> mask cumsum -> gather.
+
+The paper's §1 filter use case as a library operator: every surviving
+element's new index is the exclusive prefix sum of the keep-mask — a
+scan over ``repro.core.scan`` (reference path) or the fused Pallas
+kernel in ``repro.kernels.compact`` (decoupled reduce-then-scan mask
+scan with the predicate select fused into the writeback).
+
+Outputs are fixed-size (jit-friendly): ``filter_compact`` returns a
+``size``-length buffer plus the live count, with dropped positions
+holding ``fill_value``. The serve engine's slot admission runs on these
+primitives (``serve/engine.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan as scanlib
+
+_ALGORITHMS = ("auto", "ref", "kernel")
+
+
+def _resolve(algorithm: str) -> str:
+    if algorithm not in _ALGORITHMS:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; one of {_ALGORITHMS}")
+    if algorithm == "auto":
+        # The fused kernel wins on TPU; off-TPU it would run the Pallas
+        # interpreter, so the library scan is the sane default.
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return algorithm
+
+
+def mask_ranks(mask: jax.Array, *, algorithm: str = "auto",
+               interpret: "bool | None" = None) -> jax.Array:
+    """Exclusive prefix sum of a (T,) keep-mask: each position's compacted
+    rank (defined for dropped positions too — the running survivor count).
+    """
+    m = (jnp.asarray(mask) != 0).astype(jnp.int32)
+    if m.shape[0] == 0:
+        return m
+    if _resolve(algorithm) == "kernel":
+        from repro.kernels.scan_blocked import ops as sb_ops
+        return sb_ops.cumsum(m, exclusive=True, interpret=interpret,
+                             schedule="decoupled")
+    return scanlib.cumsum(m, exclusive=True, algorithm="blocked")
+
+
+def compact_indices(mask: jax.Array, *, algorithm: str = "auto",
+                    interpret: "bool | None" = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Scatter destinations for a (T,) keep-mask.
+
+    Returns ``(dest, count)``: ``dest[i]`` is the compacted write index
+    where ``mask[i]`` holds and the sentinel ``T`` where it doesn't;
+    ``count`` is the number of survivors. Both come from one mask scan.
+    """
+    m = (jnp.asarray(mask) != 0)
+    T = m.shape[0]
+    if T == 0:
+        return jnp.zeros((0,), jnp.int32), jnp.zeros((), jnp.int32)
+    if _resolve(algorithm) == "kernel":
+        from repro.kernels.compact import ops as kc_ops
+        return kc_ops.mask_compact(m, interpret=interpret)
+    ranks = mask_ranks(m, algorithm="ref")
+    count = ranks[-1] + m[-1].astype(jnp.int32)
+    return jnp.where(m, ranks, T).astype(jnp.int32), count
+
+
+def filter_compact(values: jax.Array, mask: jax.Array, *,
+                   size: "int | None" = None, fill_value=0,
+                   algorithm: str = "auto",
+                   interpret: "bool | None" = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Keep ``values`` rows where ``mask`` holds, packed to the front.
+
+    ``values`` is (T, ...) with a (T,) ``mask``. Returns ``(out, count)``
+    where ``out`` has leading length ``size`` (default T): the first
+    ``count`` rows are the survivors in input order (bit-identical to
+    ``values[mask]``), the rest hold ``fill_value``. Survivors ranked
+    beyond ``size`` are dropped (``count`` still reports the true total).
+    """
+    values = jnp.asarray(values)
+    mask = jnp.asarray(mask)
+    if values.shape[:1] != mask.shape:
+        raise ValueError(
+            f"values leading axis {values.shape[:1]} != mask {mask.shape}")
+    T = mask.shape[0]
+    cap = T if size is None else int(size)
+    dest, count = compact_indices(mask, algorithm=algorithm,
+                                  interpret=interpret)
+    # Park dropped elements (sentinel T) and over-capacity survivors at
+    # index `cap` — min(cap, T) catches the sentinel when cap > T too.
+    dest = jnp.where(dest >= min(cap, T), cap, dest)
+    buf = jnp.full((cap + 1,) + values.shape[1:], fill_value, values.dtype)
+    buf = buf.at[dest].set(values)
+    return buf[:cap], count

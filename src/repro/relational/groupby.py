@@ -1,0 +1,117 @@
+"""Group-by aggregation over the segmented-scan substrate.
+
+Two shapes of the classic sort-or-partition group-by:
+
+  * ``group_by``        — group ids already dense in [0, G): one stable
+    prefix-sum partition brings each group contiguous, segment start
+    flags come from the partition offsets, a segmented scan
+    (``core.scan.segmented``) folds each run, and the run's last element
+    is the aggregate. Matches ``jax.ops.segment_sum`` semantics
+    (identity for empty groups).
+  * ``group_by_sorted`` — keys pre-sorted but arbitrary-valued: segment
+    boundaries are key changes, aggregates sit at segment ends, and the
+    (unique key, aggregate) pairs are packed with ``filter_compact`` —
+    compaction and group-by from the same scan toolbox.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import assoc
+from repro.core.scan import segmented as _segmented
+from repro.relational.compact import filter_compact
+from repro.relational.partition import partition_plan
+
+_AGGS = ("sum", "prod", "max", "min", "count", "mean")
+
+
+def _identity_result(agg: str, shape, dtype):
+    if agg == "count":
+        return jnp.zeros(shape, jnp.int32)
+    base = jnp.zeros(shape, dtype)
+    if agg in ("sum", "mean"):
+        return base
+    return assoc.get(agg).identity_like(base)
+
+
+def group_by(group_ids: jax.Array, values: jax.Array, num_groups: int,
+             agg: str = "sum") -> jax.Array:
+    """Per-group aggregate of (T, ...) ``values`` by (T,) dense ids.
+
+    Returns a (num_groups, ...) array; empty groups hold the aggregate's
+    identity (0 for sum/mean/count, the monoid identity otherwise) —
+    ``group_by(ids, v, G, "sum")`` equals ``jax.ops.segment_sum(v, ids,
+    num_segments=G)`` bit-exactly for integer values.
+    """
+    if agg not in _AGGS:
+        raise ValueError(f"unknown agg {agg!r}; one of {_AGGS}")
+    group_ids = jnp.asarray(group_ids)
+    values = jnp.asarray(values)
+    T = group_ids.shape[0]
+    if agg == "count":  # (num_groups,) regardless of value dims
+        if T == 0:
+            return jnp.zeros((num_groups,), jnp.int32)
+        return partition_plan(group_ids, num_groups).counts.astype(jnp.int32)
+    out_shape = (num_groups,) + values.shape[1:]
+    if T == 0:
+        return _identity_result(agg, out_shape, values.dtype)
+
+    plan = partition_plan(group_ids, num_groups)
+
+    sv = jnp.zeros_like(values).at[plan.dest].set(values)
+    # Segment start flags from the partition offsets: every non-empty
+    # group's base offset begins a run (empty groups collapse onto the
+    # next group's offset — `set` keeps the flag at 1, no phantom runs).
+    flags = jnp.zeros((T + 1,), jnp.int32).at[plan.offsets].set(1)[:T]
+    op = "sum" if agg == "mean" else agg
+    seg = _segmented.segmented_scan(sv, flags, op=op, axis=0)
+    ends = jnp.clip(plan.offsets + plan.counts - 1, 0, T - 1)
+    gathered = seg[ends]  # (G, ...) — last element of each run
+    nonempty = (plan.counts > 0).reshape(
+        (num_groups,) + (1,) * (gathered.ndim - 1))
+    ident = _identity_result(agg, out_shape, values.dtype)
+    out = jnp.where(nonempty, gathered, ident)
+    if agg == "mean":
+        denom = jnp.maximum(plan.counts, 1).reshape(nonempty.shape)
+        rdt = (out.dtype if jnp.issubdtype(out.dtype, jnp.floating)
+               else jnp.float32)
+        out = out.astype(rdt) / denom.astype(rdt)
+    return out
+
+
+def group_by_sorted(keys: jax.Array, values: jax.Array, agg: str = "sum"
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Aggregate runs of equal ``keys`` (pre-sorted, any values).
+
+    Returns ``(unique_keys, aggregates, num_groups)`` — fixed-size (T,)
+    buffers whose first ``num_groups`` rows are live, packed via
+    ``filter_compact`` on the segment-end mask.
+    """
+    if agg not in _AGGS:
+        raise ValueError(f"unknown agg {agg!r}; one of {_AGGS}")
+    keys = jnp.asarray(keys)
+    values = jnp.asarray(values)
+    T = keys.shape[0]
+    if T == 0:
+        return keys, values, jnp.zeros((), jnp.int32)
+
+    starts = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (keys[1:] != keys[:-1]).astype(jnp.int32)])
+    ends_mask = jnp.concatenate(
+        [starts[1:] != 0, jnp.ones((1,), bool)])
+    if agg == "count":
+        seg = _segmented.segmented_scan(
+            jnp.ones((T,), jnp.int32), starts, op="sum", axis=0)
+    elif agg == "mean":
+        seg = _segmented.segmented_scan(values, starts, op="sum", axis=0)
+        cnt = _segmented.segmented_scan(
+            jnp.ones((T,), jnp.int32), starts, op="sum", axis=0)
+        seg = seg / cnt.astype(seg.dtype)
+    else:
+        seg = _segmented.segmented_scan(values, starts, op=agg, axis=0)
+    uniq, count = filter_compact(keys, ends_mask)
+    aggs, _ = filter_compact(seg, ends_mask)
+    return uniq, aggs, count

@@ -1,0 +1,130 @@
+"""Partitioned equi-join with prefix-sum build and probe offsets.
+
+The radix-join structure (Manegold/Boncz; Satish et al. are the paper's
+citation for the same prefix-sum pattern on GPUs):
+
+  build  the right (build) side is brought to bucket-contiguous order by
+         LSD radix passes — each pass a stable prefix-sum partition
+         (``relational.sort`` over ``relational.partition``), exactly the
+         ``dispatch_offsets`` histogram + exclusive-cumsum machinery.
+  probe  each left row binary-searches its key's run in the partitioned
+         build side; its match COUNT feeds an exclusive prefix sum that
+         assigns every (left, right) output pair a unique slot — the
+         paper's "new index values" once more, now over the result set.
+
+Output is fixed-size and jit-friendly: index pairs padded with -1 plus
+the live pair count. ``max_matches=None`` sizes the output exactly by
+materializing the count (eager only); under ``jit`` pass a static cap.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scan as scanlib
+from repro.relational.sort import _sortable_bits, radix_sort
+
+
+class JoinResult(NamedTuple):
+    """Matching row-index pairs of an inner equi-join.
+
+    Attributes:
+      left_index: (M,) int32 row into the left table, -1 past ``count``.
+      right_index: (M,) int32 row into the right table, -1 past ``count``.
+      count: () integer number of live pairs (may exceed M if the cap
+        was too small; pairs beyond the cap are dropped). int32, or
+        int64 under x64.
+    """
+
+    left_index: jax.Array
+    right_index: jax.Array
+    count: jax.Array
+
+
+def hash_join(left_keys: jax.Array, right_keys: jax.Array, *,
+              max_matches: "int | None" = None) -> JoinResult:
+    """Inner equi-join of two (L,) / (R,) key columns.
+
+    Pairs are emitted grouped by left row (left rows in input order;
+    within a row, right matches in build-side sorted order).
+    """
+    left_keys = jnp.asarray(left_keys)
+    right_keys = jnp.asarray(right_keys)
+    if left_keys.dtype != right_keys.dtype:
+        raise TypeError(
+            f"hash_join key dtypes must match: {left_keys.dtype} vs "
+            f"{right_keys.dtype}")
+    L, R = left_keys.shape[0], right_keys.shape[0]
+    if L == 0 or R == 0:
+        M = 0 if max_matches is None else int(max_matches)
+        pad = jnp.full((M,), -1, jnp.int32)
+        return JoinResult(pad, pad, jnp.zeros((), jnp.int32))
+
+    lnan = None
+    if jnp.issubdtype(left_keys.dtype, jnp.floating):
+        # Join floats in the monotone bit domain: a TOTAL order, so the
+        # binary search stays valid even with NaN build keys (raw floats
+        # are not sorted under < once a negative-sign NaN lands before
+        # -inf). Signed zeros collapse (-0.0 == +0.0 must match); NaN
+        # probe rows match nothing (NaN != NaN), enforced below.
+        lnan = jnp.isnan(left_keys)
+        rnan = jnp.isnan(right_keys)
+        lc = jnp.where(left_keys == 0, jnp.zeros_like(left_keys), left_keys)
+        rc = jnp.where(right_keys == 0, jnp.zeros_like(right_keys),
+                       right_keys)
+        left_keys, _ = _sortable_bits(lc)
+        right_keys, _ = _sortable_bits(rc)
+        # distinct build-NaN payloads could alias a probe bit pattern
+        # only if the probe is NaN too — suppressed via lnan; park build
+        # NaNs at the domain top so they cluster past every real key
+        top = jnp.iinfo(right_keys.dtype).max  # no non-NaN key maps here
+        right_keys = jnp.where(rnan, jnp.full_like(right_keys, top),
+                               right_keys)
+
+    # Build: partition the right side to sorted order (radix passes).
+    rk, rperm = radix_sort(right_keys, jnp.arange(R, dtype=jnp.int32))
+    lo = jnp.searchsorted(rk, left_keys, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(rk, left_keys, side="right").astype(jnp.int32)
+    if lnan is not None:
+        hi = jnp.where(lnan, lo, hi)  # NaN probes match nothing
+
+    # Probe offsets: exclusive prefix sum of per-row match counts —
+    # accumulated in int64 under x64 (see segmented._offsets_dtype);
+    # in int32 mode an overflowing eager join raises instead of wrapping.
+    acc_dt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    m = (hi - lo).astype(acc_dt)
+    off = scanlib.cumsum(m, exclusive=True, algorithm="blocked")
+    total = off[-1] + m[-1]
+
+    if max_matches is None:
+        # Exact host-side recount: int32 accumulation wraps mod 2^32, so
+        # both negative AND positive-wrapped totals are caught.
+        exact = int(np.sum(np.asarray(m), dtype=np.int64))
+        if exact != int(total):
+            raise OverflowError(
+                "join result exceeds int32 pair offsets; enable "
+                "jax_enable_x64 for int64 accumulation")
+        M = exact
+    else:
+        M = int(max_matches)
+    if M == 0:
+        pad = jnp.zeros((0,), jnp.int32)
+        return JoinResult(pad, pad, total)
+
+    # Expand: output slot p belongs to the last left row whose offset is
+    # <= p (right-bisect skips rows with zero matches), at match number
+    # p - off[row] within that row's [lo, hi) run.
+    p = jnp.arange(M, dtype=jnp.int32)
+    li = jnp.clip(
+        jnp.searchsorted(off, p, side="right").astype(jnp.int32) - 1,
+        0, L - 1)
+    j = p - off[li]
+    rs = jnp.clip(lo[li] + j, 0, R - 1)
+    valid = p < total
+    lidx = jnp.where(valid, li, -1)
+    ridx = jnp.where(valid, rperm[rs], -1)
+    return JoinResult(lidx, ridx, total)

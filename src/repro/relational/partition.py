@@ -1,0 +1,52 @@
+"""Stable radix partition: histogram + exclusive-cumsum offsets + scatter.
+
+The paper's §1 partitioning step ("prefix sums are computed from a
+previously constructed histogram ... and then used as the new index
+values") applied to table data: elements are binned by a bucket id, each
+bucket's base write offset is the exclusive prefix sum of the histogram,
+and each element's slot within its bucket is its running per-bucket rank
+(a segmented/one-hot scan). All of it runs on the scan substrate via
+``repro.core.scan.segmented.dispatch_offsets``; MoE expert dispatch
+(``models/layers/moe.py``) routes through here, with experts playing the
+role of radix buckets.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import segmented as _segmented
+
+# Same fields, relational-facing name: counts (histogram), offsets
+# (exclusive scan = bucket base), ranks (within-bucket slot), dest
+# (offsets[bucket] + rank — the paper's "new index values").
+PartitionPlan = _segmented.DispatchPlan
+
+
+def partition_plan(bucket_ids: jax.Array, num_buckets: int) -> PartitionPlan:
+    """Prefix-sum partitioning plan for (T,) int bucket ids.
+
+    ``plan.dest`` is a stable permutation of [0, T): elements keep their
+    input order within each bucket (the property LSD radix sort rests on).
+    """
+    return _segmented.dispatch_offsets(bucket_ids, num_buckets)
+
+
+def apply_plan(plan: PartitionPlan, *arrays: jax.Array) -> tuple:
+    """Scatter each (T, ...) array to its partitioned order via ``dest``."""
+    return tuple(
+        jnp.zeros_like(a).at[plan.dest].set(a) for a in arrays)
+
+
+def radix_partition(bucket_ids: jax.Array, num_buckets: int,
+                    *payload: jax.Array):
+    """Stably reorder data so bucket ``b`` occupies
+    ``[offsets[b], offsets[b] + counts[b])``.
+
+    Returns ``(plan, partitioned_ids, *partitioned_payload)``.
+    """
+    bucket_ids = jnp.asarray(bucket_ids)
+    plan = partition_plan(bucket_ids, num_buckets)
+    outs = apply_plan(plan, bucket_ids, *map(jnp.asarray, payload))
+    return (plan,) + outs

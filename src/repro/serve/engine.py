@@ -3,8 +3,9 @@
 vLLM-style scheduling reduced to its JAX-native core: a fixed decode batch
 of ``max_slots`` sequences; finished sequences free their slot; waiting
 requests are admitted by prefilling into the freed slot. Slot bookkeeping
-(free-slot compaction) is an exclusive prefix sum over the free bitmap —
-the paper's stream-compaction use case running the engine.
+(free-slot compaction) routes through ``repro.relational.compact`` — an
+exclusive prefix sum over the free bitmap packs the free slot ids to the
+front, the paper's stream-compaction use case running the engine.
 
 The decode step is ONE jitted call for the whole pool (padded, masked);
 prefill is a second jitted call per admitted request batch. Caches are
@@ -20,8 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import scan as scanlib
 from repro.models.config import ModelConfig
+from repro.relational import compact as rel_compact
 from repro.serve.sampling import sample_logits
 from repro.serve.steps import init_cache_for, make_prefill_fn, make_serve_step
 
@@ -70,12 +71,17 @@ class Engine:
     # -- slot bookkeeping (scan-based compaction) -----------------------
     def _free_slots(self) -> np.ndarray:
         free = np.array([r is None for r in self.slot_req], np.int32)
-        # Exclusive prefix sum of the free bitmap = compacted rank of each
-        # free slot (paper §1: "new offsets during a partitioning step").
-        ranks = np.asarray(
-            scanlib.cumsum(jnp.asarray(free), exclusive=True,
-                           algorithm="blocked"))
-        return np.where(free)[0], ranks
+        # Stream compaction over the free bitmap (paper §1: "new offsets
+        # during a partitioning step"): ONE mask scan inside
+        # filter_compact packs the free slot ids to the front. The
+        # per-slot ranks are part of the bookkeeping contract (see
+        # test_free_slot_compaction_ranks); the host cumsum avoids a
+        # second device scan for them.
+        slots, count = rel_compact.filter_compact(
+            jnp.arange(free.size, dtype=jnp.int32),
+            jnp.asarray(free, bool))
+        ranks = np.cumsum(free) - free
+        return np.asarray(slots)[: int(count)], ranks
 
     # -- admission ------------------------------------------------------
     def submit(self, req: Request) -> None:

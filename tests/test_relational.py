@@ -1,0 +1,359 @@
+"""Relational operator subsystem: reference-semantics property tests.
+
+Every operator is checked against its ground truth: ``filter_compact``
+vs boolean-mask indexing, ``radix_sort`` vs ``jnp.sort``/stable
+``np.argsort``, ``group_by`` vs ``jax.ops.segment_sum``/numpy folds,
+``hash_join`` vs the nested-loop join — across dtypes and the
+empty / all-true / all-false predicate edges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import relational as rel
+
+KEY_DTYPES = ("int32", "int16", "uint8", "uint32", "float32", "float16",
+              "bool")
+
+
+def _draw_keys(rng, dtype, n):
+    if dtype == "bool":
+        return rng.integers(0, 2, n).astype(bool)
+    dt = np.dtype(dtype)
+    if dt.kind == "f":
+        vals = rng.standard_normal(n) * 100
+        return vals.astype(dt)
+    info = np.iinfo(dt)
+    return rng.integers(info.min, int(info.max) + 1, n).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# filter / stream compaction
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.booleans(), min_size=0, max_size=300))
+@settings(max_examples=30, deadline=None)
+def test_filter_compact_matches_boolean_mask(mask):
+    mask = np.asarray(mask, bool)
+    T = len(mask)
+    values = np.arange(10, 10 + T, dtype=np.int32)
+    out, count = rel.filter_compact(jnp.asarray(values), jnp.asarray(mask))
+    want = values[mask]
+    assert int(count) == len(want)
+    assert out.shape == (T,)
+    np.testing.assert_array_equal(np.asarray(out)[: len(want)], want)
+    np.testing.assert_array_equal(np.asarray(out)[len(want):], 0)
+
+
+@pytest.mark.parametrize("predicate", ["empty", "all_true", "all_false"])
+def test_filter_compact_predicate_edges(predicate):
+    T = 0 if predicate == "empty" else 64
+    mask = jnp.full((T,), predicate == "all_true", bool)
+    values = jnp.arange(T, dtype=jnp.int32)
+    for algorithm in ("ref", "kernel"):
+        out, count = rel.filter_compact(values, mask, algorithm=algorithm,
+                                        interpret=True)
+        want = np.asarray(values)[np.asarray(mask)]
+        assert int(count) == len(want), (predicate, algorithm)
+        np.testing.assert_array_equal(np.asarray(out)[: len(want)], want)
+
+
+@given(st.integers(1, 400), st.floats(0.0, 1.0))
+@settings(max_examples=10, deadline=None)
+def test_compact_kernel_matches_ref(n, sel):
+    """Fused Pallas kernel (decoupled mask scan) == library scan path."""
+    rng = np.random.default_rng(n)
+    mask = jnp.asarray(rng.random(n) < sel)
+    dest_r, count_r = rel.compact_indices(mask, algorithm="ref")
+    dest_k, count_k = rel.compact_indices(mask, algorithm="kernel",
+                                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(dest_k), np.asarray(dest_r))
+    assert int(count_k) == int(count_r)
+
+
+def test_filter_compact_capacity_and_fill():
+    values = jnp.arange(8, dtype=jnp.int32)
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], bool)
+    out, count = rel.filter_compact(values, mask, size=3, fill_value=-7)
+    assert int(count) == 6  # true survivor count, beyond the cap
+    np.testing.assert_array_equal(np.asarray(out), [0, 2, 3])
+    out2, _ = rel.filter_compact(values, mask, size=8, fill_value=-7)
+    np.testing.assert_array_equal(np.asarray(out2)[6:], -7)
+
+
+def test_filter_compact_size_exceeds_input():
+    """size > T must not leak dropped values through the T sentinel."""
+    values = jnp.asarray([1, 2, 3], jnp.int32)
+    mask = jnp.asarray([True, False, False])
+    out, count = rel.filter_compact(values, mask, size=5)
+    assert int(count) == 1
+    np.testing.assert_array_equal(np.asarray(out), [1, 0, 0, 0, 0])
+
+
+def test_mask_compact_kernel_zero_sized_batch():
+    from repro.kernels.compact import mask_compact
+    dest, counts = mask_compact(jnp.zeros((0, 5), bool))
+    assert dest.shape == (0, 5) and counts.shape == (0,)
+
+
+def test_filter_compact_2d_rows():
+    rng = np.random.default_rng(3)
+    values = jnp.asarray(rng.standard_normal((20, 5)), jnp.float32)
+    mask = jnp.asarray(rng.random(20) < 0.5)
+    out, count = rel.filter_compact(values, mask)
+    want = np.asarray(values)[np.asarray(mask)]
+    np.testing.assert_array_equal(np.asarray(out)[: int(count)], want)
+
+
+# ---------------------------------------------------------------------------
+# partition
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(0, 6), min_size=0, max_size=200))
+@settings(max_examples=20, deadline=None)
+def test_radix_partition_stable(ids):
+    ids = np.asarray(ids, np.int32)
+    payload = np.arange(len(ids), dtype=np.int32)
+    plan, part_ids, part_payload = rel.radix_partition(
+        jnp.asarray(ids), 7, jnp.asarray(payload))
+    if len(ids) == 0:
+        assert np.asarray(part_ids).shape == (0,)
+        return
+    # bucket-contiguous and stable == numpy stable argsort by bucket
+    order = np.argsort(ids, kind="stable")
+    np.testing.assert_array_equal(np.asarray(part_ids), ids[order])
+    np.testing.assert_array_equal(np.asarray(part_payload), payload[order])
+    np.testing.assert_array_equal(
+        np.asarray(plan.counts), np.bincount(ids, minlength=7))
+
+
+# ---------------------------------------------------------------------------
+# sort
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from(KEY_DTYPES), st.integers(0, 300))
+@settings(max_examples=24, deadline=None)
+def test_radix_sort_matches_jnp_sort(dtype, n):
+    rng = np.random.default_rng(n + 1)
+    keys = _draw_keys(rng, dtype, n)
+    got = rel.radix_sort(jnp.asarray(keys))
+    assert got.dtype == jnp.asarray(keys).dtype
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.sort(jnp.asarray(keys))))
+
+
+@given(st.integers(0, 200))
+@settings(max_examples=20, deadline=None)
+def test_argsort_stable(n):
+    rng = np.random.default_rng(n)
+    keys = rng.integers(0, 8, n).astype(np.int32)  # heavy ties
+    perm = rel.argsort(jnp.asarray(keys))
+    np.testing.assert_array_equal(
+        np.asarray(perm), np.argsort(keys, kind="stable"))
+
+
+def test_radix_sort_payload_reordered():
+    keys = jnp.asarray([5, 1, 4, 1, 3], jnp.int32)
+    payload = jnp.asarray([[0, 0], [1, 1], [2, 2], [3, 3], [4, 4]],
+                          jnp.float32)
+    sk, sp = rel.radix_sort(keys, payload)
+    np.testing.assert_array_equal(np.asarray(sk), [1, 1, 3, 4, 5])
+    np.testing.assert_array_equal(np.asarray(sp)[:, 0], [1, 3, 4, 2, 0])
+
+
+def test_radix_sort_duplicates_and_extremes():
+    keys = jnp.asarray([0, -(2 ** 31), 2 ** 31 - 1, 0, -1, 1, -(2 ** 31)],
+                       jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(rel.radix_sort(keys)), np.sort(np.asarray(keys)))
+    fkeys = jnp.asarray([0.0, -0.0, jnp.inf, -jnp.inf, 1e-38, -1e38],
+                        jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(rel.radix_sort(fkeys)), np.sort(np.asarray(fkeys)))
+
+
+# ---------------------------------------------------------------------------
+# group-by
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(0, 5), min_size=0, max_size=200))
+@settings(max_examples=20, deadline=None)
+def test_group_by_sum_matches_segment_sum(ids):
+    G = 6
+    ids = np.asarray(ids, np.int32)
+    rng = np.random.default_rng(len(ids))
+    values = rng.integers(-50, 50, len(ids)).astype(np.int32)
+    got = rel.group_by(jnp.asarray(ids), jnp.asarray(values), G, "sum")
+    want = jax.ops.segment_sum(jnp.asarray(values), jnp.asarray(ids),
+                               num_segments=G)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_group_by_float_sum_close():
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 4, 100), jnp.int32)
+    values = jnp.asarray(rng.standard_normal(100), jnp.float32)
+    got = rel.group_by(ids, values, 4, "sum")
+    want = jax.ops.segment_sum(values, ids, num_segments=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", ["max", "min", "count", "mean"])
+def test_group_by_aggs_vs_numpy(agg):
+    rng = np.random.default_rng(1)
+    G = 5
+    ids = rng.integers(0, G, 80)
+    values = rng.integers(-100, 100, 80).astype(np.int32)
+    got = np.asarray(rel.group_by(jnp.asarray(ids, jnp.int32),
+                                  jnp.asarray(values), G, agg))
+    for g in range(G):
+        vals = values[ids == g]
+        if agg == "count":
+            assert got[g] == len(vals)
+        elif len(vals) == 0:
+            ident = {"max": np.iinfo(np.int32).min,
+                     "min": np.iinfo(np.int32).max, "mean": 0.0}[agg]
+            assert got[g] == ident
+        elif agg == "mean":
+            np.testing.assert_allclose(got[g], vals.mean(), rtol=1e-6)
+        else:
+            assert got[g] == {"max": vals.max, "min": vals.min}[agg]()
+
+
+def test_group_by_vector_values():
+    ids = jnp.asarray([0, 1, 0, 2], jnp.int32)
+    values = jnp.asarray([[1, 2], [3, 4], [5, 6], [7, 8]], jnp.int32)
+    got = rel.group_by(ids, values, 3, "sum")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  [[6, 8], [3, 4], [7, 8]])
+
+
+@given(st.lists(st.integers(-20, 20), min_size=0, max_size=150))
+@settings(max_examples=20, deadline=None)
+def test_group_by_sorted_runs(raw):
+    keys = np.sort(np.asarray(raw, np.int32))
+    rng = np.random.default_rng(len(keys))
+    values = rng.integers(0, 10, len(keys)).astype(np.int32)
+    uniq, aggs, count = rel.group_by_sorted(
+        jnp.asarray(keys), jnp.asarray(values), "sum")
+    n = int(count)
+    if len(keys) == 0:
+        assert n == 0
+        return
+    uref, inv = np.unique(keys, return_inverse=True)
+    aref = np.zeros(len(uref), np.int64)
+    np.add.at(aref, inv, values)
+    assert n == len(uref)
+    np.testing.assert_array_equal(np.asarray(uniq)[:n], uref)
+    np.testing.assert_array_equal(np.asarray(aggs)[:n].astype(np.int64),
+                                  aref)
+
+
+# ---------------------------------------------------------------------------
+# join
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(0, 8), min_size=0, max_size=60),
+       st.lists(st.integers(0, 8), min_size=0, max_size=60))
+@settings(max_examples=15, deadline=None)
+def test_hash_join_matches_nested_loop(lk, rk):
+    res = rel.hash_join(jnp.asarray(lk, jnp.int32),
+                        jnp.asarray(rk, jnp.int32))
+    c = int(res.count)
+    got = sorted(zip(np.asarray(res.left_index)[:c].tolist(),
+                     np.asarray(res.right_index)[:c].tolist()))
+    want = sorted((i, j) for i, a in enumerate(lk)
+                  for j, b in enumerate(rk) if a == b)
+    assert got == want
+    # padding past count is -1
+    assert (np.asarray(res.left_index)[c:] == -1).all()
+
+
+def test_hash_join_capped_and_jittable():
+    lk = jnp.asarray([1, 2, 3, 2], jnp.int32)
+    rk = jnp.asarray([2, 2, 9], jnp.int32)
+    jit_join = jax.jit(lambda a, b: rel.hash_join(a, b, max_matches=16))
+    res = jit_join(lk, rk)
+    assert int(res.count) == 4
+    c = int(res.count)
+    got = sorted(zip(np.asarray(res.left_index)[:c].tolist(),
+                     np.asarray(res.right_index)[:c].tolist()))
+    assert got == [(1, 0), (1, 1), (3, 0), (3, 1)]
+    # cap smaller than the match count still reports the true total
+    res2 = rel.hash_join(lk, rk, max_matches=2)
+    assert int(res2.count) == 4
+    assert res2.left_index.shape == (2,)
+
+
+def test_hash_join_overflow_guard():
+    """An eager join whose pair count wraps int32 must raise, not
+    silently return garbage (x64 mode accumulates in int64 instead)."""
+    if jax.config.jax_enable_x64:
+        pytest.skip("int64 accumulation active; no wrap to guard")
+    n = 66_000  # n*n ≈ 4.36e9: wraps mod 2^32 back to a POSITIVE int32
+    keys = jnp.zeros((n,), jnp.int32)
+    with pytest.raises(OverflowError):
+        rel.hash_join(keys, keys)
+
+
+def test_group_by_count_shape_with_vector_values():
+    """agg="count" is (G,) for empty and non-empty batches alike."""
+    full = rel.group_by(jnp.asarray([0, 2], jnp.int32),
+                        jnp.ones((2, 3), jnp.float32), 4, "count")
+    empty = rel.group_by(jnp.zeros((0,), jnp.int32),
+                         jnp.ones((0, 3), jnp.float32), 4, "count")
+    assert full.shape == empty.shape == (4,)
+    np.testing.assert_array_equal(np.asarray(full), [1, 0, 1, 0])
+
+
+def test_hash_join_float_keys():
+    lk = jnp.asarray([0.5, -1.25, 3.0], jnp.float32)
+    rk = jnp.asarray([3.0, 0.5, 0.5], jnp.float32)
+    res = rel.hash_join(lk, rk)
+    c = int(res.count)
+    got = sorted(zip(np.asarray(res.left_index)[:c].tolist(),
+                     np.asarray(res.right_index)[:c].tolist()))
+    assert got == [(0, 1), (0, 2), (2, 0)]
+
+
+def test_hash_join_rejects_mixed_key_dtypes():
+    with pytest.raises(TypeError):
+        rel.hash_join(jnp.asarray([1.0, 2.0], jnp.float32),
+                      jnp.asarray([1, 2], jnp.int32))
+
+
+def test_hash_join_float_nan_and_signed_zero():
+    """NaN keys match nothing (even a build NaN that radix-orders before
+    -inf must not corrupt the search for real keys); -0.0 matches +0.0."""
+    neg_nan = np.frombuffer(np.uint32(0xFFC00000).tobytes(),
+                            np.float32)[0]
+    lk = jnp.asarray([-1.0, 0.5, 2.0, np.nan, 0.0], jnp.float32)
+    rk = jnp.asarray([neg_nan, -1.0, 0.5, 2.0, -0.0], jnp.float32)
+    res = rel.hash_join(lk, rk)
+    c = int(res.count)
+    got = sorted(zip(np.asarray(res.left_index)[:c].tolist(),
+                     np.asarray(res.right_index)[:c].tolist()))
+    assert got == [(0, 1), (1, 2), (2, 3), (4, 4)]
+
+
+# ---------------------------------------------------------------------------
+# consumers stay routed through the subsystem
+# ---------------------------------------------------------------------------
+
+
+def test_moe_and_engine_route_through_relational():
+    import inspect
+
+    from repro.models.layers import moe
+    from repro.serve import engine
+    assert "partition_plan" in inspect.getsource(moe)
+    assert "rel_compact" in inspect.getsource(engine)

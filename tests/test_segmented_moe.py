@@ -60,6 +60,53 @@ def test_packing_offsets_and_scatter():
         np.testing.assert_array_equal(segs[r, c: c + ln], d + 1)
 
 
+def test_packing_zero_length_docs():
+    """lengths == 0 entries must not perturb the packing of real docs
+    or open phantom rows (regression: zero-length doc at a row boundary
+    used to scatter a duplicate start flag onto the next doc's slot)."""
+    from repro.data.packing import pack_documents, packing_offsets
+    lengths = jnp.asarray([8, 0, 3, 0, 0, 5], jnp.int32)  # 8 fills a row
+    rows, cols = packing_offsets(lengths, row_len=8)
+    rows, cols = np.asarray(rows), np.asarray(cols)
+    dense = np.asarray(lengths)[np.asarray(lengths) > 0]
+    drows, dcols = packing_offsets(jnp.asarray(dense), row_len=8)
+    np.testing.assert_array_equal(rows[np.asarray(lengths) > 0],
+                                  np.asarray(drows))
+    np.testing.assert_array_equal(cols[np.asarray(lengths) > 0],
+                                  np.asarray(dcols))
+    # packed output: zero-length docs contribute no tokens, no segments
+    docs = jnp.asarray(np.arange(1, 6 * 9 + 1).reshape(6, 9), jnp.int32)
+    toks, segs = pack_documents(docs, lengths, row_len=8, num_rows=3)
+    assert int((np.asarray(segs) == 2).sum()) == 0  # doc 1 is empty
+    assert int((np.asarray(segs) == 3).sum()) == 3  # doc 2 intact
+    assert int((np.asarray(segs) == 6).sum()) == 5  # doc 5 intact
+
+
+def test_segment_starts_tolerate_duplicate_starts():
+    """Scatter-added begin-flags can exceed 1 where a zero-length doc
+    collapses onto the next doc's start; ids must not skip (no phantom
+    segments)."""
+    from repro.data.packing import segment_starts_to_ids
+    starts = jnp.asarray([1, 0, 2, 0, 1, 0], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(segment_starts_to_ids(starts)), [1, 1, 2, 2, 3, 3])
+
+
+def test_dispatch_offsets_int32_guard():
+    """Offsets stay int32 for normal sizes; totals at/after 2^31 demand
+    x64 (the relational join build path leans on this guard)."""
+    from repro.core.scan.segmented import _offsets_dtype
+    assert _offsets_dtype(10) == jnp.int32
+    assert _offsets_dtype(2 ** 31 - 1) == jnp.int32
+    import jax as _jax
+    if not _jax.config.jax_enable_x64:
+        with pytest.raises(OverflowError):
+            _offsets_dtype(2 ** 31)
+    plan = dispatch_offsets(jnp.asarray([1, 0, 1], jnp.int32), 2)
+    assert plan.offsets.dtype == jnp.int32
+    assert plan.dest.dtype == jnp.int32
+
+
 def test_moe_layer_forward_and_grad():
     from repro.models.config import ModelConfig
     from repro.models.layers.moe import apply_moe, init_moe

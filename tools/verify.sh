@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# Repo verification: import-smoke every repro.* module, then the tier-1
-# suite (ROADMAP.md). The smoke catches collection-time breakage —
-# ModuleNotFoundError / API drift in rarely-imported launch modules —
-# in seconds, before the multi-minute test run.
+# Repo verification: import-smoke every repro.* module, dry-run the
+# benchmark harness + relational example, then the tier-1 suite
+# (ROADMAP.md). The smokes catch collection-time breakage —
+# ModuleNotFoundError / API drift in rarely-imported launch modules,
+# rotted benchmark/example entry points — in seconds, before the
+# multi-minute test run.
 #
-#   tools/verify.sh            # smoke + tier-1
-#   tools/verify.sh --smoke    # smoke only
+#   tools/verify.sh            # smoke + bench dry-run + example + tier-1
+#   tools/verify.sh --smoke    # import smoke only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -44,6 +46,12 @@ EOF
 if [[ "${1:-}" == "--smoke" ]]; then
     exit 0
 fi
+
+echo "== benchmark dry-run smoke =="
+python -m benchmarks.run --dry-run
+
+echo "== examples smoke: relational query plan =="
+python examples/table_queries.py
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
