@@ -14,6 +14,12 @@ with an identity. We expose that generality so the same machinery drives:
 
 Elements of a monoid may be arbitrary pytrees (e.g. the affine monoid's
 elements are ``(a, b)`` pairs); ``combine`` must be associative over them.
+
+Monoids that also run INSIDE Pallas kernels carry a :class:`KernelSpec`
+(flat array leaves, identity fill constants, in-kernel combine/select
+emitters) — the interface the monoid-generic scan engine
+(``repro.kernels.scan_engine``) writes each grid schedule against, once.
+Registered here: sum, segmented sum, affine, and the compact-mask spec.
 """
 
 from __future__ import annotations
@@ -28,6 +34,53 @@ Pytree = Any
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Kernel-side monoid: flat array leaves plus in-kernel emitters.
+
+    The Pallas scan engine (``repro.kernels.scan_engine``) writes each grid
+    organization — carry chain, decoupled reduce-then-scan, fused
+    single-launch — exactly ONCE against this interface; registering a spec
+    is all it takes to run a new monoid under every schedule.
+
+    Unlike :class:`Monoid` (pytree elements, library scans), a kernel spec
+    works on TUPLES of same-shape arrays, because Pallas refs are flat.
+    Every callable must be shape-polymorphic and broadcasting-safe: the
+    engine applies them to full VMEM tiles, to size-1 carry slices, and to
+    per-chunk totals alike.
+
+    Attributes:
+      name: registry key (also the Pallas kernel name suffix).
+      fills: per-leaf identity CONSTANTS — used to pad log-scan shifts, to
+        reset the grid carry, and to seed the decoupled combine chain.
+      combine: ``combine(left, right)`` over leaf tuples; ``left`` is the
+        earlier (lower-index) element. Must broadcast (carries keep the
+        scan axis at size 1).
+      elem_dtypes: operand dtypes -> accumulation dtype per element leaf.
+      out_dtypes: operand dtypes -> dtype per emitted output array.
+      out_leaves: which combined leaves are emitted (default: leaf 0).
+      emit: optional ``emit(elems, combined) -> outputs`` override — the
+        in-kernel select emitter (e.g. compaction's fused predicate
+        select). ``elems`` are the raw block elements in accumulate dtype,
+        ``combined`` the carry-adjusted inclusive scan.
+      supports_exclusive: whether the engine may shift-and-fill for
+        ``exclusive=True``.
+    """
+
+    name: str
+    fills: tuple
+    combine: Callable[[tuple, tuple], tuple]
+    elem_dtypes: Callable[[tuple], tuple]
+    out_dtypes: Callable[[tuple], tuple]
+    out_leaves: tuple = (0,)
+    emit: "Callable[[tuple, tuple], tuple] | None" = None
+    supports_exclusive: bool = True
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.fills)
+
+
+@dataclasses.dataclass(frozen=True)
 class Monoid:
     """An associative operator with identity, over pytree elements.
 
@@ -37,11 +90,14 @@ class Monoid:
         Convention: ``left`` is the earlier (lower-index) element.
       identity_like: given one element (pytree of arrays), produce the
         identity element with matching shapes/dtypes.
+      kernel_spec: optional :class:`KernelSpec` — the same monoid stated
+        kernel-side, consumed by ``repro.kernels.scan_engine``.
     """
 
     name: str
     combine: Callable[[Pytree, Pytree], Pytree]
     identity_like: Callable[[Pytree], Pytree]
+    kernel_spec: "KernelSpec | None" = None
 
     def fold(self, elems: Pytree, axis: int = 0) -> Pytree:
         """Reduce ``elems`` along ``axis`` with this monoid (tree-shaped).
@@ -104,6 +160,94 @@ def _squeeze(tree: Pytree, axis: int) -> Pytree:
 
 
 # ---------------------------------------------------------------------------
+# Kernel specs (flat-leaf monoids for the Pallas scan engine)
+# ---------------------------------------------------------------------------
+
+
+def accum_dtype(dt):
+    """Accumulation dtype policy shared by every kernel registration."""
+    dt = jnp.dtype(dt)
+    if dt in (jnp.bfloat16, jnp.float16):
+        return jnp.dtype(jnp.float32)
+    if dt in (jnp.int8, jnp.int16):
+        return jnp.dtype(jnp.int32)
+    return dt
+
+
+def _sum_kcombine(left, right):
+    return (left[0] + right[0],)
+
+
+SUM_KERNEL = KernelSpec(
+    name="sum",
+    fills=(0,),
+    combine=_sum_kcombine,
+    elem_dtypes=lambda dts: (accum_dtype(dts[0]),),
+    out_dtypes=lambda dts: (jnp.dtype(dts[0]),),
+)
+
+
+def _segmented_sum_kcombine(left, right):
+    v1, f1 = left
+    v2, f2 = right
+    # A flag anywhere on the right KILLS the incoming value (Blelloch's
+    # segmented lift). Flags accumulate as a boolean OR of ``!= 0`` — NOT
+    # a max, which a negative nonzero flag would silently escape.
+    seen = jnp.logical_or(f1 != 0, f2 != 0)
+    return (jnp.where(f2 != 0, v2, v1 + v2), seen.astype(f1.dtype))
+
+
+SEGMENTED_SUM_KERNEL = KernelSpec(
+    name="segsum",
+    fills=(0, 0),
+    combine=_segmented_sum_kcombine,
+    elem_dtypes=lambda dts: (accum_dtype(dts[0]), jnp.dtype(jnp.int32)),
+    out_dtypes=lambda dts: (jnp.dtype(dts[0]),),
+)
+
+
+def _affine_kcombine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return (a1 * a2, a2 * b1 + b2)
+
+
+AFFINE_KERNEL = KernelSpec(
+    name="affine",
+    fills=(1, 0),
+    combine=_affine_kcombine,
+    elem_dtypes=lambda dts: (accum_dtype(dts[0]), accum_dtype(dts[1])),
+    out_dtypes=lambda dts: (jnp.dtype(dts[1]),),
+    out_leaves=(1,),
+)
+
+
+def mask_kernel_spec(sentinel: int) -> KernelSpec:
+    """Compact-mask monoid: a 0/1 keep-mask cumsum with the predicate
+    select FUSED into the writeback — surviving lanes emit their exclusive
+    rank (global scatter destination once the chunk offset is combined),
+    dropped lanes emit ``sentinel``. The monoid itself is integer SUM; the
+    select emitter is what makes it stream compaction (paper §1).
+    """
+
+    def emit(elems, combined):
+        m = elems[0]
+        # combined is the carry-adjusted INCLUSIVE mask scan; minus the
+        # element itself gives the exclusive rank (exact: integers).
+        return (jnp.where(m != 0, combined[0] - m, sentinel),)
+
+    return KernelSpec(
+        name="mask",
+        fills=(0,),
+        combine=_sum_kcombine,
+        elem_dtypes=lambda dts: (jnp.dtype(jnp.int32),),
+        out_dtypes=lambda dts: (jnp.dtype(jnp.int32),),
+        emit=emit,
+        supports_exclusive=False,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Standard monoids
 # ---------------------------------------------------------------------------
 
@@ -112,7 +256,8 @@ def _sum_identity(x):
     return jax.tree.map(jnp.zeros_like, x)
 
 
-SUM = Monoid("sum", lambda a, b: jax.tree.map(jnp.add, a, b), _sum_identity)
+SUM = Monoid("sum", lambda a, b: jax.tree.map(jnp.add, a, b), _sum_identity,
+             kernel_spec=SUM_KERNEL)
 
 PROD = Monoid(
     "prod",
@@ -166,6 +311,7 @@ AFFINE = Monoid(
     "affine",
     _affine_combine,
     lambda x: (jnp.ones_like(x[0]), jnp.zeros_like(x[1])),
+    kernel_spec=AFFINE_KERNEL,
 )
 
 
@@ -236,13 +382,18 @@ def segmented(base: Monoid) -> Monoid:
         keep_right = jax.tree.map(
             lambda b, r: jnp.where(_bcast(f2, r), r, b), both, v2
         )
-        return (jnp.maximum(f1, f2), keep_right)
+        # OR of ``!= 0``, not max: any nonzero flag (negative included)
+        # must keep marking the segment start through later combines.
+        seen = jnp.logical_or(f1 != 0, f2 != 0).astype(f1.dtype)
+        return (seen, keep_right)
 
     def identity_like(x):
         f, v = x
         return (jnp.zeros_like(f), base.identity_like(v))
 
-    return Monoid(f"segmented_{base.name}", combine, identity_like)
+    kspec = SEGMENTED_SUM_KERNEL if base.name == "sum" else None
+    return Monoid(f"segmented_{base.name}", combine, identity_like,
+                  kernel_spec=kspec)
 
 
 def _bcast(flag, val):

@@ -17,28 +17,38 @@ can pick a sensible default, and so the choice is documented in one place:
          remain available for study and as oracles.
 
 Kernel SCHEDULE rule (Obs 2/3 applied to the Pallas grid): the kernel-
-backed scans run one of two grid organizations, picked by
-``choose_schedule`` (also surfaced as ``Choice.schedule``):
+backed scans run one of THREE grid organizations, picked by
+``choose_schedule`` (also surfaced as ``Choice.schedule``) and executed
+by the monoid-generic engine in ``repro.kernels.scan_engine``:
 
   'carry'      grid-carried total: ("parallel", "arbitrary") — one fused
                HBM pass (read n + write n), but the sequence axis is a
                sequential carry chain, so parallelism == batch rows. The
                winner whenever ``batch >= cores`` keeps every core busy
                (the paper's SIMD-P single-pass organization).
-  'decoupled'  reduce-then-scan: a fully parallel pass 1b emits per-chunk
-               totals only, a tiny exclusive scan combines them, and a
-               fully parallel pass 2 redoes the in-chunk scan with the
-               chunk offset fused into the writeback — both grids are
-               ("parallel", "parallel"), so a LONG row spreads across
+  'decoupled'  reduce-then-scan in two launches: a fully parallel pass 1b
+               emits per-chunk totals only, a tiny exclusive scan combines
+               them, and a fully parallel pass 2 redoes the in-chunk scan
+               with the chunk offset fused into the writeback — both grids
+               are ("parallel", "parallel"), so a LONG row spreads across
                cores at the price of reading the data twice
                (read 2n + write n; the paper's SIMD2-P, Observation 3).
+  'fused'      the same reduce-then-scan organization in ONE launch: each
+               chunk scans once and chains its prefix to its successor
+               through cross-chunk semaphores — decoupled's parallelism
+               at the carry chain's traffic (read n + write n). Where the
+               native single-launch path cannot run (interpret mode, no
+               semaphore API) the engine degrades to the two-launch
+               decoupled schedule, bit-identically.
 
   The flip: carry-chain when ``batch >= cores`` (enough rows to fill the
-  machine; cheapest traffic), decoupled when a long row would otherwise
-  serialize — ``batch < cores`` AND the row spans multiple blocks AND
-  there are at least ``cores // batch`` chunks to spread. Serve-engine
-  decode and SSM prefill (B=1, N ≥ 2^22) land decoupled; training shapes
-  (B ≥ 8) keep the carry chain.
+  machine; cheapest traffic), a parallel-sequence schedule when a long
+  row would otherwise serialize — ``batch < cores`` AND the row spans
+  multiple blocks AND there are at least ``cores // batch`` chunks to
+  spread. Of the two parallel organizations, fused is preferred (it
+  erases decoupled's second read); ``prefer_fused=False`` forces the
+  two-launch form. Serve-engine decode and SSM prefill (B=1, N ≥ 2^22)
+  land on fused/decoupled; training shapes (B ≥ 8) keep the carry chain.
 """
 
 from __future__ import annotations
@@ -64,7 +74,7 @@ class Choice:
     variant: int  # two-pass organization (1 = scan-first, 2 = reduce-first)
     carry_exchange: str  # distributed sums exchange
     reason: str
-    schedule: str = "carry"  # kernel grid organization: 'carry'|'decoupled'
+    schedule: str = "carry"  # grid organization: 'carry'|'decoupled'|'fused'
 
 
 def choose_schedule(
@@ -72,23 +82,28 @@ def choose_schedule(
     n: int,
     cores: int = NUM_CORES,
     block_elems: int = 2048,
+    prefer_fused: bool = True,
 ) -> str:
     """Kernel grid organization for a (batch, n) scan — see module doc.
 
     ``block_elems`` must be the chunk length the kernel will actually
     tile with — the chunks-per-spare-core test is meaningless against
-    any other block size.
+    any other block size. ``prefer_fused=False`` picks the two-launch
+    decoupled form over the single-launch fused one for parallel-sequence
+    shapes (e.g. to sidestep the semaphore path on an unvalidated
+    platform; off-TPU the engine falls back by itself).
     """
     batch = max(int(batch), 1)
     if batch >= cores:
         return "carry"  # rows alone fill every core; cheapest HBM traffic
     chunks = -(-n // max(block_elems, 1))
     spare = cores // batch  # cores idle under the carry chain
-    # Decoupled pays a second read of the data; only worth it when the
-    # idle cores can actually be fed — at least ``spare`` chunks per row
-    # (a row inside one block has nothing to parallelize).
+    # A parallel-sequence schedule costs extra machinery (a second read,
+    # or the semaphore chain); only worth it when the idle cores can
+    # actually be fed — at least ``spare`` chunks per row (a row inside
+    # one block has nothing to parallelize).
     if spare >= 2 and chunks >= spare:
-        return "decoupled"
+        return "fused" if prefer_fused else "decoupled"
     return "carry"
 
 
@@ -135,6 +150,6 @@ def choose(
     if n_devices > 1 and carry_bytes * n_devices > 1 << 20:
         exchange = "hillis_permute"
     reason = "bandwidth-bound: cache/VMEM partitioning, reduce-first (SIMD2-P)"
-    if schedule == "decoupled":
-        reason += "; decoupled grid (batch < cores, long row)"
+    if schedule in ("decoupled", "fused"):
+        reason += f"; {schedule} grid (batch < cores, long row)"
     return Choice(algo, block, 2, exchange, reason, schedule)

@@ -82,9 +82,7 @@ def segmented_scan_ref(
 
 
 def _accum_dtype(dtype) -> jnp.dtype:
-    """Widen low-precision dtypes for accumulation (kernel convention too)."""
-    if dtype in (jnp.bfloat16, jnp.float16):
-        return jnp.float32
-    if dtype in (jnp.int8, jnp.int16):
-        return jnp.int32
-    return dtype
+    """Widen low-precision dtypes for accumulation — ONE policy, shared
+    with the kernel engine (``assoc.accum_dtype``) so reference and
+    kernel accumulation can never silently diverge."""
+    return assoc.accum_dtype(dtype)

@@ -29,9 +29,9 @@ def segmented_scan(
 ):
     """Inclusive scan restarting wherever ``flags != 0``.
 
-    ``algorithm="kernel"`` routes sum-segmented scans over the last axis
-    through the Pallas ``segscan`` kernel (VMEM-blocked, grid-carried
-    (value, flag) pair — see kernels/segscan).
+    ``algorithm="kernel"`` routes sum-segmented scans through the Pallas
+    scan engine's segmented registration (``kernels/segscan``), under
+    whichever grid schedule ``core/scan/policy`` picks for the shape.
     """
     if algorithm == "kernel":
         if assoc.get(op).name != "sum":

@@ -1,7 +1,11 @@
 """Pallas TPU kernels for the performance-critical compute layers.
 
-The scan kernels run one of two grid schedules (`schedule=` knob on each
-``ops`` wrapper, arbitrated by ``core/scan/policy.choose_schedule``):
+All four scan families are registrations of ONE monoid-generic engine
+(``scan_engine``): each grid organization is written once against a
+kernel-side monoid spec (``core/scan/assoc.KernelSpec``), and a family
+is just a spec + a layout + a back-compat ``ops`` wrapper. Three grid
+schedules per family (`schedule=` knob on each ``ops`` wrapper,
+arbitrated by ``core/scan/policy.choose_schedule``):
 
   carry      — the paper's §2.2 partitioned single pass: sequential grid
                along the scanned axis, VMEM scratch carry, both logical
@@ -11,10 +15,15 @@ The scan kernels run one of two grid schedules (`schedule=` knob on each
                fully parallel totals pass, a tiny exclusive combine, and
                a fully parallel scan+offset pass — the scanned axis
                itself spreads across cores (B=1, huge-N serve shapes).
+  fused      — the same reduce-then-scan in a SINGLE launch: chunk
+               prefixes chained through cross-chunk semaphores, erasing
+               decoupled's second data read. Two-launch fallback under
+               interpret mode / missing semaphore API.
 
-  scan_blocked     — prefix sum (``decoupled.py`` per package holds the
-                     second schedule)
-  segscan          — segmented prefix sum ((flag, value) monoid)
-  ssm_scan         — affine-monoid scan (SSM/xLSTM recurrences)
+  scan_engine      — the schedules (written once) + layouts + registry
+  scan_blocked     — prefix sum            (sum monoid registration)
+  segscan          — segmented prefix sum  ((value, flag) registration)
+  ssm_scan         — affine-monoid scan    (SSM/xLSTM recurrences)
+  compact          — stream compaction     (mask monoid, fused select)
   flash_attention  — online-softmax monoid scan over KV blocks
 """

@@ -1,3 +1,3 @@
-from repro.kernels.compact.ops import mask_compact
+from repro.kernels.compact.ops import mask_compact, mask_compact_kernel
 
-__all__ = ["mask_compact"]
+__all__ = ["mask_compact", "mask_compact_kernel"]

@@ -1,8 +1,17 @@
-"""Jitted public wrapper for the stream-compaction kernel.
+"""Stream compaction: the compact-mask registration of the scan engine.
 
-Handles arbitrary ranks (last-axis semantics like the cumsum wrappers),
-padding to block multiples — padded positions carry mask 0, so they can
-never emit a phantom destination — and interpret-mode fallback off TPU.
+Stream compaction (filter) is the paper's §1 database use case: the new
+index of every surviving element is the exclusive prefix sum of the
+keep-mask at its position. The mask monoid
+(``core/scan/assoc.mask_kernel_spec``) is integer SUM with the predicate
+select FUSED into the writeback — surviving lanes emit their global
+destination, dropped lanes emit the sentinel — so the output feeds an
+XLA scatter directly, under ANY of the engine's three schedules.
+
+The wrapper handles arbitrary ranks (last-axis semantics like the cumsum
+wrappers), padding to block multiples — padded positions carry mask 0, so
+they can never emit a phantom destination — and interpret-mode fallback
+off TPU.
 """
 
 from __future__ import annotations
@@ -12,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.compact.compact import mask_compact_kernel
+from repro.kernels import scan_engine
+from repro.kernels.scan_engine import monoids, resolve_schedule
 
 
 def _on_tpu() -> bool:
@@ -24,22 +34,29 @@ def _round_up(v: int, m: int) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_b", "block_n", "interpret"))
-def _impl(mask, block_b, block_n, interpret):
+    jax.jit, static_argnames=("block_b", "block_n", "interpret", "schedule"))
+def _impl(mask, block_b, block_n, interpret, schedule):
     lead = mask.shape[:-1]
     n = mask.shape[-1]
     b = 1
     for d in lead:
         b *= d
-    m2 = mask.reshape(b, n).astype(jnp.int32)
+    # Normalize BEFORE the int cast: a fractional float mask value (0.5)
+    # is "keep" per the nonzero contract; astype alone would drop it.
+    m2 = (mask.reshape(b, n) != 0).astype(jnp.int32)
 
     bb = min(block_b, b) if b % min(block_b, b) == 0 else 1
     bn = min(block_n, _round_up(n, 128))
     pad_n = (-n) % bn
     m2 = jnp.pad(m2, ((0, 0), (0, pad_n)))  # padded mask is 0: no phantoms
 
-    dest, counts = mask_compact_kernel(
-        m2, block_b=bb, block_n=bn, interpret=interpret)
+    layout = scan_engine.Rows(m2.shape[0], m2.shape[1], bb, bn)
+    dest, = scan_engine.scan(
+        (m2,), monoids.mask(m2.shape[1]), layout, schedule=schedule,
+        interpret=interpret)
+    # Survivor counts: an exact integer reduction (identical bits under
+    # every schedule); padded positions are 0 so they never count.
+    counts = jnp.sum(m2, axis=-1, dtype=jnp.int32)
     # Kernel sentinel is the PADDED length; remap to the caller's n so a
     # size-(n+1) scatter buffer parks every dropped element at index n.
     dest = jnp.minimum(dest[:, :n], n)
@@ -52,6 +69,7 @@ def mask_compact(
     block_b: int = 8,
     block_n: int = 2048,
     interpret: "bool | None" = None,
+    schedule: str = "auto",
 ) -> tuple[jax.Array, jax.Array]:
     """Kernel-backed compaction indices along the last axis (any rank).
 
@@ -64,4 +82,22 @@ def mask_compact(
     if mask.size == 0:  # zero-length axis OR zero-sized batch
         return (jnp.zeros(mask.shape, jnp.int32),
                 jnp.zeros(mask.shape[:-1], jnp.int32))
-    return _impl(mask, block_b, block_n, interpret)
+    n = mask.shape[-1]
+    batch = max(mask.size // max(n, 1), 1)
+    bn = min(block_n, _round_up(n, 128))  # the block _impl uses
+    schedule = resolve_schedule(schedule, batch, n, bn)
+    return _impl(mask, block_b, block_n, interpret, schedule)
+
+
+def mask_compact_kernel(mask, *, block_b=8, block_n=2048, interpret=False,
+                        schedule="decoupled"):
+    """Back-compat PR-2 entry point: pre-padded 2D (B, N) masks only."""
+    if mask.ndim != 2:
+        raise ValueError(f"kernel expects 2D input, got {mask.shape}")
+    mask = (mask != 0).astype(jnp.int32)
+    layout = scan_engine.Rows(mask.shape[0], mask.shape[1], block_b, block_n)
+    dest, = scan_engine.scan(
+        (mask,), monoids.mask(mask.shape[1]), layout, schedule=schedule,
+        interpret=interpret)
+    counts = jnp.sum(mask, axis=-1, dtype=jnp.int32)
+    return dest, counts

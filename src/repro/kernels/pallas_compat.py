@@ -1,13 +1,18 @@
 """Version compat for the Pallas TPU API used by every kernel here.
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
-back-compat aliases differ across the 0.4.x / 0.5.x lines).  All four
-kernel packages build their ``compiler_params`` through this shim so a
-single place tracks the drift.
+back-compat aliases differ across the 0.4.x / 0.5.x lines).  All kernel
+packages build their ``compiler_params`` through this shim so a single
+place tracks the drift.  The scan engine's fused single-launch schedule
+additionally needs cross-chunk semaphores and an HBM/ANY memory space;
+those are exposed here behind capability probes so the engine can fall
+back to the two-launch decoupled schedule on jax versions (or backends)
+without them.
 """
 
 from __future__ import annotations
 
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 if hasattr(pltpu, "CompilerParams"):
@@ -30,3 +35,47 @@ def compiler_params(*, dimension_semantics=None, **kw):
         # pre-TPUCompilerParams jax keyed compiler params by backend
         return {"mosaic": dict(kw)}
     return _PARAMS_CLS(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Semaphores + memory spaces (fused single-launch decoupled schedule)
+# ---------------------------------------------------------------------------
+
+
+def has_semaphores() -> bool:
+    """Whether this jax exposes the TPU semaphore API the fused schedule
+    chains chunks with (signal/wait + async copies + scratch sem arrays)."""
+    return all(
+        hasattr(pltpu, name)
+        for name in ("SemaphoreType", "semaphore_signal", "semaphore_wait",
+                     "make_async_copy")
+    )
+
+
+def regular_semaphores(shape):
+    """A scratch array of regular (manually signaled) semaphores."""
+    return pltpu.SemaphoreType.REGULAR(tuple(shape))
+
+
+def dma_semaphore():
+    return pltpu.SemaphoreType.DMA(())
+
+
+def semaphore_signal(sem, inc=1):
+    pltpu.semaphore_signal(sem, inc)
+
+
+def semaphore_wait(sem, value=1):
+    pltpu.semaphore_wait(sem, value)
+
+
+def async_copy(src, dst, sem):
+    """Start-and-return an async copy handle (``.start()`` / ``.wait()``)."""
+    return pltpu.make_async_copy(src, dst, sem)
+
+
+def any_memory_space():
+    """The compiler-chosen (HBM-capable) memory space for unblocked refs."""
+    if hasattr(pltpu, "ANY"):
+        return pltpu.ANY
+    return pl.ANY

@@ -1,7 +1,6 @@
-from repro.kernels.scan_blocked.decoupled import scan_blocked_decoupled
-from repro.kernels.scan_blocked.ops import cumsum
+from repro.kernels.scan_blocked.ops import (cumsum, scan_blocked_decoupled,
+                                            scan_blocked_kernel)
 from repro.kernels.scan_blocked.ref import cumsum_ref
-from repro.kernels.scan_blocked.scan_blocked import scan_blocked_kernel
 
 __all__ = ["cumsum", "cumsum_ref", "scan_blocked_decoupled",
            "scan_blocked_kernel"]

@@ -1,12 +1,20 @@
-"""Jitted public wrapper for the blocked-scan Pallas kernels.
+"""Blocked prefix sum: the SUM registration of the Pallas scan engine.
 
-Handles arbitrary ranks/axes, padding to block multiples, dtype policy and
-interpret-mode fallback on CPU. ``in_place=True`` donates the input buffer —
-the paper's in-place variant (§4.2.3) expressed as XLA buffer donation.
+This family is nothing but the sum monoid run through the monoid-generic
+engine (``repro.kernels.scan_engine``) on the Rows layout — the hand
+rolled carry/decoupled kernel bodies that used to live here are the
+engine's schedules now, written once for every monoid.
 
-Two grid schedules (see ``core/scan/policy`` module doc):
+The public wrapper handles arbitrary ranks/axes, padding to block
+multiples, dtype policy and interpret-mode fallback on CPU.
+``in_place=True`` donates the input buffer — the paper's in-place variant
+(§4.2.3) expressed as XLA buffer donation.
+
+Three grid schedules (see ``core/scan/policy`` module doc):
   * ``schedule="carry"``     — grid-carried total, sequence sequential;
-  * ``schedule="decoupled"`` — reduce-then-scan, sequence parallel;
+  * ``schedule="decoupled"`` — reduce-then-scan, two launches;
+  * ``schedule="fused"``     — reduce-then-scan, single launch chained
+    through cross-chunk semaphores (two-launch fallback off-TPU);
   * ``schedule="auto"``      — the policy's batch-vs-cores rule decides.
 """
 
@@ -17,31 +25,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.scan import policy
-from repro.kernels.scan_blocked.decoupled import scan_blocked_decoupled
-from repro.kernels.scan_blocked.scan_blocked import scan_blocked_kernel
+from repro.kernels import scan_engine
+from repro.kernels.scan_engine import monoids
+from repro.kernels.scan_engine import resolve_schedule  # back-compat export
 
-SCHEDULES = ("carry", "decoupled", "auto")
+SCHEDULES = scan_engine.RESOLVABLE
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def resolve_schedule(schedule: str, batch: int, n: int,
-                     block_elems: int) -> str:
-    """'auto' -> the policy's batch-vs-cores rule; else validate.
-
-    ``block_elems`` is the chunk length the kernel will ACTUALLY tile
-    the scanned axis with — the policy's chunks-per-core test is only
-    meaningful against the real grid.
-    """
-    if schedule not in SCHEDULES:
-        raise ValueError(
-            f"unknown schedule {schedule!r}; one of {SCHEDULES}")
-    if schedule == "auto":
-        return policy.choose_schedule(batch, n, block_elems=block_elems)
-    return schedule
 
 
 @functools.partial(
@@ -64,11 +56,10 @@ def _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret, schedule):
     pad_n = (-n) % bn
     x2 = jnp.pad(x2, ((0, pad_b), (0, pad_n)))
 
-    kernel = (scan_blocked_decoupled if schedule == "decoupled"
-              else scan_blocked_kernel)
-    out = kernel(
-        x2, block_b=bb, block_n=bn, exclusive=exclusive, interpret=interpret
-    )
+    layout = scan_engine.Rows(x2.shape[0], x2.shape[1], bb, bn)
+    out, = scan_engine.scan(
+        (x2,), monoids.SUM, layout, schedule=schedule, exclusive=exclusive,
+        interpret=interpret)
     out = out[:b, :n].reshape(lead + (n,))
     return jnp.moveaxis(out, -1, axis)
 
@@ -89,7 +80,7 @@ def cumsum(
     """Kernel-backed prefix sum along ``axis`` (any rank).
 
     ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere.
-    ``schedule`` picks the grid organization (carry | decoupled | auto).
+    ``schedule`` picks the grid organization (carry|decoupled|fused|auto).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -99,3 +90,30 @@ def cumsum(
     schedule = resolve_schedule(schedule, batch, n, bn)
     return _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret,
                         schedule)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat kernel entry points (PR-1 signatures; 2D, pre-padded)
+# ---------------------------------------------------------------------------
+
+
+def _scan_2d(x, block_b, block_n, exclusive, interpret, schedule):
+    if x.ndim != 2:
+        raise ValueError(f"kernel expects 2D input, got {x.shape}")
+    layout = scan_engine.Rows(x.shape[0], x.shape[1], block_b, block_n)
+    out, = scan_engine.scan(
+        (x,), monoids.SUM, layout, schedule=schedule, exclusive=exclusive,
+        interpret=interpret)
+    return out
+
+
+def scan_blocked_kernel(x, *, block_b=8, block_n=2048, exclusive=False,
+                        interpret=False):
+    """Carry-schedule prefix sum of a pre-padded 2D (B, N) array."""
+    return _scan_2d(x, block_b, block_n, exclusive, interpret, "carry")
+
+
+def scan_blocked_decoupled(x, *, block_b=8, block_n=2048, exclusive=False,
+                           interpret=False):
+    """Decoupled-schedule prefix sum of a pre-padded 2D (B, N) array."""
+    return _scan_2d(x, block_b, block_n, exclusive, interpret, "decoupled")

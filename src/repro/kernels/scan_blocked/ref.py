@@ -5,13 +5,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.scan import assoc
+
 
 def _accum_dtype(dtype) -> jnp.dtype:
-    if dtype in (jnp.bfloat16, jnp.float16):
-        return jnp.float32
-    if dtype in (jnp.int8, jnp.int16):
-        return jnp.int32
-    return dtype
+    # The one shared accumulation policy (see assoc.accum_dtype).
+    return assoc.accum_dtype(dtype)
 
 
 def cumsum_ref(

@@ -1,0 +1,50 @@
+"""Monoid-generic Pallas scan engine: each schedule written once.
+
+The paper's finding is that prefix-sum performance is decided by how the
+computation's sub-procedures are ORGANIZED — single-pass accumulate,
+reduce-then-scan, scan-then-propagate, and their partitioned variants —
+not by the binary operator being scanned. This package is that split as
+architecture:
+
+  organization (written ONCE)             operator (a registration)
+  --------------------------------------  --------------------------------
+  schedules.scan_carry      — the paper's  assoc.SUM_KERNEL        (cumsum)
+    single-pass accumulate (SIMD-P) over   assoc.SEGMENTED_SUM_KERNEL
+    VMEM partitions                          (segmented scans / MoE ranks)
+  schedules.scan_decoupled  — reduce-then- assoc.AFFINE_KERNEL
+    scan (SIMD2-P, Observation 3), two       (SSM/xLSTM recurrences)
+    launches                               assoc.mask_kernel_spec
+  schedules.scan_fused      — reduce-then-   (stream compaction, fused
+    scan in ONE launch, chunk prefixes       predicate select)
+    chained through cross-chunk
+    semaphores (Merrill-style); falls
+    back to two-launch under interpret
+
+(The paper's remaining organization, scan-then-propagate / SIMD1-P, is
+the same dataflow as reduce-then-scan with the pass-1 scans kept; its
+extra intermediate traffic loses under Observation 3, so the engine does
+not ship it as a schedule — ``core.scan.blocked.scan_two_pass`` keeps it
+available as a library oracle.)
+
+Geometry lives in ``layouts`` (Rows for 2D batch×sequence, Channels for
+SSM batch×time×channel tiles); ``core/scan/policy.choose_schedule``
+arbitrates the three-way schedule choice. The four kernel families under
+``repro.kernels.{scan_blocked,segscan,ssm_scan,compact}`` are thin
+back-compat wrappers over this engine — adding a new schedule (or a new
+monoid) is a one-file change.
+"""
+
+from repro.kernels.scan_engine import monoids
+from repro.kernels.scan_engine.layouts import Channels, Rows
+from repro.kernels.scan_engine.schedules import (RESOLVABLE, SCHEDULES,
+                                                 exclusive_chain,
+                                                 fused_native_available,
+                                                 resolve_schedule, scan,
+                                                 scan_carry, scan_decoupled,
+                                                 scan_fused, tile_scan)
+
+__all__ = [
+    "Channels", "RESOLVABLE", "Rows", "SCHEDULES", "exclusive_chain",
+    "fused_native_available", "monoids", "resolve_schedule", "scan",
+    "scan_carry", "scan_decoupled", "scan_fused", "tile_scan",
+]

@@ -1,0 +1,203 @@
+"""Grid/tile layouts the monoid-generic schedules are written against.
+
+A layout answers every SHAPE question a schedule has — grid geometry,
+block specs, carry/chunk-total shapes, how to read a tile out of a ref —
+so the schedule bodies in ``schedules.py`` contain no per-family
+geometry. Two layouts cover the four kernel families:
+
+  Rows      (R, N) leaves scanned along the last axis in (bb, bn) VMEM
+            tiles; rows are the paper's threads. Used by the sum,
+            segmented and compact-mask registrations.
+  Channels  (B, T, D) leaves scanned along the TIME axis in (1, bt, bd)
+            tiles; channels ride the 128-lane axis as independent lanes
+            (the paper's §3.2 vertical SIMD — natural on TPU, not a
+            gather penalty). Used by the affine/SSM registration.
+
+Both layouts put the scanned axis LAST in the grid, expose ``chunk``
+axis 1 in their chunk-total arrays, and keep the scan axis at size 1 in
+carry slices so monoid ``combine`` broadcasts carries against tiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _check_divisible(shape, block, what):
+    for s, b in zip(shape, block):
+        if s % b:
+            raise ValueError(
+                f"{what} shape {shape} not divisible by block {block}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rows:
+    """2D (rows, n) leaves, scan along axis 1, blocks (bb, bn)."""
+
+    rows: int
+    n: int
+    bb: int
+    bn: int
+
+    def __post_init__(self):
+        _check_divisible((self.rows, self.n), (self.bb, self.bn), "Rows")
+
+    # -- grid geometry --------------------------------------------------
+    @property
+    def shape(self):
+        return (self.rows, self.n)
+
+    @property
+    def grid(self):
+        return (self.rows // self.bb, self.n // self.bn)
+
+    @property
+    def num_seq_blocks(self):
+        return self.n // self.bn
+
+    @property
+    def seq_grid_axis(self):
+        return len(self.grid) - 1
+
+    scan_axis = 1  # within the (bb, bn) tile
+
+    def semantics(self, seq_kind: str):
+        return ("parallel",) * (len(self.grid) - 1) + (seq_kind,)
+
+    # -- block specs ----------------------------------------------------
+    def data_spec(self):
+        return pl.BlockSpec((self.bb, self.bn), lambda i, j: (i, j))
+
+    def chain_spec(self):
+        return pl.BlockSpec((self.bb, 1), lambda i, j: (i, j))
+
+    @property
+    def chain_shape(self):
+        return (self.rows, self.num_seq_blocks)
+
+    @property
+    def chain_block(self):
+        return (self.bb, 1)
+
+    def carry_scratch(self, dtype):
+        return pltpu.VMEM((self.bb, 1), dtype)
+
+    # -- in-kernel views ------------------------------------------------
+    def read(self, ref):
+        return ref[...]
+
+    def write(self, ref, val):
+        ref[...] = val.astype(ref.dtype)
+
+    def read_carry(self, ref):
+        return ref[...]
+
+    def write_carry(self, ref, val):
+        ref[...] = val.astype(ref.dtype)
+
+    def read_chain(self, ref):
+        return ref[...]
+
+    def write_chain(self, ref, val):
+        ref[...] = val.astype(ref.dtype)
+
+    def take_last(self, x):
+        return x[:, -1:]
+
+    # -- fused-schedule addressing (whole-array HBM refs) ---------------
+    def chain_at(self, ref, seq_index):
+        """Slice one chunk column of the (rows, chunks) chain buffer for
+        this instance's row block."""
+        i = pl.program_id(0)
+        return ref.at[pl.ds(i * self.bb, self.bb), pl.ds(seq_index, 1)]
+
+    def sem_at(self, sem, seq_index):
+        return sem.at[pl.program_id(0), seq_index]
+
+
+@dataclasses.dataclass(frozen=True)
+class Channels:
+    """3D (B, T, D) leaves, scan along axis 1 (time), blocks (1, bt, bd).
+
+    In-kernel tiles are (bt, bd) with time on the SUBLANE axis and
+    channels on lanes; carries are (1, bd) — one state per channel lane.
+    """
+
+    b: int
+    t: int
+    d: int
+    bt: int
+    bd: int
+
+    def __post_init__(self):
+        _check_divisible((self.t, self.d), (self.bt, self.bd), "Channels")
+
+    @property
+    def shape(self):
+        return (self.b, self.t, self.d)
+
+    @property
+    def grid(self):
+        return (self.b, self.d // self.bd, self.t // self.bt)
+
+    @property
+    def num_seq_blocks(self):
+        return self.t // self.bt
+
+    @property
+    def seq_grid_axis(self):
+        return len(self.grid) - 1
+
+    scan_axis = 0  # within the (bt, bd) tile
+
+    def semantics(self, seq_kind: str):
+        return ("parallel",) * (len(self.grid) - 1) + (seq_kind,)
+
+    def data_spec(self):
+        return pl.BlockSpec((1, self.bt, self.bd), lambda i, d, t: (i, t, d))
+
+    def chain_spec(self):
+        return pl.BlockSpec((1, 1, self.bd), lambda i, d, t: (i, t, d))
+
+    @property
+    def chain_shape(self):
+        return (self.b, self.num_seq_blocks, self.d)
+
+    @property
+    def chain_block(self):
+        return (1, 1, self.bd)
+
+    def carry_scratch(self, dtype):
+        return pltpu.VMEM((1, self.bd), dtype)
+
+    def read(self, ref):
+        return ref[0]  # (bt, bd)
+
+    def write(self, ref, val):
+        ref[0] = val.astype(ref.dtype)
+
+    def read_carry(self, ref):
+        return ref[...]  # (1, bd): broadcasts over the (bt, bd) tile
+
+    def write_carry(self, ref, val):
+        ref[...] = val.astype(ref.dtype)
+
+    def read_chain(self, ref):
+        return ref[0]  # (1, bd)
+
+    def write_chain(self, ref, val):
+        ref[0] = val.astype(ref.dtype)
+
+    def take_last(self, x):
+        return x[-1:, :]
+
+    def chain_at(self, ref, seq_index):
+        i, d = pl.program_id(0), pl.program_id(1)
+        return ref.at[pl.ds(i, 1), pl.ds(seq_index, 1),
+                      pl.ds(d * self.bd, self.bd)]
+
+    def sem_at(self, sem, seq_index):
+        return sem.at[pl.program_id(0), pl.program_id(1), seq_index]

@@ -1,0 +1,36 @@
+"""Monoid registrations for the scan engine.
+
+Each of the four kernel families is nothing but one of these entries —
+the kernel specs themselves live next to their library monoids in
+``repro.core.scan.assoc`` (element leaves, identity fills, in-kernel
+combine/select emitters); this module is the kernel-side registry that
+the family ``ops`` wrappers, the parity tests and the benchmark sweep
+iterate over.
+"""
+
+from __future__ import annotations
+
+from repro.core.scan import assoc
+
+SUM = assoc.SUM_KERNEL
+SEGMENTED_SUM = assoc.SEGMENTED_SUM_KERNEL
+AFFINE = assoc.AFFINE_KERNEL
+
+
+def mask(sentinel: int) -> assoc.KernelSpec:
+    """Compact-mask spec: integer mask scan + fused predicate select.
+
+    ``sentinel`` is the destination emitted for dropped lanes (the padded
+    row length, so a size-(n+1) scatter buffer parks them harmlessly).
+    """
+    return assoc.mask_kernel_spec(sentinel)
+
+
+# name -> spec factory taking no arguments (mask gets a default sentinel
+# only meaningful for sweeps/tests; real callers pass their padded N).
+REGISTRY = {
+    "sum": lambda: SUM,
+    "segmented_sum": lambda: SEGMENTED_SUM,
+    "affine": lambda: AFFINE,
+    "mask": lambda: mask(0x7FFFFFFF),
+}

@@ -1,0 +1,424 @@
+"""The three grid organizations, each written ONCE over a KernelSpec.
+
+This is the paper's central claim — prefix-scan performance is decided by
+how the sub-procedures are ORGANIZED, not by the binary operator — turned
+into code structure. Every schedule below is monoid-generic: it calls
+only the ``KernelSpec`` interface (``combine`` / ``fills`` / ``emit``,
+see ``repro.core.scan.assoc``) plus a ``Layout`` for geometry, so sum,
+segmented, affine-SSM and compact-mask all run the SAME bodies:
+
+  carry      the paper's single-pass accumulate (SIMD-P) partitioned over
+             VMEM tiles: sequential grid along the scanned axis, the
+             inter-block state in VMEM scratch. HBM: read n + write n.
+  decoupled  the paper's reduce-then-scan (SIMD2-P, Observation 3): a
+             fully parallel totals pass, a tiny sequential combine chain
+             over chunk totals, a fully parallel apply pass. HBM: read 2n
+             + write n — the price of spreading ONE row across cores.
+  fused      decoupled in a single launch: every chunk computes its local
+             scan once, then chains its prefix to its successor through
+             cross-chunk semaphores (Merrill-style chained scan). HBM:
+             read n + write n with decoupled's parallelism. Requires the
+             TPU semaphore API; under interpret mode (or when the API is
+             missing) it degrades to the two-launch decoupled schedule —
+             same organization, same bits.
+
+Bit-identity across schedules holds by construction for every monoid:
+all three run the identical in-tile scan network, and the decoupled/fused
+combine chains apply ``combine`` in exactly the carry chain's order
+(``combine`` is pointwise along the scan axis, so combining a carry into
+a block and then taking the last column equals combining it into the last
+column directly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.scan import policy
+from repro.core.scan.assoc import KernelSpec
+from repro.kernels import pallas_compat
+
+LANES = 128
+
+SCHEDULES = ("carry", "decoupled", "fused")
+RESOLVABLE = SCHEDULES + ("auto",)
+
+
+def resolve_schedule(schedule: str, batch: int, n: int,
+                     block_elems: int) -> str:
+    """'auto' -> the policy's three-way rule; else validate.
+
+    Shared by every family's ops wrapper. ``block_elems`` is the chunk
+    length the kernel will ACTUALLY tile the scanned axis with — the
+    policy's chunks-per-core test is only meaningful against the real
+    grid.
+    """
+    if schedule not in RESOLVABLE:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; one of {RESOLVABLE}")
+    if schedule == "auto":
+        return policy.choose_schedule(batch, n, block_elems=block_elems)
+    return schedule
+
+
+# ---------------------------------------------------------------------------
+# Monoid-generic in-tile scan network
+# ---------------------------------------------------------------------------
+
+
+def _shift(x, k, axis, fill):
+    """Shift ``x`` right by ``k`` along ``axis``, filling with identity."""
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (k, 0)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(0, x.shape[axis])
+    return jnp.pad(x, pad, constant_values=fill)[tuple(sl)]
+
+
+def shift_one(spec: KernelSpec, leaves, axis):
+    """Exclusive shift: one step right, identity-filled (all leaves)."""
+    return tuple(
+        _shift(x, 1, axis, f) for x, f in zip(leaves, spec.fills))
+
+
+def log_scan(spec: KernelSpec, leaves, axis):
+    """Hillis–Steele log-step inclusive scan of monoid leaves (§3.1)."""
+    n = leaves[0].shape[axis]
+    k = 1
+    while k < n:
+        shifted = tuple(
+            _shift(x, k, axis, f) for x, f in zip(leaves, spec.fills))
+        leaves = spec.combine(shifted, leaves)
+        k *= 2
+    return leaves
+
+
+def tile_scan(spec: KernelSpec, leaves, axis):
+    """In-tile inclusive scan; two-level lane/sublane split on lane axes.
+
+    When the scan axis is the (128-wide) lane axis and divisible, run the
+    paper's Fig. 3 scheme lifted to the monoid: scan within each lane row,
+    exclusive-scan the row totals along sublanes, broadcast-combine —
+    "scan the vector in register, broadcast the last element".
+    """
+    x0 = leaves[0]
+    n = x0.shape[axis]
+    last = x0.ndim - 1
+    if axis == last and n > LANES and n % LANES == 0:
+        r = n // LANES
+        ts = tuple(
+            x.reshape(x.shape[:-1] + (r, LANES)) for x in leaves)
+        ts = log_scan(spec, ts, axis=ts[0].ndim - 1)
+        tot = tuple(t[..., LANES - 1] for t in ts)      # per-row totals
+        off = log_scan(spec, tot, axis=tot[0].ndim - 1)
+        off = shift_one(spec, off, axis=off[0].ndim - 1)  # exclusive
+        ts = spec.combine(tuple(o[..., None] for o in off), ts)
+        return tuple(t.reshape(x.shape) for t, x in zip(ts, leaves))
+    return log_scan(spec, leaves, axis)
+
+
+def exclusive_chain(spec: KernelSpec, totals, axis: int = 1):
+    """Sequential exclusive monoid scan of chunk totals along ``axis``.
+
+    Left-to-right ``lax.scan`` applying ``combine`` in EXACTLY the carry
+    schedule's association order — this is what makes the decoupled and
+    fused organizations bit-identical to the carry chain.
+    """
+    init = tuple(
+        jnp.full_like(jax.lax.index_in_dim(t, 0, axis, keepdims=False), f)
+        for t, f in zip(totals, spec.fills))
+
+    def step(carry, t):
+        return spec.combine(carry, t), carry
+
+    moved = tuple(jnp.moveaxis(t, axis, 0) for t in totals)
+    _, offs = jax.lax.scan(step, init, moved)
+    return tuple(jnp.moveaxis(o, 0, axis) for o in offs)
+
+
+# ---------------------------------------------------------------------------
+# Shared kernel-body pieces
+# ---------------------------------------------------------------------------
+
+
+def _scan_block(spec, layout, data_refs, elem_dts):
+    raw = tuple(layout.read(r) for r in data_refs)
+    elems = tuple(r.astype(dt) for r, dt in zip(raw, elem_dts))
+    scanned = tile_scan(spec, elems, layout.scan_axis)
+    return elems, scanned
+
+
+def _emit(spec, layout, out_refs, elems, combined):
+    if spec.emit is not None:
+        outs = spec.emit(elems, combined)
+    else:
+        outs = tuple(combined[i] for i in spec.out_leaves)
+    for r, o in zip(out_refs, outs):
+        layout.write(r, o)
+
+
+def _dtypes(spec, operands):
+    in_dts = tuple(jnp.dtype(o.dtype) for o in operands)
+    return spec.elem_dtypes(in_dts), spec.out_dtypes(in_dts)
+
+
+# ---------------------------------------------------------------------------
+# Schedule 1: carry (single-pass accumulate, grid-carried total)
+# ---------------------------------------------------------------------------
+
+
+def _carry_body(*refs, spec, layout, elem_dts, n_out, exclusive):
+    n_elem = spec.n_leaves
+    n_ops = len(refs) - n_out - n_elem
+    data_refs = refs[:n_ops]
+    out_refs = refs[n_ops:n_ops + n_out]
+    carry_refs = refs[n_ops + n_out:]
+    j = pl.program_id(layout.seq_grid_axis)
+
+    @pl.when(j == 0)
+    def _reset():
+        # New row/stripe: reset the running state to the monoid identity.
+        for r, f in zip(carry_refs, spec.fills):
+            r[...] = jnp.full(r.shape, f, r.dtype)
+
+    elems, scanned = _scan_block(spec, layout, data_refs, elem_dts)
+    carry = tuple(layout.read_carry(r) for r in carry_refs)
+    sel = shift_one(spec, scanned, layout.scan_axis) if exclusive else scanned
+    combined = spec.combine(carry, sel)       # carry is the EARLIER operand
+    _emit(spec, layout, out_refs, elems, combined)
+    new_carry = spec.combine(
+        carry, tuple(layout.take_last(s) for s in scanned))
+    for r, c in zip(carry_refs, new_carry):
+        layout.write_carry(r, c)
+
+
+def scan_carry(operands, spec, layout, *, exclusive=False, interpret=False):
+    elem_dts, out_dts = _dtypes(spec, operands)
+    body = functools.partial(
+        _carry_body, spec=spec, layout=layout, elem_dts=elem_dts,
+        n_out=len(out_dts), exclusive=exclusive)
+    return tuple(pl.pallas_call(
+        body,
+        grid=layout.grid,
+        in_specs=[layout.data_spec()] * len(operands),
+        out_specs=[layout.data_spec()] * len(out_dts),
+        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts],
+        scratch_shapes=[layout.carry_scratch(dt) for dt in elem_dts],
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=layout.semantics("arbitrary")),
+        interpret=interpret,
+        name=f"scan_{spec.name}_carry",
+    )(*operands))
+
+
+# ---------------------------------------------------------------------------
+# Schedule 2: decoupled (reduce-then-scan, two launches)
+# ---------------------------------------------------------------------------
+
+
+def _totals_body(*refs, spec, layout, elem_dts):
+    n_elem = spec.n_leaves
+    n_ops = len(refs) - n_elem
+    data_refs = refs[:n_ops]
+    tot_refs = refs[n_ops:]
+    _, scanned = _scan_block(spec, layout, data_refs, elem_dts)
+    for r, s in zip(tot_refs, scanned):
+        layout.write_chain(r, layout.take_last(s))
+
+
+def _apply_body(*refs, spec, layout, elem_dts, n_out, exclusive):
+    n_elem = spec.n_leaves
+    n_ops = len(refs) - n_out - n_elem
+    data_refs = refs[:n_ops]
+    off_refs = refs[n_ops:n_ops + n_elem]
+    out_refs = refs[n_ops + n_elem:]
+    elems, scanned = _scan_block(spec, layout, data_refs, elem_dts)
+    carry = tuple(layout.read_chain(r) for r in off_refs)
+    sel = shift_one(spec, scanned, layout.scan_axis) if exclusive else scanned
+    combined = spec.combine(carry, sel)
+    _emit(spec, layout, out_refs, elems, combined)
+
+
+def scan_decoupled(operands, spec, layout, *, exclusive=False,
+                   interpret=False):
+    elem_dts, out_dts = _dtypes(spec, operands)
+    par = pallas_compat.compiler_params(
+        dimension_semantics=layout.semantics("parallel"))
+
+    totals = pl.pallas_call(
+        functools.partial(
+            _totals_body, spec=spec, layout=layout, elem_dts=elem_dts),
+        grid=layout.grid,
+        in_specs=[layout.data_spec()] * len(operands),
+        out_specs=[layout.chain_spec()] * spec.n_leaves,
+        out_shape=[jax.ShapeDtypeStruct(layout.chain_shape, dt)
+                   for dt in elem_dts],
+        compiler_params=par,
+        interpret=interpret,
+        name=f"scan_{spec.name}_totals",
+    )(*operands)
+
+    offsets = exclusive_chain(spec, tuple(totals))
+
+    return tuple(pl.pallas_call(
+        functools.partial(
+            _apply_body, spec=spec, layout=layout, elem_dts=elem_dts,
+            n_out=len(out_dts), exclusive=exclusive),
+        grid=layout.grid,
+        in_specs=[layout.data_spec()] * len(operands)
+        + [layout.chain_spec()] * spec.n_leaves,
+        out_specs=[layout.data_spec()] * len(out_dts),
+        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts],
+        compiler_params=par,
+        interpret=interpret,
+        name=f"scan_{spec.name}_apply",
+    )(*operands, *offsets))
+
+
+# ---------------------------------------------------------------------------
+# Schedule 3: fused (single-launch decoupled, cross-chunk semaphores)
+# ---------------------------------------------------------------------------
+
+
+# Safety gate for the native single-launch path: it has never executed on
+# real hardware (this container is CPU-only), and its liveness rests on an
+# unverified assumption about Mosaic's parallel sub-grid traversal order.
+# Until someone validates it on a TPU (ROADMAP), EVERY "fused" request —
+# including policy-auto production routes — runs the two-launch decoupled
+# organization, which is bit-identical. Flip to True (or monkeypatch) for
+# the on-TPU validation run.
+FUSED_NATIVE_ENABLED = False
+
+
+def fused_native_available() -> bool:
+    """Whether the single-launch chained scan can actually run here.
+
+    Needs the validation gate open, a real TPU backend (the
+    chained-semaphore protocol has no interpreter support), and a jax
+    that exposes the semaphore API.
+    """
+    return (FUSED_NATIVE_ENABLED
+            and jax.default_backend() == "tpu"
+            and pallas_compat.has_semaphores())
+
+
+def _fused_body(*refs, spec, layout, elem_dts, n_out, exclusive):
+    # refs: data ops | outs | HBM chain bufs | 2×staging | 3 semaphores
+    n_elem = spec.n_leaves
+    n_ops = len(refs) - n_out - 3 * n_elem - 3
+    data_refs = refs[:n_ops]
+    out_refs = refs[n_ops:n_ops + n_out]
+    pref_refs = refs[n_ops + n_out:n_ops + n_out + n_elem]  # HBM chain bufs
+    scratch = refs[n_ops + n_out + n_elem:]
+    stage_in = scratch[:n_elem]           # VMEM landing for pred prefix
+    stage_out = scratch[n_elem:2 * n_elem]  # VMEM staging for own prefix
+    sems, dsem_in, dsem_out = scratch[2 * n_elem:2 * n_elem + 3]
+
+    j = pl.program_id(layout.seq_grid_axis)
+    nseq = layout.num_seq_blocks
+    elems, scanned = _scan_block(spec, layout, data_refs, elem_dts)
+    total = tuple(layout.take_last(s) for s in scanned)
+
+    @pl.when(j > 0)
+    def _await_predecessor():
+        # Predecessor signals only after its prefix DMA has landed in HBM.
+        pallas_compat.semaphore_wait(layout.sem_at(sems, j - 1), 1)
+        for p, s in zip(pref_refs, stage_in):
+            cp = pallas_compat.async_copy(layout.chain_at(p, j - 1), s,
+                                          dsem_in)
+            cp.start()
+            cp.wait()
+
+    prefix = tuple(
+        jnp.where(j > 0, layout.read_chain(s),
+                  jnp.full_like(layout.read_chain(s), f))
+        for s, f in zip(stage_in, spec.fills))
+
+    @pl.when(j < nseq - 1)
+    def _publish():
+        # Publish combine(prefix_in, total) for the successor, then signal.
+        new_prefix = spec.combine(prefix, total)
+        for s, p, v in zip(stage_out, pref_refs, new_prefix):
+            layout.write_chain(s, v)
+            cp = pallas_compat.async_copy(s, layout.chain_at(p, j), dsem_out)
+            cp.start()
+            cp.wait()
+        pallas_compat.semaphore_signal(layout.sem_at(sems, j), 1)
+
+    sel = shift_one(spec, scanned, layout.scan_axis) if exclusive else scanned
+    combined = spec.combine(prefix, sel)
+    _emit(spec, layout, out_refs, elems, combined)
+
+
+def scan_fused(operands, spec, layout, *, exclusive=False, interpret=False):
+    """Single-launch decoupled: chunk prefixes chained through semaphores.
+
+    EXPERIMENTAL on-device path (pending real-TPU validation — see
+    ROADMAP): each grid instance scans its chunk once, waits for its
+    predecessor's published prefix, combines, republishes, and fuses the
+    prefix into its own writeback — read n + write n total, with the
+    scanned axis spread across cores. Correct under Mosaic's ascending
+    per-core traversal of parallel grid dimensions (contiguous slabs or
+    round-robin both chain forward). Until ``FUSED_NATIVE_ENABLED`` is
+    flipped after on-TPU validation — and always off-TPU / under
+    interpret mode — callers get the two-launch decoupled schedule: the
+    same organization split into two ``pallas_call``s, bit-identical
+    results.
+    """
+    if interpret or not fused_native_available():
+        return scan_decoupled(operands, spec, layout, exclusive=exclusive,
+                              interpret=interpret)
+    elem_dts, out_dts = _dtypes(spec, operands)
+    n_elem = spec.n_leaves
+    grid = layout.grid
+    outs = pl.pallas_call(
+        functools.partial(
+            _fused_body, spec=spec, layout=layout, elem_dts=elem_dts,
+            n_out=len(out_dts), exclusive=exclusive),
+        grid=grid,
+        in_specs=[layout.data_spec()] * len(operands),
+        out_specs=[layout.data_spec()] * len(out_dts)
+        + [pl.BlockSpec(memory_space=pallas_compat.any_memory_space())]
+        * n_elem,
+        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts]
+        + [jax.ShapeDtypeStruct(layout.chain_shape, dt) for dt in elem_dts],
+        scratch_shapes=(
+            [pltpu.VMEM(layout.chain_block, dt) for dt in elem_dts]
+            + [pltpu.VMEM(layout.chain_block, dt) for dt in elem_dts]
+            + [pallas_compat.regular_semaphores(grid),
+               pallas_compat.dma_semaphore(),
+               pallas_compat.dma_semaphore()]),
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=layout.semantics("parallel")),
+        interpret=interpret,
+        name=f"scan_{spec.name}_fused",
+    )(*operands)
+    return tuple(outs[:len(out_dts)])  # drop the HBM chain buffers
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
+         exclusive: bool = False, interpret: bool = False):
+    """Run ``spec``'s monoid scan over ``operands`` under one schedule.
+
+    Returns a tuple of output arrays (most registrations emit one).
+    """
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}; one of {SCHEDULES}")
+    if exclusive and not spec.supports_exclusive:
+        raise ValueError(
+            f"monoid {spec.name!r} does not support exclusive mode")
+    fn = {"carry": scan_carry, "decoupled": scan_decoupled,
+          "fused": scan_fused}[schedule]
+    return fn(tuple(operands), spec, layout, exclusive=exclusive,
+              interpret=interpret)

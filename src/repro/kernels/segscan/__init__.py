@@ -1,7 +1,6 @@
-from repro.kernels.segscan.decoupled import segscan_decoupled
-from repro.kernels.segscan.ops import segmented_cumsum
+from repro.kernels.segscan.ops import (segmented_cumsum, segscan_decoupled,
+                                       segscan_kernel)
 from repro.kernels.segscan.ref import segmented_cumsum_ref
-from repro.kernels.segscan.segscan import segscan_kernel
 
 __all__ = ["segmented_cumsum", "segmented_cumsum_ref", "segscan_decoupled",
            "segscan_kernel"]

@@ -1,9 +1,13 @@
-"""Jitted public wrapper for the segmented-scan kernels.
+"""Segmented prefix sum: the SEGMENTED_SUM registration of the engine.
 
-Pads with identity elements — (value 0, flag 0) extends the final
+The segmented ``(value, flag)`` monoid (a flag kills the incoming carry —
+Blelloch's lift, see ``core/scan/assoc.SEGMENTED_SUM_KERNEL``) run
+through the monoid-generic scan engine on the Rows layout. The wrapper
+pads with identity elements — (value 0, flag 0) extends the final
 segment, which the slice-back removes — and handles arbitrary rank.
 ``schedule`` picks the grid organization (see ``core/scan/policy``):
-carry-chain, decoupled reduce-then-scan, or the policy's auto rule.
+carry chain, two-launch decoupled, single-launch fused, or the policy's
+auto rule.
 """
 
 from __future__ import annotations
@@ -13,9 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.scan_blocked.ops import resolve_schedule
-from repro.kernels.segscan.decoupled import segscan_decoupled
-from repro.kernels.segscan.segscan import segscan_kernel
+from repro.kernels import scan_engine
+from repro.kernels.scan_engine import monoids, resolve_schedule
 
 
 def _on_tpu() -> bool:
@@ -31,7 +34,9 @@ def _impl(values, flags, block_b, block_n, interpret, schedule):
     for d in lead:
         b *= d
     v2 = values.reshape(b, n)
-    f2 = flags.reshape(b, n).astype(jnp.int32)
+    # Normalize BEFORE the int cast: a fractional float flag (0.5) must
+    # still mark a boundary; astype alone would truncate it to 0.
+    f2 = (flags.reshape(b, n) != 0).astype(jnp.int32)
 
     bb = min(block_b, b) if b % min(block_b, b) == 0 else 1
     bn = min(block_n, -(-n // 128) * 128)
@@ -39,8 +44,10 @@ def _impl(values, flags, block_b, block_n, interpret, schedule):
     pad_n = (-n) % bn
     v2 = jnp.pad(v2, ((0, pad_b), (0, pad_n)))
     f2 = jnp.pad(f2, ((0, pad_b), (0, pad_n)))
-    kernel = segscan_decoupled if schedule == "decoupled" else segscan_kernel
-    out = kernel(v2, f2, block_b=bb, block_n=bn, interpret=interpret)
+    layout = scan_engine.Rows(v2.shape[0], v2.shape[1], bb, bn)
+    out, = scan_engine.scan(
+        (v2, f2), monoids.SEGMENTED_SUM, layout, schedule=schedule,
+        interpret=interpret)
     return out[:b, :n].reshape(lead + (n,))
 
 
@@ -53,6 +60,9 @@ def segmented_cumsum(
     schedule: str = "auto",
 ) -> jax.Array:
     """Kernel-backed segmented cumsum along the last axis (any rank)."""
+    if values.shape != flags.shape:
+        raise ValueError(
+            f"expect matching shapes, got {values.shape} {flags.shape}")
     if interpret is None:
         interpret = not _on_tpu()
     n = values.shape[-1]
@@ -60,3 +70,33 @@ def segmented_cumsum(
     bn = min(block_n, -(-n // 128) * 128)  # the block _impl uses
     schedule = resolve_schedule(schedule, batch, n, bn)
     return _impl(values, flags, block_b, block_n, interpret, schedule)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat kernel entry points (PR-1 signatures; 2D, pre-padded)
+# ---------------------------------------------------------------------------
+
+
+def _segscan_2d(values, flags, block_b, block_n, interpret, schedule):
+    if values.shape != flags.shape or values.ndim != 2:
+        raise ValueError(
+            f"expect matching 2D inputs, got {values.shape} {flags.shape}")
+    layout = scan_engine.Rows(values.shape[0], values.shape[1], block_b,
+                              block_n)
+    out, = scan_engine.scan(
+        (values, (flags != 0).astype(jnp.int32)), monoids.SEGMENTED_SUM,
+        layout, schedule=schedule, interpret=interpret)
+    return out
+
+
+def segscan_kernel(values, flags, *, block_b=8, block_n=2048,
+                   interpret=False):
+    """Carry-schedule segmented cumsum of pre-padded 2D (B, N) inputs."""
+    return _segscan_2d(values, flags, block_b, block_n, interpret, "carry")
+
+
+def segscan_decoupled(values, flags, *, block_b=8, block_n=2048,
+                      interpret=False):
+    """Decoupled-schedule segmented cumsum of pre-padded 2D inputs."""
+    return _segscan_2d(values, flags, block_b, block_n, interpret,
+                       "decoupled")

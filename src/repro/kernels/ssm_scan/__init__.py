@@ -1,7 +1,6 @@
-from repro.kernels.ssm_scan.decoupled import ssm_scan_decoupled
-from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ops import (resolved_schedule, ssm_scan,
+                                        ssm_scan_decoupled, ssm_scan_kernel)
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
-from repro.kernels.ssm_scan.ssm_scan import ssm_scan_kernel
 
-__all__ = ["ssm_scan", "ssm_scan_ref", "ssm_scan_decoupled",
-           "ssm_scan_kernel"]
+__all__ = ["resolved_schedule", "ssm_scan", "ssm_scan_ref",
+           "ssm_scan_decoupled", "ssm_scan_kernel"]

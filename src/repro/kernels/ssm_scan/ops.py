@@ -1,13 +1,19 @@
-"""Jitted public wrapper for the SSM affine-scan kernels.
+"""Affine (SSM-recurrence) scan: the AFFINE registration of the engine.
+
+Computes ``h_t = a_t * h_{t-1} + b_t`` along the time axis of (B, T, D)
+inputs — the inclusive scan of ``core/scan/assoc.AFFINE_KERNEL`` run
+through the monoid-generic engine on the Channels layout (time on
+sublanes, channels on the 128-lane axis: the paper's §3.2 vertical SIMD,
+which is the natural TPU layout rather than a gather penalty).
 
 Pads T to a block multiple with the identity element (a=1, b=0) — identity
 padding keeps the carried state unchanged, so results are exact after the
-slice — and pads D with zeros.  ``schedule`` picks the grid organization
+slice — and pads D with zeros. ``schedule`` picks the grid organization
 (see ``core/scan/policy``): the carry chain walks time sequentially per
-(batch, channel) stripe; decoupled spreads time chunks across cores —
-the B=1 long-context prefill/decode shape. Channels count as batch for
-the policy rule (they are independent lanes the carry grid already
-parallelizes).
+(batch, channel) stripe; decoupled/fused spread time chunks across cores
+— the B=1 long-context prefill/decode shape. Channel blocks count as
+batch for the policy rule (they are independent stripes the carry grid
+already parallelizes).
 """
 
 from __future__ import annotations
@@ -17,9 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.scan_blocked.ops import resolve_schedule
-from repro.kernels.ssm_scan.decoupled import ssm_scan_decoupled
-from repro.kernels.ssm_scan.ssm_scan import ssm_scan_kernel
+from repro.kernels import scan_engine
+from repro.kernels.scan_engine import monoids, resolve_schedule
 
 
 def _on_tpu() -> bool:
@@ -37,13 +42,32 @@ def _impl(a, b, block_t, block_d, interpret, schedule):
     pad_d = (-D) % bd
     a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_d)), constant_values=1)
     b = jnp.pad(b, ((0, 0), (0, pad_t), (0, pad_d)))
-    kernel = ssm_scan_decoupled if schedule == "decoupled" else ssm_scan_kernel
-    out = kernel(a, b, block_t=bt, block_d=bd, interpret=interpret)
+    layout = scan_engine.Channels(B, T + pad_t, D + pad_d, bt, bd)
+    out, = scan_engine.scan(
+        (a, b), monoids.AFFINE, layout, schedule=schedule,
+        interpret=interpret)
     return out[:, :T, :D]
 
 
 def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
+
+
+def resolved_schedule(shape, block_t: int = 256, block_d: int = 512,
+                      schedule: str = "auto") -> str:
+    """The schedule a (B, T, D) affine scan will actually run.
+
+    Mirrors ``ssm_scan``'s tiling: the carry grid already parallelizes
+    (B, D-blocks) stripes, so the policy's "batch" is the number of
+    independent carry chains and its chunk length is the real time block.
+    Exposed so consumers (serve engine tests, benchmarks) can assert the
+    decode/prefill shape class lands on a parallel-sequence schedule.
+    """
+    B, T, D = shape
+    bt = min(block_t, _round_up(T, 8))
+    bd = min(block_d, _round_up(D, 128))
+    batch = B * max(-(-D // bd), 1)
+    return resolve_schedule(schedule, batch, T, bt)
 
 
 def ssm_scan(
@@ -57,12 +81,32 @@ def ssm_scan(
     """Kernel-backed h_t = a_t ⊙ h_{t-1} + b_t over (B, T, D)."""
     if interpret is None:
         interpret = not _on_tpu()
-    B, T, D = a.shape
-    # Mirror _impl's actual tiling: the carry grid already parallelizes
-    # (B, D-blocks), so the policy's "batch" is the number of independent
-    # carry chains, and its chunk length is the real time block.
-    bt = min(block_t, _round_up(T, 8))
-    bd = min(block_d, _round_up(D, 128))
-    batch = B * max(-(-D // bd), 1)
-    schedule = resolve_schedule(schedule, batch, T, bt)
+    schedule = resolved_schedule(a.shape, block_t, block_d, schedule)
     return _impl(a, b, block_t, block_d, interpret, schedule)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat kernel entry points (PR-1 signatures; 3D, pre-padded)
+# ---------------------------------------------------------------------------
+
+
+def _ssm_3d(a, b, block_t, block_d, interpret, schedule):
+    if a.shape != b.shape or a.ndim != 3:
+        raise ValueError(
+            f"expect matching (B, T, D) inputs, got {a.shape} {b.shape}")
+    B, T, D = a.shape
+    layout = scan_engine.Channels(B, T, D, block_t, block_d)
+    out, = scan_engine.scan(
+        (a, b), monoids.AFFINE, layout, schedule=schedule,
+        interpret=interpret)
+    return out
+
+
+def ssm_scan_kernel(a, b, *, block_t=256, block_d=512, interpret=False):
+    """Carry-schedule affine scan of pre-padded (B, T, D) inputs."""
+    return _ssm_3d(a, b, block_t, block_d, interpret, "carry")
+
+
+def ssm_scan_decoupled(a, b, *, block_t=256, block_d=512, interpret=False):
+    """Decoupled-schedule affine scan of pre-padded (B, T, D) inputs."""
+    return _ssm_3d(a, b, block_t, block_d, interpret, "decoupled")

@@ -12,9 +12,12 @@ scan, instantiated twice:
      the scan over chunk totals, pass 2 combines the exclusive prefix back
      into each chunk's outputs.
 
-The inter-chunk scan runs through ``repro.core.scan`` (autodiff-able) by
-default; ``impl="kernel"`` routes the diagonal-decay carry through the
-Pallas ``ssm_scan`` kernel (inference path).
+The inter-chunk scan runs through ``repro.core.scan`` (autodiff-able)
+when training; on the TPU serve path (``cache`` present) ``impl="auto"``
+routes the diagonal-decay carry through the Pallas ``ssm_scan`` kernel
+with ``schedule="auto"``, so the policy's three-way grid rule (carry /
+decoupled / fused — ``core/scan/policy.choose_schedule``) governs the
+decode recurrence end to end.
 """
 
 from __future__ import annotations
@@ -115,13 +118,26 @@ def apply_ssm(
     cfg: ModelConfig,
     *,
     cache: Optional[dict] = None,
-    impl: str = "chunked",
+    impl: str = "auto",
 ):
     """Mamba2 over (B, T, D) -> (y, new_cache).
 
     Training / prefill: ``cache=None`` (or a prior state to continue from),
     chunked SSD path. Decode: ``T == 1`` recurrent update.
+
+    ``impl="auto"`` routes the SERVE path (cache present — the engine's
+    prefill-into-slot and multi-token decode) through the Pallas
+    ``ssm_scan`` kernel with ``schedule="auto"``, so long low-batch
+    sequences land on the policy's parallel-sequence schedule end to end.
+    The route is gated to TPU (off-TPU the kernel would run the Pallas
+    interpreter — same gate as ``relational``'s auto rules); the training
+    path (``cache=None``) stays on the autodiff-able chunked reference
+    scan everywhere. ``impl="kernel"`` forces the kernel route on any
+    backend (interpret mode off-TPU).
     """
+    if impl == "auto":
+        serve = cache is not None and jax.default_backend() == "tpu"
+        impl = "kernel" if serve else "chunked"
     B, T, D = x.shape
     H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
     inner, _ = _dims(cfg)

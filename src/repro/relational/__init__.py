@@ -19,13 +19,15 @@ Load-bearing consumers: ``models/layers/moe.py`` (expert dispatch via
 from repro.relational.compact import (compact_indices, filter_compact,
                                       mask_ranks)
 from repro.relational.groupby import group_by, group_by_sorted
-from repro.relational.join import JoinResult, hash_join
+from repro.relational.join import (JoinResult, estimate_max_matches,
+                                   hash_join)
 from repro.relational.partition import (PartitionPlan, partition_plan,
                                         radix_partition)
 from repro.relational.sort import argsort, radix_sort
 
 __all__ = [
     "JoinResult", "PartitionPlan", "argsort", "compact_indices",
+    "estimate_max_matches",
     "filter_compact", "group_by", "group_by_sorted", "hash_join",
     "mask_ranks", "partition_plan", "radix_partition", "radix_sort",
 ]

@@ -3,8 +3,9 @@
 The paper's §1 filter use case as a library operator: every surviving
 element's new index is the exclusive prefix sum of the keep-mask — a
 scan over ``repro.core.scan`` (reference path) or the fused Pallas
-kernel in ``repro.kernels.compact`` (decoupled reduce-then-scan mask
-scan with the predicate select fused into the writeback).
+kernel in ``repro.kernels.compact`` (the scan engine's mask-monoid
+registration: predicate select fused into the writeback, running under
+whichever grid schedule the policy picks).
 
 Outputs are fixed-size (jit-friendly): ``filter_compact`` returns a
 ``size``-length buffer plus the live count, with dropped positions
@@ -43,8 +44,9 @@ def mask_ranks(mask: jax.Array, *, algorithm: str = "auto",
         return m
     if _resolve(algorithm) == "kernel":
         from repro.kernels.scan_blocked import ops as sb_ops
-        return sb_ops.cumsum(m, exclusive=True, interpret=interpret,
-                             schedule="decoupled")
+        # schedule="auto": the policy's three-way grid rule (a single
+        # long mask row lands on the parallel-sequence schedules).
+        return sb_ops.cumsum(m, exclusive=True, interpret=interpret)
     return scanlib.cumsum(m, exclusive=True, algorithm="blocked")
 
 

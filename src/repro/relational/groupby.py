@@ -20,11 +20,36 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scan import assoc
+from repro.core.scan import policy
 from repro.core.scan import segmented as _segmented
 from repro.relational.compact import filter_compact
 from repro.relational.partition import partition_plan
 
 _AGGS = ("sum", "prod", "max", "min", "count", "mean")
+_ALGORITHMS = ("auto", "ref", "kernel")
+
+
+def _seg_algorithm(algorithm: str, op: str, n: int, itemsize: int) -> str:
+    """Resolve the segmented-scan backend for a length-``n`` run.
+
+    ``auto`` routes long runs onto the Pallas segscan kernel — gated by
+    the SAME policy threshold that picks the kernel algorithm for plain
+    scans (``policy.choose``: bandwidth-bound sizes that overflow the
+    VMEM block budget) — and only on TPU, where the fused kernel wins;
+    off-TPU it would run the Pallas interpreter, so the library scan is
+    the sane default. The kernel path covers the sum monoid (which
+    ``mean``/``count`` reduce to); other aggregates stay on the library
+    scan.
+    """
+    if algorithm not in _ALGORITHMS:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; one of {_ALGORITHMS}")
+    if algorithm != "auto":
+        return algorithm
+    if op != "sum" or jax.default_backend() != "tpu":
+        return "ref"
+    choice = policy.choose(n, itemsize, kernel_available=True)
+    return "kernel" if choice.algorithm == "kernel" else "ref"
 
 
 def _identity_result(agg: str, shape, dtype):
@@ -37,13 +62,18 @@ def _identity_result(agg: str, shape, dtype):
 
 
 def group_by(group_ids: jax.Array, values: jax.Array, num_groups: int,
-             agg: str = "sum") -> jax.Array:
+             agg: str = "sum", algorithm: str = "auto") -> jax.Array:
     """Per-group aggregate of (T, ...) ``values`` by (T,) dense ids.
 
     Returns a (num_groups, ...) array; empty groups hold the aggregate's
     identity (0 for sum/mean/count, the monoid identity otherwise) —
     ``group_by(ids, v, G, "sum")`` equals ``jax.ops.segment_sum(v, ids,
     num_segments=G)`` bit-exactly for integer values.
+
+    ``algorithm`` picks the segmented-scan backend: ``"ref"`` (library
+    scan), ``"kernel"`` (Pallas segscan), or ``"auto"`` — kernel for long
+    runs past the policy's bandwidth-bound threshold on TPU (see
+    ``_seg_algorithm``).
     """
     if agg not in _AGGS:
         raise ValueError(f"unknown agg {agg!r}; one of {_AGGS}")
@@ -66,7 +96,16 @@ def group_by(group_ids: jax.Array, values: jax.Array, num_groups: int,
     # next group's offset — `set` keeps the flag at 1, no phantom runs).
     flags = jnp.zeros((T + 1,), jnp.int32).at[plan.offsets].set(1)[:T]
     op = "sum" if agg == "mean" else agg
-    seg = _segmented.segmented_scan(sv, flags, op=op, axis=0)
+    algo = _seg_algorithm(algorithm, op, T, values.dtype.itemsize)
+    if algo == "kernel":
+        # Broadcast the (T,) flags over trailing value dims: the kernel
+        # wrapper flattens leading axes into rows of the (rows, T) grid.
+        kflags = jnp.broadcast_to(
+            flags.reshape((T,) + (1,) * (sv.ndim - 1)), sv.shape)
+        seg = _segmented.segmented_scan(sv, kflags, op=op, axis=0,
+                                        algorithm="kernel")
+    else:
+        seg = _segmented.segmented_scan(sv, flags, op=op, axis=0)
     ends = jnp.clip(plan.offsets + plan.counts - 1, 0, T - 1)
     gathered = seg[ends]  # (G, ...) — last element of each run
     nonempty = (plan.counts > 0).reshape(

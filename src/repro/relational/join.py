@@ -13,8 +13,17 @@ citation for the same prefix-sum pattern on GPUs):
          paper's "new index values" once more, now over the result set.
 
 Output is fixed-size and jit-friendly: index pairs padded with -1 plus
-the live pair count. ``max_matches=None`` sizes the output exactly by
-materializing the count (eager only); under ``jit`` pass a static cap.
+the live pair count. Capacity policy (``max_matches``):
+
+  * ``"auto"`` (default) — SPILL-SAFE: size the output to the histogram
+    product upper bound Σ_b |L_b|·|R_b| over radix buckets of the key
+    domain (``estimate_max_matches``). The bound dominates the true match
+    count for every key distribution, so no pair is ever dropped, and it
+    collapses to ~the exact count when buckets are fine enough. Eager
+    only (the capacity is a shape).
+  * ``None`` — exact: materialize the true count (eager only).
+  * ``int`` — static cap for ``jit``; pairs beyond the cap are dropped
+    but ``count`` still reports the true total.
 """
 
 from __future__ import annotations
@@ -45,12 +54,60 @@ class JoinResult(NamedTuple):
     count: jax.Array
 
 
+def _radix_buckets(keys: jax.Array, bits: int) -> jax.Array:
+    """``bits``-wide histogram bucket of each key.
+
+    Equal keys land in the same bucket by construction — the only
+    property the upper bound needs. Two care points: signed zeros are
+    canonicalized EXACTLY like the match path (-0.0 must share +0.0's
+    bucket, or the bound undercounts and drops pairs), and the key goes
+    through a Fibonacci multiplicative hash before the bucket is taken,
+    so stride-aligned key families (hash/pointer-like ids that collide
+    modulo 2^bits) spread across buckets instead of degenerating the
+    bound to |L|·|R|.
+    """
+    if jnp.issubdtype(keys.dtype, jnp.floating):
+        keys = jnp.where(keys == 0, jnp.zeros_like(keys), keys)
+        keys, _ = _sortable_bits(keys)
+    if keys.dtype.itemsize == 8:  # only reachable under x64
+        h = keys.astype(jnp.uint64) * jnp.uint64(0x9E3779B97F4A7C15)
+        h = h >> jnp.uint64(64 - bits)
+    else:
+        h = keys.astype(jnp.uint32) * jnp.uint32(2654435761)
+        h = h >> jnp.uint32(32 - bits)
+    return h.astype(jnp.int32)
+
+
+def estimate_max_matches(left_keys: jax.Array, right_keys: jax.Array, *,
+                         bits: int = 16) -> int:
+    """Histogram-product upper bound on the inner-join output size.
+
+    Bucket both key columns on their low ``bits`` radix digits and sum
+    ``count_left[b] * count_right[b]`` — keys can only match inside a
+    shared bucket, so the product bound dominates the true match count
+    (equality when every bucket holds one distinct key). This is the
+    partitioned-join sizing rule (Manegold/Boncz): the same histogram
+    that drives the radix partition prices the output buffer. Host-side
+    int (the capacity is a SHAPE), so eager only.
+    """
+    left_keys = jnp.asarray(left_keys)
+    right_keys = jnp.asarray(right_keys)
+    if left_keys.shape[0] == 0 or right_keys.shape[0] == 0:
+        return 0
+    nb = 1 << bits
+    cl = jnp.bincount(_radix_buckets(left_keys, bits), length=nb)
+    cr = jnp.bincount(_radix_buckets(right_keys, bits), length=nb)
+    return int(np.sum(np.asarray(cl, np.int64) * np.asarray(cr, np.int64)))
+
+
 def hash_join(left_keys: jax.Array, right_keys: jax.Array, *,
-              max_matches: "int | None" = None) -> JoinResult:
+              max_matches: "int | str | None" = "auto") -> JoinResult:
     """Inner equi-join of two (L,) / (R,) key columns.
 
     Pairs are emitted grouped by left row (left rows in input order;
-    within a row, right matches in build-side sorted order).
+    within a row, right matches in build-side sorted order). See the
+    module doc for the ``max_matches`` capacity policy; the default
+    ``"auto"`` bound is spill-safe (never drops a pair).
     """
     left_keys = jnp.asarray(left_keys)
     right_keys = jnp.asarray(right_keys)
@@ -58,6 +115,20 @@ def hash_join(left_keys: jax.Array, right_keys: jax.Array, *,
         raise TypeError(
             f"hash_join key dtypes must match: {left_keys.dtype} vs "
             f"{right_keys.dtype}")
+    if max_matches == "auto":
+        if isinstance(left_keys, jax.core.Tracer) or \
+                isinstance(right_keys, jax.core.Tracer):
+            raise ValueError(
+                "hash_join(max_matches='auto') sizes the output from the "
+                "data (eager only); under jit pass a static int cap — "
+                "estimate_max_matches() on representative data gives a "
+                "spill-safe one")
+        bound = estimate_max_matches(left_keys, right_keys)
+        if bound > np.iinfo(np.int32).max and not jax.config.jax_enable_x64:
+            raise OverflowError(
+                f"join upper bound {bound} exceeds int32 pair offsets; "
+                "enable jax_enable_x64 for int64 accumulation")
+        max_matches = bound
     L, R = left_keys.shape[0], right_keys.shape[0]
     if L == 0 or R == 0:
         M = 0 if max_matches is None else int(max_matches)
@@ -117,8 +188,16 @@ def hash_join(left_keys: jax.Array, right_keys: jax.Array, *,
 
     # Expand: output slot p belongs to the last left row whose offset is
     # <= p (right-bisect skips rows with zero matches), at match number
-    # p - off[row] within that row's [lo, hi) run.
-    p = jnp.arange(M, dtype=jnp.int32)
+    # p - off[row] within that row's [lo, hi) run. Slot ids must not wrap:
+    # past 2^31 slots an int32 arange would alias, so widen (x64) or raise.
+    if M > np.iinfo(np.int32).max:
+        if not jax.config.jax_enable_x64:
+            raise OverflowError(
+                f"join capacity {M} exceeds int32 slot ids; enable "
+                "jax_enable_x64 for int64 expansion")
+        p = jnp.arange(M, dtype=jnp.int64)
+    else:
+        p = jnp.arange(M, dtype=jnp.int32)
     li = jnp.clip(
         jnp.searchsorted(off, p, side="right").astype(jnp.int32) - 1,
         0, L - 1)

@@ -236,6 +236,49 @@ def test_group_by_vector_values():
                                   [[6, 8], [3, 4], [7, 8]])
 
 
+def test_group_by_kernel_path_matches_segment_sum():
+    """The segscan-kernel route (long runs on TPU; forced here) must agree
+    with ``jax.ops.segment_sum`` — bit-exactly for integer values."""
+    rng = np.random.default_rng(7)
+    G, T = 9, 4096
+    ids = jnp.asarray(rng.integers(0, G, T), jnp.int32)
+    vals_i = jnp.asarray(rng.integers(-50, 50, T), jnp.int32)
+    got = rel.group_by(ids, vals_i, G, "sum", algorithm="kernel")
+    want = jax.ops.segment_sum(vals_i, ids, num_segments=G)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    vals_f = jnp.asarray(rng.standard_normal(T), jnp.float32)
+    got_f = rel.group_by(ids, vals_f, G, "mean", algorithm="kernel")
+    want_f = jax.ops.segment_sum(vals_f, ids, num_segments=G) / \
+        jnp.maximum(jax.ops.segment_sum(jnp.ones_like(vals_f), ids,
+                                        num_segments=G), 1)
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                               rtol=1e-4, atol=1e-4)
+    # vector values ride the kernel's row layout
+    vals_v = jnp.asarray(rng.integers(-9, 9, (T, 3)), jnp.int32)
+    got_v = rel.group_by(ids, vals_v, G, "sum", algorithm="kernel")
+    want_v = jax.ops.segment_sum(vals_v, ids, num_segments=G)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_group_by_auto_gate_is_policy_thresholded():
+    """Off-TPU auto stays on the library scan; the gate itself follows
+    ``policy.choose`` (kernel only past the VMEM block budget)."""
+    from repro.core.scan import policy
+    from repro.relational.groupby import _seg_algorithm
+    small = policy.VMEM_BLOCK_BUDGET // 4 // 2  # f32 elems, half budget
+    big = policy.VMEM_BLOCK_BUDGET // 4 * 2
+    assert _seg_algorithm("ref", "sum", big, 4) == "ref"
+    assert _seg_algorithm("kernel", "sum", small, 4) == "kernel"
+    if jax.default_backend() == "tpu":
+        assert _seg_algorithm("auto", "sum", big, 4) == "kernel"
+        assert _seg_algorithm("auto", "sum", small, 4) == "ref"
+    else:
+        assert _seg_algorithm("auto", "sum", big, 4) == "ref"
+    assert _seg_algorithm("auto", "max", big, 4) == "ref"  # non-sum monoid
+    with pytest.raises(ValueError):
+        _seg_algorithm("bogus", "sum", big, 4)
+
+
 @given(st.lists(st.integers(-20, 20), min_size=0, max_size=150))
 @settings(max_examples=20, deadline=None)
 def test_group_by_sorted_runs(raw):
@@ -296,13 +339,58 @@ def test_hash_join_capped_and_jittable():
 
 def test_hash_join_overflow_guard():
     """An eager join whose pair count wraps int32 must raise, not
-    silently return garbage (x64 mode accumulates in int64 instead)."""
+    silently return garbage (x64 mode accumulates in int64 instead) —
+    both under the default histogram bound and the exact-count path."""
     if jax.config.jax_enable_x64:
         pytest.skip("int64 accumulation active; no wrap to guard")
     n = 66_000  # n*n ≈ 4.36e9: wraps mod 2^32 back to a POSITIVE int32
     keys = jnp.zeros((n,), jnp.int32)
     with pytest.raises(OverflowError):
-        rel.hash_join(keys, keys)
+        rel.hash_join(keys, keys)  # default "auto" bound
+    with pytest.raises(OverflowError):
+        rel.hash_join(keys, keys, max_matches=None)  # exact path
+
+
+def test_hash_join_auto_capacity_is_spill_safe():
+    """The default histogram-product capacity must dominate the true
+    match count for a SKEWED key distribution — no pair ever dropped —
+    unlike an undersized manual cap."""
+    rng = np.random.default_rng(11)
+    # heavy skew: most keys collide on a handful of values
+    lk = jnp.asarray(rng.integers(0, 4, 300), jnp.int32)
+    rk = jnp.asarray(rng.integers(0, 6, 200), jnp.int32)
+    bound = rel.estimate_max_matches(lk, rk)
+    res = rel.hash_join(lk, rk)  # default: auto bound
+    c = int(res.count)
+    assert res.left_index.shape[0] == bound >= c
+    lkn, rkn = np.asarray(lk), np.asarray(rk)
+    want = sorted((i, j) for i, a in enumerate(lkn)
+                  for j, b in enumerate(rkn) if a == b)
+    got = sorted(zip(np.asarray(res.left_index)[:c].tolist(),
+                     np.asarray(res.right_index)[:c].tolist()))
+    assert got == want                      # nothing spilled
+    assert (np.asarray(res.left_index)[c:] == -1).all()
+    # regression: an undersized manual cap DOES drop pairs (count still
+    # reports the true total) — the failure mode "auto" exists to remove
+    res_small = rel.hash_join(lk, rk, max_matches=5)
+    assert int(res_small.count) == len(want)
+    assert res_small.left_index.shape == (5,)
+
+
+def test_estimate_max_matches_float_and_empty():
+    assert rel.estimate_max_matches(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((3,), jnp.int32)) == 0
+    lk = jnp.asarray([0.5, -1.25, 3.0, 0.5], jnp.float32)
+    rk = jnp.asarray([3.0, 0.5, 0.5], jnp.float32)
+    bound = rel.estimate_max_matches(lk, rk)
+    res = rel.hash_join(lk, rk)
+    assert bound >= int(res.count) == 5
+
+
+def test_hash_join_auto_under_jit_raises():
+    lk = jnp.asarray([1, 2], jnp.int32)
+    with pytest.raises(ValueError):
+        jax.jit(lambda a, b: rel.hash_join(a, b))(lk, lk)
 
 
 def test_group_by_count_shape_with_vector_values():

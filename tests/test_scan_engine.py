@@ -1,0 +1,231 @@
+"""Monoid-generic scan engine: schedule parity, policy boundaries.
+
+The acceptance bar for the engine refactor (interpret mode on CPU):
+  * all three schedules (carry / decoupled / fused) return BIT-identical
+    results for all four registered monoids across dtypes — the paper's
+    organization/operator split holds exactly, not just approximately;
+  * the three-way ``policy.choose_schedule`` rule at its boundaries
+    (batch == cores, single-block rows, itemsize mixes);
+  * the engine registry covers the four families and the library monoids
+    carry their kernel specs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scan import assoc, policy, reference
+from repro.kernels import scan_engine
+from repro.kernels.compact import ops as kc_ops
+from repro.kernels.scan_blocked import ops as sb_ops
+from repro.kernels.scan_engine import monoids
+from repro.kernels.segscan import ops as seg_ops
+from repro.kernels.ssm_scan import ops as ssm_ops
+
+SCHEDULES = ("carry", "decoupled", "fused")
+
+
+def _all_bit_identical(outs):
+    first = outs[0]
+    return all(
+        all(bool(jnp.all(a == b)) for a, b in zip(first, o))
+        for o in outs[1:])
+
+
+# ---------------------------------------------------------------------------
+# schedule-parity sweep: 3 schedules x 4 monoids x dtypes, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_parity_sum(dtype, exclusive):
+    rng = np.random.default_rng(0)
+    if dtype == jnp.int32:
+        x = jnp.asarray(rng.integers(-9, 9, (2, 4096)), dtype)
+    else:
+        x = jnp.asarray(rng.standard_normal((2, 4096)), dtype)
+    outs = [
+        (sb_ops.cumsum(x, exclusive=exclusive, interpret=True, schedule=s,
+                       block_n=512),)
+        for s in SCHEDULES
+    ]
+    assert _all_bit_identical(outs), "sum schedules must agree BITWISE"
+    ref = reference.cumsum_ref(x.astype(jnp.float32))
+    if exclusive:
+        ref = jnp.pad(ref, ((0, 0), (1, 0)))[:, :-1]
+    tol = 0.15 if dtype == jnp.bfloat16 else 3e-3
+    np.testing.assert_allclose(
+        np.asarray(outs[0][0], np.float64), np.asarray(ref, np.float64),
+        rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_parity_segmented(dtype):
+    rng = np.random.default_rng(1)
+    if dtype == jnp.int32:
+        v = jnp.asarray(rng.integers(-9, 9, (2, 4096)), dtype)
+    else:
+        v = jnp.asarray(rng.standard_normal((2, 4096)), dtype)
+    f = jnp.asarray(rng.random((2, 4096)) < 0.02, jnp.int32)
+    outs = [
+        (seg_ops.segmented_cumsum(v, f, interpret=True, schedule=s,
+                                  block_n=512),)
+        for s in SCHEDULES
+    ]
+    assert _all_bit_identical(outs)
+    ref = reference.segmented_scan_ref(v.astype(jnp.float32), f)
+    np.testing.assert_allclose(
+        np.asarray(outs[0][0], np.float64), np.asarray(ref, np.float64),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_parity_affine(dtype):
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.uniform(0.7, 1.0, (1, 2048, 128)), dtype)
+    b = jnp.asarray(rng.standard_normal((1, 2048, 128)) * 0.1, dtype)
+    outs = [
+        (ssm_ops.ssm_scan(a, b, interpret=True, schedule=s, block_t=128),)
+        for s in SCHEDULES
+    ]
+    assert _all_bit_identical(outs)
+    _, ref = reference.scan_ref(
+        (a.astype(jnp.float32), b.astype(jnp.float32)), "affine", axis=1)
+    tol = 0.1 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(outs[0][0], np.float64), np.asarray(ref, np.float64),
+        rtol=tol, atol=tol)
+
+
+def test_parity_mask():
+    rng = np.random.default_rng(3)
+    m = jnp.asarray(rng.random((3, 4096)) < 0.5, jnp.int32)
+    outs = [
+        kc_ops.mask_compact(m, interpret=True, schedule=s, block_n=512)
+        for s in SCHEDULES
+    ]
+    assert _all_bit_identical(outs)
+    mn = np.asarray(m)
+    excl = np.cumsum(mn, -1) - mn
+    np.testing.assert_array_equal(
+        np.asarray(outs[0][0]), np.where(mn != 0, excl, 4096))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]), mn.sum(-1))
+
+
+def test_segmented_messy_flags_match_reference():
+    """Fractional and negative nonzero flags are boundaries too — the
+    kernel route must normalize with ``!= 0``, not truncate or max."""
+    v = jnp.ones((8,), jnp.float32)
+    for flags in (jnp.asarray([0, 0, 0.5, 0, 0.5, 0, 0, 0], jnp.float32),
+                  jnp.asarray([0, 0, -1, 0, -3, 0, 0, 0], jnp.int32)):
+        got = seg_ops.segmented_cumsum(v, flags, interpret=True)
+        ref = reference.segmented_scan_ref(v, flags)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        assert np.asarray(got).tolist() == [1, 2, 1, 2, 1, 2, 3, 4]
+
+
+def test_fused_falls_back_to_decoupled():
+    """Whenever the native single-launch path can't (or mustn't) run —
+    interpret mode, no TPU, or the validation gate still closed — the
+    fused schedule must run the two-launch decoupled organization: same
+    bits, no semaphore path."""
+    from repro.kernels.scan_engine import schedules
+    # the native path stays gated off until validated on real TPU (ROADMAP)
+    assert not schedules.FUSED_NATIVE_ENABLED
+    x = jnp.asarray(
+        np.random.default_rng(4).standard_normal((1, 8192)), jnp.float32)
+    # interpret=True forces the fallback on every backend
+    fused = sb_ops.cumsum(x, interpret=True, schedule="fused", block_n=1024)
+    dec = sb_ops.cumsum(x, interpret=True, schedule="decoupled",
+                        block_n=1024)
+    assert bool(jnp.all(fused == dec))
+
+
+# ---------------------------------------------------------------------------
+# engine surface: registry, specs, validation
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_four_families():
+    assert set(scan_engine.monoids.REGISTRY) == {
+        "sum", "segmented_sum", "affine", "mask"}
+    for name, factory in scan_engine.monoids.REGISTRY.items():
+        spec = factory()
+        assert isinstance(spec, assoc.KernelSpec)
+        assert len(spec.fills) == spec.n_leaves
+
+
+def test_library_monoids_carry_kernel_specs():
+    assert assoc.SUM.kernel_spec is assoc.SUM_KERNEL
+    assert assoc.AFFINE.kernel_spec is assoc.AFFINE_KERNEL
+    assert assoc.segmented(assoc.SUM).kernel_spec \
+        is assoc.SEGMENTED_SUM_KERNEL
+    assert assoc.segmented(assoc.MAX).kernel_spec is None  # not registered
+
+
+def test_engine_rejects_unknown_schedule_and_bad_exclusive():
+    x = jnp.ones((2, 256), jnp.float32)
+    lay = scan_engine.Rows(2, 256, 2, 128)
+    with pytest.raises(ValueError):
+        scan_engine.scan((x,), monoids.SUM, lay, schedule="bogus")
+    m = jnp.ones((2, 256), jnp.int32)
+    with pytest.raises(ValueError):
+        scan_engine.scan((m,), monoids.mask(256), lay, schedule="carry",
+                         exclusive=True)
+    with pytest.raises(ValueError):
+        scan_engine.Rows(2, 300, 2, 128)  # not divisible by the block
+
+
+# ---------------------------------------------------------------------------
+# policy boundaries (three-way choose_schedule)
+# ---------------------------------------------------------------------------
+
+
+def test_choose_schedule_batch_boundary():
+    n = 1 << 22
+    cores = policy.NUM_CORES
+    # batch == cores: rows exactly fill the machine -> carry
+    assert policy.choose_schedule(cores, n) == "carry"
+    # one fewer row: spare = cores // (cores-1) == 1 < 2 -> still carry
+    assert policy.choose_schedule(cores - 1, n) == "carry"
+    # half the cores busy -> parallel-sequence schedule
+    assert policy.choose_schedule(cores // 2, n) == "fused"
+    assert policy.choose_schedule(cores // 2, n, prefer_fused=False) \
+        == "decoupled"
+
+
+def test_choose_schedule_single_block_rows():
+    # a row inside ONE block has nothing to parallelize, whatever batch is
+    assert policy.choose_schedule(1, 2048, block_elems=2048) == "carry"
+    assert policy.choose_schedule(1, 4096, block_elems=4096) == "carry"
+    # chunks must cover the spare cores: 4 chunks < 8 spare -> carry
+    assert policy.choose_schedule(1, 8192, block_elems=2048) == "carry"
+    # exactly spare chunks -> flip
+    n = policy.NUM_CORES * 2048
+    assert policy.choose_schedule(1, n, block_elems=2048) == "fused"
+
+
+@pytest.mark.parametrize("itemsize", [1, 2, 4, 8])
+def test_choose_itemsize_mixes(itemsize):
+    """The algorithm threshold scales with itemsize; the schedule rule is
+    itemsize-blind (it counts chunks, not bytes)."""
+    n = 1 << 21  # 2M elems: spans the VMEM budget across the dtype sweep
+    choice = policy.choose(n, itemsize=itemsize, batch=1)
+    if n * itemsize <= policy.VMEM_BLOCK_BUDGET:
+        assert choice.algorithm == "horizontal"
+    else:
+        assert choice.algorithm == "kernel"
+        assert choice.schedule == "fused"
+    assert policy.choose_schedule(1, n) == "fused"
+
+
+def test_schedule_threaded_through_api():
+    """core.scan.api 'auto' hands the policy's schedule to the kernel."""
+    from repro.core import scan as scanlib
+    x = jnp.asarray(
+        np.random.default_rng(5).standard_normal(4096), jnp.float32)
+    got = scanlib.scan(x, "sum", algorithm="kernel", interpret=True,
+                       schedule="fused")
+    np.testing.assert_allclose(np.asarray(got), np.cumsum(np.asarray(x)),
+                               rtol=2e-4, atol=2e-4)

@@ -90,6 +90,51 @@ def test_free_slot_compaction_ranks(small_model):
     np.testing.assert_array_equal(np.asarray(ranks), [0, 1, 1, 2])
 
 
+def test_ssm_decode_resolves_parallel_schedule():
+    """The serve engine's SSM decode/prefill class — B=1 slot, long
+    sequence — must land on a parallel-sequence schedule end to end: the
+    engine prefills one request at a time (B=1), and ``apply_ssm`` routes
+    the cache path through ``ssm_scan(schedule="auto")``."""
+    from repro.kernels.ssm_scan import ops as ssm_ops
+    # decode/prefill class: one sequence, long time axis, one channel block
+    assert ssm_ops.resolved_schedule((1, 1 << 22, 256)) in (
+        "fused", "decoupled")
+    # training class: many (batch, channel-block) stripes -> carry chain
+    assert ssm_ops.resolved_schedule((8, 4096, 4096)) == "carry"
+
+
+def test_ssm_engine_end_to_end():
+    """A hybrid-SSM model served end to end through ``impl="auto"`` (on
+    TPU this is the kernel route; off-TPU the gate keeps the reference
+    scan — either way the serve path must run)."""
+    cfg = configs.get_smoke_config("zamba2-7b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=1, max_len=48, max_new_tokens=4, eos_id=-1))
+    eng.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32)))
+    done = eng.run_to_completion()
+    assert len(done) == 1 and len(done[0].output) == 4
+
+
+def test_ssm_serve_kernel_route_matches_reference():
+    """The serve configuration's kernel route (what ``impl="auto"`` picks
+    on TPU): prefill-with-cache through the Pallas affine scan must match
+    the chunked reference path."""
+    from repro.models.layers.ssm import apply_ssm, init_ssm, init_ssm_cache
+    cfg = configs.get_smoke_config("zamba2-7b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_ssm(jax.random.PRNGKey(0), cfg)
+    cache = init_ssm_cache(cfg, batch=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 33, cfg.d_model))
+    y_k, c_k = apply_ssm(params, x, cfg, cache=cache, impl="kernel")
+    y_r, c_r = apply_ssm(params, x, cfg, cache=cache, impl="chunked")
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(c_k["h"]), np.asarray(c_r["h"]),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_encdec_serve_path():
     cfg = configs.get_smoke_config("seamless-m4t-large-v2")
     params = init_params(jax.random.PRNGKey(0), cfg)

@@ -47,6 +47,38 @@ if [[ "${1:-}" == "--smoke" ]]; then
     exit 0
 fi
 
+echo "== scan-engine smoke: schedule x monoid bit-parity =="
+python - <<'EOF'
+import numpy as np
+import jax.numpy as jnp
+from repro.kernels.compact import ops as kc
+from repro.kernels.scan_blocked import ops as sb
+from repro.kernels.segscan import ops as seg
+from repro.kernels.ssm_scan import ops as ssm
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((2, 1024)), jnp.float32)
+f = jnp.asarray(rng.random((2, 1024)) < 0.02, jnp.int32)
+a = jnp.asarray(rng.uniform(0.8, 1.0, (1, 256, 128)), jnp.float32)
+m = jnp.asarray(rng.random((2, 1024)) < 0.5, jnp.int32)
+cells = {
+    "sum": lambda s: (sb.cumsum(x, interpret=True, schedule=s,
+                                block_n=256),),
+    "segmented": lambda s: (seg.segmented_cumsum(x, f, interpret=True,
+                                                 schedule=s, block_n=256),),
+    "affine": lambda s: (ssm.ssm_scan(a, x[:1, :256, None] * a, block_t=64,
+                                      interpret=True, schedule=s),),
+    "mask": lambda s: kc.mask_compact(m, interpret=True, schedule=s,
+                                      block_n=256),
+}
+for name, fn in cells.items():
+    outs = [fn(s) for s in ("carry", "decoupled", "fused")]
+    ok = all(all(bool(jnp.all(p == q)) for p, q in zip(outs[0], o))
+             for o in outs[1:])
+    assert ok, f"{name}: schedules diverged"
+    print(f"  {name}: carry == decoupled == fused (bitwise)")
+EOF
+
 echo "== benchmark dry-run smoke =="
 python -m benchmarks.run --dry-run
 
