@@ -1,0 +1,93 @@
+"""Engine-backed flash attention sweep: fold schedule × config, one table.
+
+The SOFTMAX_PAIR registration's promise is that the generic fold
+schedules pay nothing versus the old hand-rolled kernel: this sweep
+drives both organizations (carry accumulate / split-KV decoupled)
+through the public ``flash_attention`` wrapper across the masking grid
+(causal, sliding window, softcap, GQA), checks parity against the dense
+oracle on the fly, and reports wall-clock plus what
+``policy.choose_attention_schedule`` would pick for the shape — so the
+two-way attention rule can be eyeballed against measurement on real
+hardware (on the CPU container the kernels run in interpret mode and
+wall-clock mostly reflects algorithmic structure).
+
+    PYTHONPATH=src python -m benchmarks.fig_attention            # full
+    PYTHONPATH=src python -m benchmarks.fig_attention --dry-run  # smoke
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, time_fn, throughput
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+
+SCHEDULES = ("carry", "decoupled")
+
+
+def _cases(smoke: bool):
+    rng = np.random.default_rng(0)
+    if smoke:
+        B, Hkv, g, T, D = 1, 2, 2, 256, 32
+    else:
+        B, Hkv, g, T, D = 1, 8, 4, 4096, 128
+
+    def qkv(seed):
+        r = np.random.default_rng(seed)
+        q = jnp.asarray(r.standard_normal((B, Hkv * g, T, D)), jnp.float32)
+        k = jnp.asarray(r.standard_normal((B, Hkv, T, D)), jnp.float32)
+        v = jnp.asarray(r.standard_normal((B, Hkv, T, D)), jnp.float32)
+        return q, k, v
+
+    grid = [
+        ("causal", dict(causal=True)),
+        ("window", dict(causal=True, window=max(T // 4, 64))),
+        ("softcap", dict(causal=True, softcap=30.0)),
+        ("full", dict(causal=False)),
+    ]
+    del rng
+    return [(name, qkv(i), dict(kw, scale=D ** -0.5))
+            for i, (name, kw) in enumerate(grid)]
+
+
+def run(smoke: bool = False) -> Table:
+    t = Table("Flash attention on the scan engine: fold schedule x config "
+              "(kernel interpret mode)",
+              ["config", "schedule", "policy", "max|err| vs dense",
+               "Gdot/s", "ms"])
+    for name, (q, k, v), kw in _cases(smoke):
+        B, Hq, T, D = q.shape
+        Hkv = k.shape[1]
+        ref = fa_ref.mha_ref(
+            q.reshape(B * Hq, T, D), k.reshape(B * Hkv, T, D),
+            v.reshape(B * Hkv, T, D), group=Hq // Hkv, **kw,
+        ).reshape(q.shape)
+        chosen = fa_ops.resolved_attention_schedule(q.shape, T)
+        for schedule in SCHEDULES:
+            fn = functools.partial(
+                fa_ops.flash_attention, q, k, v, schedule=schedule,
+                interpret=True, **kw)
+            err = float(jnp.max(jnp.abs(fn() - ref)))
+            sec = time_fn(fn, iters=3, warmup=1)
+            mark = " <- policy" if schedule == chosen else ""
+            # logits + weighted-value dot elements per pass
+            elems = 2 * B * Hq * T * T * D
+            t.add(name, schedule + mark,
+                  chosen if schedule == "carry" else "",
+                  err, throughput(elems, sec), sec * 1e3)
+    return t
+
+
+def main(argv=None):
+    names = list(argv if argv is not None else sys.argv[1:])
+    run(smoke="--dry-run" in names).show()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

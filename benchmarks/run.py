@@ -17,8 +17,8 @@ import time
 
 from benchmarks import (fig6_single_thread, fig7_traffic, fig8_inplace,
                         fig10_partition_size, fig11_dilation, fig13_policy,
-                        fig_decoupled, fig_engine, fig_relational,
-                        moe_dispatch, roofline_table)
+                        fig_attention, fig_decoupled, fig_engine,
+                        fig_relational, moe_dispatch, roofline_table)
 
 SUITES = {
     "fig6": [fig6_single_thread.run],
@@ -28,6 +28,7 @@ SUITES = {
               fig10_partition_size.run_kernel_vmem],
     "fig11": [fig11_dilation.run],
     "fig13": [fig13_policy.run, fig13_policy.run_traffic_model],
+    "attention": [fig_attention.run],
     "decoupled": [fig_decoupled.run, fig_decoupled.run_traffic],
     "engine": [fig_engine.run],
     "moe": [moe_dispatch.run],

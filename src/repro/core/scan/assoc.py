@@ -19,7 +19,10 @@ Monoids that also run INSIDE Pallas kernels carry a :class:`KernelSpec`
 (flat array leaves, identity fill constants, in-kernel combine/select
 emitters) — the interface the monoid-generic scan engine
 (``repro.kernels.scan_engine``) writes each grid schedule against, once.
-Registered here: sum, segmented sum, affine, and the compact-mask spec.
+Registered here: sum, segmented sum, affine, the compact-mask spec, and
+the flash-attention softmax-pair spec (a *carried payload* monoid: its
+elements are built per block by an input TRANSFORM from raw operand
+tiles rather than read from pre-materialized element arrays).
 """
 
 from __future__ import annotations
@@ -64,6 +67,19 @@ class KernelSpec:
         ``combined`` the carry-adjusted inclusive scan.
       supports_exclusive: whether the engine may shift-and-fill for
         ``exclusive=True``.
+      transform: optional per-block INPUT TRANSFORM. When set, the monoid
+        is a *carried payload*: the engine does not read element arrays
+        at all — each grid block along the scanned axis yields ONE macro
+        element ``transform(op_tiles, block_ids) -> leaf tuple`` computed
+        from the raw operand tiles (flash attention: the ``q·kᵀ`` logits
+        block with masking, folded to its ``(m, l, p·v)`` triple).
+        ``block_ids`` are the layout's grid coordinates (the transform
+        needs them for position-dependent masking). Leaves may have
+        per-leaf trailing dims (the layout's ``leaf_dims``); the scan is
+        a FOLD over blocks — outputs are emitted once, from the final
+        carried state.
+      finalize: ``finalize(combined) -> outputs`` for transform monoids —
+        the fold-time emitter (flash attention's ``acc / l`` normalize).
     """
 
     name: str
@@ -74,6 +90,8 @@ class KernelSpec:
     out_leaves: tuple = (0,)
     emit: "Callable[[tuple, tuple], tuple] | None" = None
     supports_exclusive: bool = True
+    transform: "Callable[[tuple, tuple], tuple] | None" = None
+    finalize: "Callable[[tuple], tuple] | None" = None
 
     @property
     def n_leaves(self) -> int:
@@ -247,6 +265,102 @@ def mask_kernel_spec(sentinel: int) -> KernelSpec:
     )
 
 
+# Finite stand-in for -inf in masked logits: keeps the softmax-pair
+# max-carry NaN-free (``-inf - -inf`` is NaN; ``NEG_INF - NEG_INF`` is 0,
+# so a fully-masked block degrades to the uniform softmax exactly like
+# the dense reference).
+NEG_INF = -1e30
+
+
+def _softmax_acc_kcombine(left, right):
+    """Carried-payload lift of the softmax pair: (m, l, acc) triples.
+
+    ``m`` is the running row max, ``l`` the sum of ``exp(s - m)``, and
+    ``acc`` the exp-weighted value accumulator — both sums rescale by
+    ``exp(m_i - m)`` when the shared max moves. Associative; identity is
+    ``(NEG_INF, 0, 0)`` (exp underflows to exactly 0 against any live
+    max, and ``exp(0) = 1`` against another NEG_INF).
+    """
+    m1, l1, a1 = left
+    m2, l2, a2 = right
+    m = jnp.maximum(m1, m2)
+    alpha1 = jnp.exp(m1 - m)
+    alpha2 = jnp.exp(m2 - m)
+    return (m, l1 * alpha1 + l2 * alpha2, a1 * alpha1 + a2 * alpha2)
+
+
+def softmax_pair_kernel_spec(
+    *,
+    scale: float,
+    causal: bool = True,
+    window: "int | None" = None,
+    softcap: "float | None" = None,
+    kv_len: "int | None" = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> KernelSpec:
+    """Flash-attention monoid: online softmax with the value payload.
+
+    The KV-block loop of flash attention is an inclusive FOLD over KV
+    blocks of :data:`SOFTMAX_PAIR` with the weighted-value accumulator
+    carried alongside. The per-block element is produced by the input
+    transform — ``q·kᵀ`` logits with causal/window/softcap/length
+    masking, folded within the block to its ``(m, l, acc)`` triple — so
+    the engine's schedules never see an element array, only operands
+    ``(q, k, v)`` tiles of shapes ``(bq, d)/(bk, d)/(bk, d)``.
+
+    ``block_ids`` convention (``KVBlocks`` layout): ``(head, q_block,
+    kv_block)`` — the transform derives absolute row/col positions from
+    the last two. ``kv_len`` masks padded KV tails (``None``: no length
+    mask beyond the geometry).
+    """
+
+    def transform(ops, block_ids):
+        q, k, v = (o.astype(jnp.float32) for o in ops)
+        _, qi, kj = block_ids[0], block_ids[-2], block_ids[-1]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if kv_len is not None:
+            mask &= cols < kv_len
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=1, keepdims=True)             # (bq, 1)
+        p = jnp.exp(s - m)                                # (bq, bk)
+        l = jnp.sum(p, axis=1, keepdims=True)             # (bq, 1)
+        acc = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, d)
+        return (m, l, acc)
+
+    def finalize(combined):
+        m, l, acc = combined
+        # Fully-masked rows keep l > 0 through the NEG_INF arithmetic
+        # (uniform softmax, like the dense reference); l == 0 can only
+        # arise from an empty fold and must not divide.
+        safe = jnp.where(l == 0.0, 1.0, l)
+        return (acc / safe,)
+
+    return KernelSpec(
+        name="softmax_pair",
+        fills=(NEG_INF, 0, 0),
+        combine=_softmax_acc_kcombine,
+        elem_dtypes=lambda dts: (jnp.dtype(jnp.float32),) * 3,
+        out_dtypes=lambda dts: (jnp.dtype(dts[0]),),
+        supports_exclusive=False,
+        transform=transform,
+        finalize=finalize,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Standard monoids
 # ---------------------------------------------------------------------------
@@ -330,6 +444,10 @@ def _softmax_combine(left, right):
     return (m, s)
 
 
+# Kernel-side, the registration is ``softmax_pair_kernel_spec`` — a
+# config-dependent factory (like ``mask_kernel_spec``) because masking
+# geometry is baked into the per-block input transform, so the Monoid
+# carries no static ``kernel_spec``.
 SOFTMAX_PAIR = Monoid(
     "softmax_pair",
     _softmax_combine,

@@ -107,6 +107,57 @@ def choose_schedule(
     return "carry"
 
 
+# Attention (carried-payload fold) thresholds. SPLIT_KV_CHUNKS is the KV
+# chain length past which the fold's serial latency dominates a row's
+# cost and the split-KV form pays for its chain traffic — 256 chunks is
+# 32k context at the default 128-wide KV block, the serve long-context
+# class. SPLIT_KV_ROW_CAP bounds it to decode/scoring shapes (few query
+# rows): when (head, q-block) rows already oversubscribe every core by
+# this factor, splitting KV buys no throughput and only adds traffic.
+SPLIT_KV_CHUNKS = 256
+SPLIT_KV_ROW_CAP = 8
+
+
+def choose_attention_schedule(
+    batch_rows: int,
+    kv_len: int,
+    cores: int = NUM_CORES,
+    block_elems: int = 128,
+    split_kv_chunks: int = SPLIT_KV_CHUNKS,
+    split_kv_row_cap: int = SPLIT_KV_ROW_CAP,
+) -> str:
+    """Grid organization for the attention fold (softmax pair + payload).
+
+    Two-way (attention has no fused form — the output is the fold, so
+    there is no per-element writeback to chain a prefix into):
+
+      carry      the flash forward: (head, q-block) rows parallel, KV
+                 blocks a sequential accumulate. Right whenever the rows
+                 fill the machine and the KV chain is short — training
+                 and ordinary prefill shapes.
+      decoupled  split-KV / flash-decoding: KV chunks parallel, partial
+                 (m, l, acc) payloads combined in a tiny second step.
+                 Chosen when rows leave cores idle (decode: one q block,
+                 ``batch_rows == B·H``), or when the KV chain is long
+                 (the 32k/500k-context prefill and padded-cache scoring
+                 class) while rows stay within ``SPLIT_KV_ROW_CAP·cores``
+                 — fully saturated rows keep the carry form, where
+                 splitting adds chain traffic and returns nothing.
+
+    ``batch_rows`` is the number of independent fold chains the carry
+    grid already parallelizes (B·H_q·q_blocks); ``block_elems`` the KV
+    chunk length actually tiled.
+    """
+    batch_rows = max(int(batch_rows), 1)
+    chunks = -(-kv_len // max(block_elems, 1))
+    spare = cores // batch_rows
+    if batch_rows < cores and spare >= 2 and chunks >= spare:
+        return "decoupled"
+    if chunks >= split_kv_chunks and batch_rows < cores * split_kv_row_cap:
+        return "decoupled"
+    return "carry"
+
+
 def choose(
     n: int,
     itemsize: int = 4,

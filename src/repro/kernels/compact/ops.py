@@ -51,12 +51,14 @@ def _impl(mask, block_b, block_n, interpret, schedule):
     m2 = jnp.pad(m2, ((0, 0), (0, pad_n)))  # padded mask is 0: no phantoms
 
     layout = scan_engine.Rows(m2.shape[0], m2.shape[1], bb, bn)
-    dest, = scan_engine.scan(
+    (dest,), (totals,) = scan_engine.scan(
         (m2,), monoids.mask(m2.shape[1]), layout, schedule=schedule,
-        interpret=interpret)
-    # Survivor counts: an exact integer reduction (identical bits under
-    # every schedule); padded positions are 0 so they never count.
-    counts = jnp.sum(m2, axis=-1, dtype=jnp.int32)
+        interpret=interpret, return_totals=True)
+    # Survivor counts from the O(B·chunks) running chunk-totals chain the
+    # kernel already maintains — its last column is the row total (exact
+    # integers, identical bits under every schedule; padded positions are
+    # 0 so they never count). No second read-n reduction over the mask.
+    counts = totals[:, -1].astype(jnp.int32)
     # Kernel sentinel is the PADDED length; remap to the caller's n so a
     # size-(n+1) scatter buffer parks every dropped element at index n.
     dest = jnp.minimum(dest[:, :n], n)

@@ -1,6 +1,7 @@
 from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               resolved_attention_schedule)
 from repro.kernels.flash_attention.ref import (banded_ref, blockwise_ref, mha_ref)
 
-__all__ = ["flash_attention", "flash_attention_kernel", "banded_ref", "blockwise_ref",
-           "mha_ref"]
+__all__ = ["flash_attention", "flash_attention_kernel", "banded_ref",
+           "blockwise_ref", "mha_ref", "resolved_attention_schedule"]

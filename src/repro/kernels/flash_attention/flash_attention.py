@@ -1,88 +1,68 @@
-"""Pallas TPU kernel: flash attention forward — online softmax as a scan.
+"""Flash attention = the SOFTMAX_PAIR registration of the scan engine.
 
-The KV-block loop of flash attention is an inclusive scan over KV blocks of
-the monoid ``(m, s) ⊕ (m', s') = (max(m,m'), s·e^{m-max} + s'·e^{m'-max})``
-(``repro.core.scan.assoc.SOFTMAX_PAIR``), with the weighted-value
-accumulator carried alongside. Structurally this kernel is the same program
-as ``scan_blocked``: grid-sequential blocks over the "scanned" (KV) axis,
-carry in VMEM scratch, both "passes" fused while the block is resident —
-the paper's §2.2 schedule with a fancier operator. That is why it lives in
-this framework: 32k prefill and 500k-context serving lower through the same
-blocked-scan machinery as the cumsum.
+The KV-block loop of flash attention is an inclusive FOLD over KV blocks
+of the monoid ``(m, s) ⊕ (m', s') = (max(m,m'), s·e^{m-max} + s'·e^{m'-max})``
+(``repro.core.scan.assoc.SOFTMAX_PAIR``) with the weighted-value
+accumulator carried alongside. The hand-rolled kernel body that used to
+live here is the engine's generic fold-carry schedule now — this module
+is nothing but the registration: it states the attention GEOMETRY
+(``scan_engine.KVBlocks`` — GQA head grouping via index maps, per-leaf
+payload dims) and the OPERATOR (``assoc.softmax_pair_kernel_spec`` — the
+q·kᵀ input transform with causal/window/softcap/length masking, the
+payload combine, the ``acc/l`` finalize), exactly like the other four
+kernel families.
 
 Features: causal masking, sliding windows (gemma-style local layers),
-logit soft-capping (gemma2), GQA via index-map head grouping, and KV-length
-masking for padded caches.
+logit soft-capping (gemma2), GQA via index-map head grouping, KV-length
+masking for padded caches, and two grid schedules:
 
-Forward only: training paths use the autodiff-able jnp blockwise reference
-(ref.py) under remat; this kernel serves inference (prefill/decode scoring).
+  ``schedule="carry"``      the classic flash forward — KV sequential,
+                            payload carry in VMEM (read n + write out).
+  ``schedule="decoupled"``  split-KV / flash-decoding — KV chunks
+                            parallel, partial payloads combined by a
+                            tiny jnp chain (long-KV decode/scoring).
+
+Forward only: training paths use the autodiff-able jnp blockwise
+reference (ref.py) under remat; this kernel serves inference.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pallas_compat import compiler_params
+from repro.core.scan import policy
+from repro.core.scan.assoc import NEG_INF, softmax_pair_kernel_spec
+from repro.kernels import scan_engine
 
-NEG_INF = -1e30  # finite mask value: keeps the m-carry NaN-free
+__all__ = ["NEG_INF", "default_kv_split_target", "flash_attention_kernel",
+           "pick_kv_splits"]
 
 
-def _kernel(
-    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-    *, scale, causal, window, softcap, block_q, block_k, kv_len, num_k_blocks,
-):
-    qi = pl.program_id(1)
-    kj = pl.program_id(2)
+def default_kv_split_target() -> int:
+    """Default split-KV chunk-count target: oversubscribe every core 2x
+    (more chunks only add chain traffic). Single source of truth for
+    ``pick_kv_splits`` and the ops wrapper's KV padding, so ROADMAP's
+    on-hardware tuning touches one place."""
+    return 2 * policy.NUM_CORES
 
-    @pl.when(kj == 0)
-    def _reset():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(jnp.float32)  # (bq, d)
-    k = k_ref[0].astype(jnp.float32)  # (bk, d)
-    v = v_ref[0].astype(jnp.float32)  # (bk, d)
+def pick_kv_splits(num_k_blocks: int, target: "int | None" = None) -> int:
+    """KV chunk count for the decoupled fold: the largest divisor of the
+    block count not exceeding ``target`` (default: enough chunks to
+    oversubscribe every core 2x — more chunks only add chain traffic).
 
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * scale  # (bq, bk)
-    if softcap is not None:
-        s = softcap * jnp.tanh(s / softcap)
-
-    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = cols < kv_len
-    if causal:
-        mask &= cols <= rows
-    if window is not None:
-        mask &= cols > rows - window
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_scr[...]              # (bq, 1)
-    l_prev = l_scr[...]              # (bq, 1)
-    m_cur = jnp.max(s, axis=1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    alpha = jnp.exp(m_prev - m_new)  # rescale of the carried sums
-    p = jnp.exp(s - m_new)           # (bq, bk); fully-masked rows -> ~0
-    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc = acc_scr[...] * alpha + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    m_scr[...] = m_new
-    l_scr[...] = l_new
-    acc_scr[...] = acc
-
-    @pl.when(kj == num_k_blocks - 1)
-    def _finalize():
-        l = l_scr[...]
-        safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+    Degenerates toward 1 when the block count has no small divisor
+    (prime counts) — the public ``ops`` wrapper avoids that by padding
+    the KV axis to a multiple of the target chunk count before calling
+    here (the masked tail makes the padding free), so direct kernel
+    callers are the only ones exposed to awkward block counts."""
+    if target is None:
+        target = default_kv_split_target()
+    target = max(1, min(int(target), num_k_blocks))
+    for splits in range(target, 0, -1):
+        if num_k_blocks % splits == 0:
+            return splits
+    return 1
 
 
 def flash_attention_kernel(
@@ -98,13 +78,18 @@ def flash_attention_kernel(
     kv_len: "int | None" = None,
     block_q: int = 128,
     block_k: int = 128,
+    schedule: str = "carry",
+    kv_splits: "int | None" = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Attention over flattened (batch·heads) leading axes.
 
-    ``q`` has BH = B·H_q rows; ``k``/``v`` have B·H_kv; ``group`` maps each
-    q head to its kv head via the BlockSpec index map (no materialized
-    repeat — the GQA "gather" is free addressing, cf. paper Obs. 5).
+    ``q`` has BH = B·H_q rows; ``k``/``v`` have B·H_kv; ``group`` maps
+    each q head to its kv head via the BlockSpec index map (no
+    materialized repeat — the GQA "gather" is free addressing, cf. paper
+    Obs. 5). ``schedule`` picks the fold organization; ``kv_splits``
+    overrides the decoupled chunk count (default: policy-sized divisor
+    of the KV block count).
     """
     BH, Tq, d = q.shape
     BHkv, Tk, dk = k.shape
@@ -112,37 +97,16 @@ def flash_attention_kernel(
     if Tq % block_q or Tk % block_k:
         raise ValueError(f"({Tq},{Tk}) not divisible by ({block_q},{block_k})")
     kv_len = Tk if kv_len is None else kv_len
-    nq, nk = Tq // block_q, Tk // block_k
 
-    kernel = functools.partial(
-        _kernel,
+    splits = 1
+    if schedule != "carry":
+        splits = pick_kv_splits(Tk // block_k, kv_splits)
+    layout = scan_engine.KVBlocks(
+        bh=BH, bh_kv=BHkv, tq=Tq, tk=Tk, d=d, bq=block_q, bk=block_k,
+        group=group, splits=splits, leaf_dims=(1, 1, d))
+    spec = softmax_pair_kernel_spec(
         scale=scale, causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_k=block_k, kv_len=kv_len, num_k_blocks=nk,
-    )
-    return pl.pallas_call(
-        kernel,
-        grid=(BH, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
-            pl.BlockSpec(
-                (1, block_k, d),
-                lambda h, i, j, g=group: (h // g, j, 0),
-            ),
-            pl.BlockSpec(
-                (1, block_k, d),
-                lambda h, i, j, g=group: (h // g, j, 0),
-            ),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, Tq, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
-        compiler_params=compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-        name="flash_attention",
-    )(q, k, v)
+        kv_len=kv_len, block_q=block_q, block_k=block_k)
+    out, = scan_engine.scan(
+        (q, k, v), spec, layout, schedule=schedule, interpret=interpret)
+    return out

@@ -1,8 +1,10 @@
-"""Jitted public wrapper for flash attention.
+"""Jitted public wrapper for engine-backed flash attention.
 
 Accepts standard (B, H, T, D) layouts, handles GQA head mapping, pads
-sequence lengths to block multiples (mask-correct via ``kv_len``), and
-interpret-mode fallback off-TPU.
+sequence lengths to block multiples (mask-correct via ``kv_len``),
+resolves ``schedule="auto"`` through ``policy.choose_attention_schedule``
+(carry for row-saturated shapes, split-KV decoupled for long-KV
+decode/scoring), and interpret-mode fallback off-TPU.
 """
 
 from __future__ import annotations
@@ -12,28 +14,63 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.core.scan import policy
+from repro.kernels.flash_attention.flash_attention import (
+    default_kv_split_target, flash_attention_kernel)
+
+SCHEDULES = ("carry", "decoupled")
+RESOLVABLE = SCHEDULES + ("auto",)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _tiles(Tq: int, Tk: int, block_q: int, block_k: int):
+    """The (bq, bk, nq) tiling the kernel will ACTUALLY use — the single
+    source of truth shared by ``_impl`` and the schedule resolver, so the
+    policy's chunks-per-core test never drifts from the real grid."""
+    bq = min(block_q, _round_up(Tq, 8))
+    bk = min(block_k, _round_up(Tk, 128))
+    return bq, bk, max(-(-Tq // bq), 1)
+
+
+def _decoupled_padding(Tk: int, bk: int, kv_splits: "int | None"):
+    """(pad_k, splits) for the split-KV fold: pad the KV axis up to a
+    multiple of ``splits`` blocks so the chunk count is always achieved.
+    Without this, a prime block count (500k context -> 3907 blocks) has
+    no divisor <= target and the 'split-KV' launch would silently
+    degenerate to one serial chunk; the masked tail (``kv_len``) makes
+    identity padding free."""
+    nk = _round_up(Tk, bk) // bk
+    target = kv_splits if kv_splits is not None \
+        else default_kv_split_target()
+    splits = max(1, min(int(target), nk))
+    return _round_up(nk, splits) * bk - Tk, splits
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "scale", "causal", "window", "softcap",
-        "block_q", "block_k", "interpret",
+        "block_q", "block_k", "schedule", "kv_splits", "interpret",
     ),
 )
-def _impl(q, k, v, scale, causal, window, softcap, block_q, block_k, interpret):
+def _impl(q, k, v, scale, causal, window, softcap, block_q, block_k,
+          schedule, kv_splits, interpret):
     B, Hq, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     group = Hq // Hkv
-    bq = min(block_q, _round_up(Tq, 8))
-    bk = min(block_k, _round_up(Tk, 128))
+    bq, bk, _ = _tiles(Tq, Tk, block_q, block_k)
     pad_q = (-Tq) % bq
-    pad_k = (-Tk) % bk
+    if schedule == "decoupled":
+        pad_k, kv_splits = _decoupled_padding(Tk, bk, kv_splits)
+    else:
+        pad_k = (-Tk) % bk
 
     qf = q.reshape(B * Hq, Tq, D)
     kf = k.reshape(B * Hkv, Tk, D)
@@ -48,13 +85,32 @@ def _impl(q, k, v, scale, causal, window, softcap, block_q, block_k, interpret):
         qf, kf, vf,
         group=group, scale=scale, causal=causal, window=window,
         softcap=softcap, kv_len=Tk, block_q=bq, block_k=bk,
-        interpret=interpret,
+        schedule=schedule, kv_splits=kv_splits, interpret=interpret,
     )
     return out[:, :Tq].reshape(B, Hq, Tq, D)
 
 
-def _round_up(v: int, m: int) -> int:
-    return -(-v // m) * m
+def resolved_attention_schedule(
+    q_shape, kv_len: int, block_q: int = 128, block_k: int = 128,
+    schedule: str = "auto",
+) -> str:
+    """The fold schedule a (B, H, Tq, D) attention will actually run.
+
+    Mirrors ``flash_attention``'s tiling: the carry grid parallelizes
+    (B·H, q-blocks) rows, so the policy's batch is the number of
+    independent fold chains and its chunk length the real KV block.
+    Exposed so consumers (serve tests, benchmarks) can assert the
+    long-KV decode/scoring class lands on the split-KV form.
+    """
+    if schedule not in RESOLVABLE:
+        raise ValueError(
+            f"unknown attention schedule {schedule!r}; one of {RESOLVABLE}")
+    if schedule != "auto":
+        return schedule
+    B, Hq, Tq, _ = q_shape
+    _, bk, nq = _tiles(Tq, kv_len, block_q, block_k)
+    return policy.choose_attention_schedule(
+        B * Hq * nq, kv_len, block_elems=bk)
 
 
 def flash_attention(
@@ -68,12 +124,21 @@ def flash_attention(
     softcap: "float | None" = None,
     block_q: int = 128,
     block_k: int = 128,
+    schedule: str = "auto",
+    kv_splits: "int | None" = None,
     interpret: "bool | None" = None,
 ) -> jax.Array:
-    """Flash attention over (B, H, T, D) tensors with GQA kv heads."""
+    """Flash attention over (B, H, T, D) tensors with GQA kv heads.
+
+    ``schedule`` picks the fold organization (carry|decoupled|auto — see
+    ``core/scan/policy.choose_attention_schedule``); ``interpret=None``
+    auto-selects compiled on TPU, interpret elsewhere.
+    """
     if scale is None:
         scale = q.shape[-1] ** -0.5
     if interpret is None:
         interpret = not _on_tpu()
+    schedule = resolved_attention_schedule(
+        q.shape, k.shape[2], block_q, block_k, schedule)
     return _impl(q, k, v, scale, causal, window, softcap,
-                 block_q, block_k, interpret)
+                 block_q, block_k, schedule, kv_splits, interpret)

@@ -16,9 +16,15 @@ architecture:
     launches                               assoc.mask_kernel_spec
   schedules.scan_fused      — reduce-then-   (stream compaction, fused
     scan in ONE launch, chunk prefixes       predicate select)
-    chained through cross-chunk
-    semaphores (Merrill-style); falls
-    back to two-launch under interpret
+    chained through cross-chunk            assoc.softmax_pair_kernel_spec
+    semaphores (Merrill-style); falls        (flash attention: carried
+    back to two-launch under interpret       payload + input transform)
+  schedules.fold_carry /    — the same two
+    schedules.fold_decoupled organizations
+    as a FOLD for carried-payload monoids
+    (spec.transform builds each block's
+    element from raw operand tiles;
+    decoupled == split-KV flash-decoding)
 
 (The paper's remaining organization, scan-then-propagate / SIMD1-P, is
 the same dataflow as reduce-then-scan with the pass-1 scans kept; its
@@ -27,24 +33,28 @@ not ship it as a schedule — ``core.scan.blocked.scan_two_pass`` keeps it
 available as a library oracle.)
 
 Geometry lives in ``layouts`` (Rows for 2D batch×sequence, Channels for
-SSM batch×time×channel tiles); ``core/scan/policy.choose_schedule``
-arbitrates the three-way schedule choice. The four kernel families under
-``repro.kernels.{scan_blocked,segscan,ssm_scan,compact}`` are thin
-back-compat wrappers over this engine — adding a new schedule (or a new
-monoid) is a one-file change.
+SSM batch×time×channel tiles, KVBlocks for the attention fold);
+``core/scan/policy.choose_schedule`` arbitrates the three-way schedule
+choice (``choose_attention_schedule`` the two-way fold variant). The
+five kernel families under
+``repro.kernels.{scan_blocked,segscan,ssm_scan,compact,flash_attention}``
+are thin back-compat wrappers over this engine — adding a new schedule
+(or a new monoid) is a one-file change.
 """
 
 from repro.kernels.scan_engine import monoids
-from repro.kernels.scan_engine.layouts import Channels, Rows
+from repro.kernels.scan_engine.layouts import Channels, KVBlocks, Rows
 from repro.kernels.scan_engine.schedules import (RESOLVABLE, SCHEDULES,
-                                                 exclusive_chain,
+                                                 exclusive_chain, fold_carry,
+                                                 fold_chain, fold_decoupled,
                                                  fused_native_available,
                                                  resolve_schedule, scan,
                                                  scan_carry, scan_decoupled,
                                                  scan_fused, tile_scan)
 
 __all__ = [
-    "Channels", "RESOLVABLE", "Rows", "SCHEDULES", "exclusive_chain",
+    "Channels", "KVBlocks", "RESOLVABLE", "Rows", "SCHEDULES",
+    "exclusive_chain", "fold_carry", "fold_chain", "fold_decoupled",
     "fused_native_available", "monoids", "resolve_schedule", "scan",
     "scan_carry", "scan_decoupled", "scan_fused", "tile_scan",
 ]

@@ -3,7 +3,7 @@
 A layout answers every SHAPE question a schedule has — grid geometry,
 block specs, carry/chunk-total shapes, how to read a tile out of a ref —
 so the schedule bodies in ``schedules.py`` contain no per-family
-geometry. Two layouts cover the four kernel families:
+geometry. Three layouts cover the five kernel families:
 
   Rows      (R, N) leaves scanned along the last axis in (bb, bn) VMEM
             tiles; rows are the paper's threads. Used by the sum,
@@ -12,8 +12,15 @@ geometry. Two layouts cover the four kernel families:
             tiles; channels ride the 128-lane axis as independent lanes
             (the paper's §3.2 vertical SIMD — natural on TPU, not a
             gather penalty). Used by the affine/SSM registration.
+  KVBlocks  attention geometry for carried-payload (transform) monoids:
+            q (BH, Tq, d) against k/v (BHkv, Tk, d), folded along KV
+            blocks. Operands have DIFFERENT index maps (GQA maps q head
+            ``h`` to kv head ``h // group`` — free addressing, paper
+            Obs. 5), monoid leaves are per-q-block payload carries with
+            per-leaf trailing dims (``leaf_dims``), and outputs are the
+            fold. Used by the flash-attention registration.
 
-Both layouts put the scanned axis LAST in the grid, expose ``chunk``
+All layouts put the scanned axis LAST in the grid, expose ``chunk``
 axis 1 in their chunk-total arrays, and keep the scan axis at size 1 in
 carry slices so monoid ``combine`` broadcasts carries against tiles.
 """
@@ -33,8 +40,27 @@ def _check_divisible(shape, block, what):
                 f"{what} shape {shape} not divisible by block {block}")
 
 
+class _UniformLeaves:
+    """Shared per-leaf plumbing for layouts whose monoid leaves all share
+    the data tile geometry (Rows, Channels). The schedules only speak the
+    per-leaf/per-operand dialect so carried-payload layouts (KVBlocks)
+    can differ; uniform layouts delegate to their single spec."""
+
+    def op_specs(self, n_ops):
+        return [self.data_spec()] * n_ops
+
+    def out_spec(self):
+        return self.data_spec()
+
+    def chain_spec_for(self, leaf):
+        return self.chain_spec()
+
+    def chain_shape_for(self, leaf):
+        return self.chain_shape
+
+
 @dataclasses.dataclass(frozen=True)
-class Rows:
+class Rows(_UniformLeaves):
     """2D (rows, n) leaves, scan along axis 1, blocks (bb, bn)."""
 
     rows: int
@@ -82,7 +108,7 @@ class Rows:
     def chain_block(self):
         return (self.bb, 1)
 
-    def carry_scratch(self, dtype):
+    def carry_scratch(self, dtype, leaf=0):
         return pltpu.VMEM((self.bb, 1), dtype)
 
     # -- in-kernel views ------------------------------------------------
@@ -119,7 +145,7 @@ class Rows:
 
 
 @dataclasses.dataclass(frozen=True)
-class Channels:
+class Channels(_UniformLeaves):
     """3D (B, T, D) leaves, scan along axis 1 (time), blocks (1, bt, bd).
 
     In-kernel tiles are (bt, bd) with time on the SUBLANE axis and
@@ -170,7 +196,7 @@ class Channels:
     def chain_block(self):
         return (1, 1, self.bd)
 
-    def carry_scratch(self, dtype):
+    def carry_scratch(self, dtype, leaf=0):
         return pltpu.VMEM((1, self.bd), dtype)
 
     def read(self, ref):
@@ -201,3 +227,164 @@ class Channels:
 
     def sem_at(self, sem, seq_index):
         return sem.at[pl.program_id(0), pl.program_id(1), seq_index]
+
+
+@dataclasses.dataclass(frozen=True)
+class KVBlocks:
+    """Attention fold geometry for carried-payload (transform) monoids.
+
+    q ``(bh, tq, d)`` attends k/v ``(bh_kv, tk, d)``; the scanned axis is
+    the KV-block axis and the monoid leaves are per-q-block PAYLOAD
+    carries — ``(bq, leaf_dims[i])`` tiles (flash attention: the
+    ``(m, l)`` pair at dim 1 plus the weighted-value accumulator at dim
+    ``d``) — so carries, chain buffers and scratch are per-leaf shaped,
+    unlike the uniform-leaf layouts above.
+
+    Two grids serve the two fold schedules:
+
+      carry      ``(bh, nq, nk)``, KV axis sequential ("arbitrary"):
+                 the single-pass accumulate — q·kᵀ folded into the VMEM
+                 payload carry block by block, output written once at
+                 the last KV block.
+      decoupled  ``(bh, nq, splits, nk/splits)``: the split-KV /
+                 flash-decoding organization. KV chunks are fully
+                 parallel; WITHIN a chunk the sub-block axis is the same
+                 sequential accumulate, publishing one payload triple
+                 per chunk to the chain buffers; a tiny jnp combine
+                 chain + finalize stitches chunks back together.
+
+    ``group`` maps q head ``h`` to kv head ``h // group`` in the k/v
+    index maps (GQA as free addressing, paper Obs. 5).
+    """
+
+    bh: int              # flattened B·H_q query rows
+    bh_kv: int           # flattened B·H_kv rows; bh == bh_kv * group
+    tq: int
+    tk: int
+    d: int
+    bq: int
+    bk: int
+    group: int = 1
+    splits: int = 1      # KV chunks for the decoupled fold
+    leaf_dims: "tuple | None" = None   # per-leaf trailing dims; (1,1,d)
+
+    def __post_init__(self):
+        _check_divisible((self.tq, self.tk), (self.bq, self.bk), "KVBlocks")
+        if self.bh != self.bh_kv * self.group:
+            raise ValueError(
+                f"bh={self.bh} != bh_kv={self.bh_kv} * group={self.group}")
+        if self.num_seq_blocks % self.splits:
+            raise ValueError(
+                f"splits={self.splits} must divide {self.num_seq_blocks} "
+                "KV blocks")
+
+    # -- geometry --------------------------------------------------------
+    @property
+    def shape(self):
+        return (self.bh, self.tq, self.d)
+
+    @property
+    def nq(self):
+        return self.tq // self.bq
+
+    @property
+    def num_seq_blocks(self):
+        return self.tk // self.bk
+
+    @property
+    def blocks_per_chunk(self):
+        return self.num_seq_blocks // self.splits
+
+    @property
+    def grid(self):
+        return (self.bh, self.nq, self.num_seq_blocks)
+
+    @property
+    def seq_grid_axis(self):
+        return len(self.grid) - 1
+
+    @property
+    def split_grid(self):
+        return (self.bh, self.nq, self.splits, self.blocks_per_chunk)
+
+    def semantics(self, seq_kind: str):
+        return ("parallel",) * (len(self.grid) - 1) + (seq_kind,)
+
+    def split_semantics(self):
+        # chunks parallel, sub-blocks within a chunk sequential
+        return ("parallel",) * 3 + ("arbitrary",)
+
+    def leaf_dim(self, leaf: int) -> int:
+        dims = self.leaf_dims if self.leaf_dims is not None \
+            else (1, 1, self.d)
+        return dims[leaf]
+
+    # -- block specs -----------------------------------------------------
+    def op_specs(self, n_ops):
+        if n_ops != 3:
+            raise ValueError(f"KVBlocks expects (q, k, v) operands, "
+                             f"got {n_ops}")
+        g = self.group
+        return [
+            pl.BlockSpec((1, self.bq, self.d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, self.bk, self.d),
+                         lambda h, i, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, self.bk, self.d),
+                         lambda h, i, j, g=g: (h // g, j, 0)),
+        ]
+
+    def split_op_specs(self, n_ops):
+        if n_ops != 3:
+            raise ValueError(f"KVBlocks expects (q, k, v) operands, "
+                             f"got {n_ops}")
+        g, bpc = self.group, self.blocks_per_chunk
+        return [
+            pl.BlockSpec((1, self.bq, self.d),
+                         lambda h, i, c, s: (h, i, 0)),
+            pl.BlockSpec((1, self.bk, self.d),
+                         lambda h, i, c, s, g=g, bpc=bpc:
+                         (h // g, c * bpc + s, 0)),
+            pl.BlockSpec((1, self.bk, self.d),
+                         lambda h, i, c, s, g=g, bpc=bpc:
+                         (h // g, c * bpc + s, 0)),
+        ]
+
+    def out_spec(self):
+        # independent of the KV axis: the block persists in VMEM across
+        # the sequential axis and is written once, at the last KV block
+        return pl.BlockSpec((1, self.bq, self.d), lambda h, i, j: (h, i, 0))
+
+    def chain_shape_for(self, leaf: int):
+        return (self.bh * self.nq, self.splits, self.bq,
+                self.leaf_dim(leaf))
+
+    def split_chain_spec_for(self, leaf: int):
+        nq = self.nq
+        return pl.BlockSpec(
+            (1, 1, self.bq, self.leaf_dim(leaf)),
+            lambda h, i, c, s, nq=nq: (h * nq + i, c, 0, 0))
+
+    def carry_scratch(self, dtype, leaf=0):
+        return pltpu.VMEM((self.bq, self.leaf_dim(leaf)), dtype)
+
+    # -- in-kernel views -------------------------------------------------
+    def block_ids(self):
+        return (pl.program_id(0), pl.program_id(1), pl.program_id(2))
+
+    def split_block_ids(self):
+        bpc = self.blocks_per_chunk
+        return (pl.program_id(0), pl.program_id(1),
+                pl.program_id(2) * bpc + pl.program_id(3))
+
+    def read_op(self, ref):
+        return ref[0]
+
+    def write(self, ref, val):
+        ref[0] = val.astype(ref.dtype)
+
+    def write_chain(self, ref, val):
+        ref[0, 0] = val.astype(ref.dtype)
+
+    def unchain_out(self, x):
+        """(bh·nq, bq, dim) fold/finalize result -> (bh, tq, dim)."""
+        return x.reshape(self.bh, self.tq, x.shape[-1])

@@ -1,9 +1,10 @@
 """Monoid registrations for the scan engine.
 
-Each of the four kernel families is nothing but one of these entries —
+Each of the five kernel families is nothing but one of these entries —
 the kernel specs themselves live next to their library monoids in
 ``repro.core.scan.assoc`` (element leaves, identity fills, in-kernel
-combine/select emitters); this module is the kernel-side registry that
+combine/select emitters; for flash attention the carried-payload
+transform/finalize pair); this module is the kernel-side registry that
 the family ``ops`` wrappers, the parity tests and the benchmark sweep
 iterate over.
 """
@@ -26,11 +27,23 @@ def mask(sentinel: int) -> assoc.KernelSpec:
     return assoc.mask_kernel_spec(sentinel)
 
 
-# name -> spec factory taking no arguments (mask gets a default sentinel
-# only meaningful for sweeps/tests; real callers pass their padded N).
+def softmax_pair(**config) -> assoc.KernelSpec:
+    """Flash-attention spec: online softmax + carried value payload.
+
+    Config (scale, masking geometry, block sizes) is baked into the
+    per-block input transform — see ``assoc.softmax_pair_kernel_spec``.
+    """
+    config.setdefault("scale", 1.0)
+    return assoc.softmax_pair_kernel_spec(**config)
+
+
+# name -> spec factory taking no arguments (mask gets a default sentinel,
+# softmax_pair a default geometry, only meaningful for sweeps/tests; real
+# callers pass their padded N / attention config).
 REGISTRY = {
     "sum": lambda: SUM,
     "segmented_sum": lambda: SEGMENTED_SUM,
     "affine": lambda: AFFINE,
     "mask": lambda: mask(0x7FFFFFFF),
+    "softmax_pair": lambda: softmax_pair(),
 }

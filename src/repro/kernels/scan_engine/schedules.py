@@ -28,6 +28,28 @@ combine chains apply ``combine`` in exactly the carry chain's order
 (``combine`` is pointwise along the scan axis, so combining a carry into
 a block and then taking the last column equals combining it into the last
 column directly).
+
+CARRIED-PAYLOAD monoids (``spec.transform`` set — flash attention's
+softmax pair with its weighted-value accumulator) run the same two
+organizations as a FOLD over blocks: each grid block along the scanned
+axis contributes ONE macro element built by the spec's input transform
+from raw operand tiles, and outputs are emitted once from the final
+carried state via ``spec.finalize``:
+
+  carry      ``_fold_carry_body`` — the single-pass accumulate again:
+             sequential KV grid, payload carry in VMEM scratch, finalize
+             fused into the last block's writeback. This IS the classic
+             flash-attention forward, recovered from the generic engine.
+  decoupled  ``_fold_totals_body`` — split-KV / flash-decoding: KV chunks
+             fully parallel, each running the same accumulate over its
+             sub-blocks and publishing one payload element to the chain
+             buffers; a tiny jnp combine chain + finalize stitches the
+             chunks. (No fused form: a fold has no per-element writeback
+             to chain a prefix into, so "fused" maps to decoupled.)
+
+Folds are not bitwise-invariant across schedules — the chunk chain
+re-associates the payload rescaling — but agree to float tolerance, and
+each matches the reference oracles to the usual kernel tolerances.
 """
 
 from __future__ import annotations
@@ -172,12 +194,13 @@ def _dtypes(spec, operands):
 # ---------------------------------------------------------------------------
 
 
-def _carry_body(*refs, spec, layout, elem_dts, n_out, exclusive):
+def _carry_body(*refs, spec, layout, elem_dts, n_out, exclusive, n_tot):
     n_elem = spec.n_leaves
-    n_ops = len(refs) - n_out - n_elem
+    n_ops = len(refs) - n_out - n_tot - n_elem
     data_refs = refs[:n_ops]
     out_refs = refs[n_ops:n_ops + n_out]
-    carry_refs = refs[n_ops + n_out:]
+    tot_refs = refs[n_ops + n_out:n_ops + n_out + n_tot]
+    carry_refs = refs[n_ops + n_out + n_tot:]
     j = pl.program_id(layout.seq_grid_axis)
 
     @pl.when(j == 0)
@@ -195,25 +218,38 @@ def _carry_body(*refs, spec, layout, elem_dts, n_out, exclusive):
         carry, tuple(layout.take_last(s) for s in scanned))
     for r, c in zip(carry_refs, new_carry):
         layout.write_carry(r, c)
+    # Optional running chunk-totals chain (combined through chunk j) —
+    # bit-identical to the decoupled chain by the argument above.
+    for r, c in zip(tot_refs, new_carry):
+        layout.write_chain(r, c)
 
 
-def scan_carry(operands, spec, layout, *, exclusive=False, interpret=False):
+def scan_carry(operands, spec, layout, *, exclusive=False, interpret=False,
+               return_totals=False):
     elem_dts, out_dts = _dtypes(spec, operands)
+    n_tot = spec.n_leaves if return_totals else 0
     body = functools.partial(
         _carry_body, spec=spec, layout=layout, elem_dts=elem_dts,
-        n_out=len(out_dts), exclusive=exclusive)
-    return tuple(pl.pallas_call(
+        n_out=len(out_dts), exclusive=exclusive, n_tot=n_tot)
+    outs = pl.pallas_call(
         body,
         grid=layout.grid,
-        in_specs=[layout.data_spec()] * len(operands),
-        out_specs=[layout.data_spec()] * len(out_dts),
-        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts],
-        scratch_shapes=[layout.carry_scratch(dt) for dt in elem_dts],
+        in_specs=layout.op_specs(len(operands)),
+        out_specs=[layout.out_spec()] * len(out_dts)
+        + [layout.chain_spec_for(i) for i in range(n_tot)],
+        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts]
+        + [jax.ShapeDtypeStruct(layout.chain_shape_for(i), dt)
+           for i, dt in enumerate(elem_dts[:n_tot])],
+        scratch_shapes=[layout.carry_scratch(dt, i)
+                        for i, dt in enumerate(elem_dts)],
         compiler_params=pallas_compat.compiler_params(
             dimension_semantics=layout.semantics("arbitrary")),
         interpret=interpret,
         name=f"scan_{spec.name}_carry",
-    )(*operands))
+    )(*operands)
+    if return_totals:
+        return tuple(outs[:len(out_dts)]), tuple(outs[len(out_dts):])
+    return tuple(outs)
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +281,7 @@ def _apply_body(*refs, spec, layout, elem_dts, n_out, exclusive):
 
 
 def scan_decoupled(operands, spec, layout, *, exclusive=False,
-                   interpret=False):
+                   interpret=False, return_totals=False):
     elem_dts, out_dts = _dtypes(spec, operands)
     par = pallas_compat.compiler_params(
         dimension_semantics=layout.semantics("parallel"))
@@ -254,10 +290,10 @@ def scan_decoupled(operands, spec, layout, *, exclusive=False,
         functools.partial(
             _totals_body, spec=spec, layout=layout, elem_dts=elem_dts),
         grid=layout.grid,
-        in_specs=[layout.data_spec()] * len(operands),
-        out_specs=[layout.chain_spec()] * spec.n_leaves,
-        out_shape=[jax.ShapeDtypeStruct(layout.chain_shape, dt)
-                   for dt in elem_dts],
+        in_specs=layout.op_specs(len(operands)),
+        out_specs=[layout.chain_spec_for(i) for i in range(spec.n_leaves)],
+        out_shape=[jax.ShapeDtypeStruct(layout.chain_shape_for(i), dt)
+                   for i, dt in enumerate(elem_dts)],
         compiler_params=par,
         interpret=interpret,
         name=f"scan_{spec.name}_totals",
@@ -265,19 +301,25 @@ def scan_decoupled(operands, spec, layout, *, exclusive=False,
 
     offsets = exclusive_chain(spec, tuple(totals))
 
-    return tuple(pl.pallas_call(
+    outs = tuple(pl.pallas_call(
         functools.partial(
             _apply_body, spec=spec, layout=layout, elem_dts=elem_dts,
             n_out=len(out_dts), exclusive=exclusive),
         grid=layout.grid,
-        in_specs=[layout.data_spec()] * len(operands)
-        + [layout.chain_spec()] * spec.n_leaves,
-        out_specs=[layout.data_spec()] * len(out_dts),
+        in_specs=layout.op_specs(len(operands))
+        + [layout.chain_spec_for(i) for i in range(spec.n_leaves)],
+        out_specs=[layout.out_spec()] * len(out_dts),
         out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts],
         compiler_params=par,
         interpret=interpret,
         name=f"scan_{spec.name}_apply",
     )(*operands, *offsets))
+    if return_totals:
+        # Running (inclusive) chunk totals — exactly the carry schedule's
+        # per-chunk carries: exclusive offset ⊕ local total, O(B·chunks).
+        running = spec.combine(offsets, tuple(totals))
+        return outs, running
+    return outs
 
 
 # ---------------------------------------------------------------------------
@@ -355,7 +397,8 @@ def _fused_body(*refs, spec, layout, elem_dts, n_out, exclusive):
     _emit(spec, layout, out_refs, elems, combined)
 
 
-def scan_fused(operands, spec, layout, *, exclusive=False, interpret=False):
+def scan_fused(operands, spec, layout, *, exclusive=False, interpret=False,
+               return_totals=False):
     """Single-launch decoupled: chunk prefixes chained through semaphores.
 
     EXPERIMENTAL on-device path (pending real-TPU validation — see
@@ -370,9 +413,13 @@ def scan_fused(operands, spec, layout, *, exclusive=False, interpret=False):
     same organization split into two ``pallas_call``s, bit-identical
     results.
     """
-    if interpret or not fused_native_available():
+    if interpret or not fused_native_available() or return_totals:
+        # return_totals also routes here: the native chain buffers hold
+        # per-chunk PREFIXES except the last chunk (which never
+        # publishes), so the two-launch form is the totals-bearing one.
         return scan_decoupled(operands, spec, layout, exclusive=exclusive,
-                              interpret=interpret)
+                              interpret=interpret,
+                              return_totals=return_totals)
     elem_dts, out_dts = _dtypes(spec, operands)
     n_elem = spec.n_leaves
     grid = layout.grid
@@ -381,8 +428,8 @@ def scan_fused(operands, spec, layout, *, exclusive=False, interpret=False):
             _fused_body, spec=spec, layout=layout, elem_dts=elem_dts,
             n_out=len(out_dts), exclusive=exclusive),
         grid=grid,
-        in_specs=[layout.data_spec()] * len(operands),
-        out_specs=[layout.data_spec()] * len(out_dts)
+        in_specs=layout.op_specs(len(operands)),
+        out_specs=[layout.out_spec()] * len(out_dts)
         + [pl.BlockSpec(memory_space=pallas_compat.any_memory_space())]
         * n_elem,
         out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts]
@@ -402,15 +449,158 @@ def scan_fused(operands, spec, layout, *, exclusive=False, interpret=False):
 
 
 # ---------------------------------------------------------------------------
+# Carried-payload fold schedules (spec.transform monoids)
+# ---------------------------------------------------------------------------
+
+
+def fold_chain(spec: KernelSpec, totals, axis: int = 1):
+    """Sequential INCLUSIVE fold of chunk elements along ``axis``.
+
+    Left-to-right ``lax.scan`` seeded with the monoid identity — the
+    same association order as the fold-carry chain, so the decoupled
+    fold re-associates only at chunk boundaries.
+    """
+    init = tuple(
+        jnp.full_like(jax.lax.index_in_dim(t, 0, axis, keepdims=False), f)
+        for t, f in zip(totals, spec.fills))
+
+    def step(carry, t):
+        return spec.combine(carry, t), None
+
+    moved = tuple(jnp.moveaxis(t, axis, 0) for t in totals)
+    final, _ = jax.lax.scan(step, init, moved)
+    return final
+
+
+def _fold_carry_body(*refs, spec, layout, elem_dts, n_ops, n_out):
+    data_refs = refs[:n_ops]
+    out_refs = refs[n_ops:n_ops + n_out]
+    carry_refs = refs[n_ops + n_out:]
+    j = pl.program_id(layout.seq_grid_axis)
+
+    @pl.when(j == 0)
+    def _reset():
+        for r, f in zip(carry_refs, spec.fills):
+            r[...] = jnp.full(r.shape, f, r.dtype)
+
+    ops = tuple(layout.read_op(r) for r in data_refs)
+    elem = spec.transform(ops, layout.block_ids())
+    elem = tuple(e.astype(dt) for e, dt in zip(elem, elem_dts))
+    carry = tuple(r[...] for r in carry_refs)
+    new_carry = spec.combine(carry, elem)     # carry is the EARLIER operand
+    for r, c in zip(carry_refs, new_carry):
+        r[...] = c.astype(r.dtype)
+
+    @pl.when(j == layout.num_seq_blocks - 1)
+    def _finalize():
+        for r, o in zip(out_refs, spec.finalize(new_carry)):
+            layout.write(r, o)
+
+
+def fold_carry(operands, spec, layout, *, interpret=False):
+    """Single-pass accumulate of a carried-payload monoid (flash fwd)."""
+    elem_dts, out_dts = _dtypes(spec, operands)
+    body = functools.partial(
+        _fold_carry_body, spec=spec, layout=layout, elem_dts=elem_dts,
+        n_ops=len(operands), n_out=len(out_dts))
+    return tuple(pl.pallas_call(
+        body,
+        grid=layout.grid,
+        in_specs=layout.op_specs(len(operands)),
+        out_specs=[layout.out_spec()] * len(out_dts),
+        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts],
+        scratch_shapes=[layout.carry_scratch(dt, i)
+                        for i, dt in enumerate(elem_dts)],
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=layout.semantics("arbitrary")),
+        interpret=interpret,
+        name=f"scan_{spec.name}_fold_carry",
+    )(*operands))
+
+
+def _fold_totals_body(*refs, spec, layout, elem_dts, n_ops):
+    n_elem = spec.n_leaves
+    data_refs = refs[:n_ops]
+    chain_refs = refs[n_ops:n_ops + n_elem]
+    carry_refs = refs[n_ops + n_elem:]
+    s = pl.program_id(len(layout.split_grid) - 1)
+
+    @pl.when(s == 0)
+    def _reset():
+        for r, f in zip(carry_refs, spec.fills):
+            r[...] = jnp.full(r.shape, f, r.dtype)
+
+    ops = tuple(layout.read_op(r) for r in data_refs)
+    elem = spec.transform(ops, layout.split_block_ids())
+    elem = tuple(e.astype(dt) for e, dt in zip(elem, elem_dts))
+    carry = tuple(r[...] for r in carry_refs)
+    new_carry = spec.combine(carry, elem)
+    for r, c in zip(carry_refs, new_carry):
+        r[...] = c.astype(r.dtype)
+
+    @pl.when(s == layout.blocks_per_chunk - 1)
+    def _publish():
+        for r, c in zip(chain_refs, new_carry):
+            layout.write_chain(r, c)
+
+
+def fold_decoupled(operands, spec, layout, *, interpret=False):
+    """Split-KV fold: parallel chunk accumulates + tiny combine chain.
+
+    The flash-decoding organization: launch 1 runs the fold-carry body
+    over each of ``layout.splits`` KV chunks in parallel, publishing one
+    payload element per chunk; the chunks are then stitched by a
+    sequential jnp combine (same association as the carry chain at chunk
+    granularity) and finalized — read ``n`` once plus
+    O(rows · splits · payload) chain traffic, with the scanned axis
+    spread across cores.
+    """
+    elem_dts, out_dts = _dtypes(spec, operands)
+    totals = pl.pallas_call(
+        functools.partial(
+            _fold_totals_body, spec=spec, layout=layout, elem_dts=elem_dts,
+            n_ops=len(operands)),
+        grid=layout.split_grid,
+        in_specs=layout.split_op_specs(len(operands)),
+        out_specs=[layout.split_chain_spec_for(i)
+                   for i in range(spec.n_leaves)],
+        out_shape=[jax.ShapeDtypeStruct(layout.chain_shape_for(i), dt)
+                   for i, dt in enumerate(elem_dts)],
+        scratch_shapes=[layout.carry_scratch(dt, i)
+                        for i, dt in enumerate(elem_dts)],
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=layout.split_semantics()),
+        interpret=interpret,
+        name=f"scan_{spec.name}_fold_totals",
+    )(*operands)
+
+    final = fold_chain(spec, tuple(totals))
+    outs = spec.finalize(final)
+    return tuple(
+        layout.unchain_out(o).astype(dt) for o, dt in zip(outs, out_dts))
+
+
+# ---------------------------------------------------------------------------
 # Entry point
 # ---------------------------------------------------------------------------
 
 
 def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
-         exclusive: bool = False, interpret: bool = False):
+         exclusive: bool = False, interpret: bool = False,
+         return_totals: bool = False):
     """Run ``spec``'s monoid scan over ``operands`` under one schedule.
 
     Returns a tuple of output arrays (most registrations emit one).
+    ``return_totals=True`` additionally returns the running chunk-totals
+    chain (one ``layout.chain_shape`` array per element leaf, combined
+    through chunk ``j``) so callers can derive row aggregates in
+    O(B·chunks) instead of re-reducing the data — not supported for
+    carried-payload (transform) monoids, whose outputs already ARE the
+    fold.
+
+    Carried-payload monoids (``spec.transform``) run the fold forms of
+    the schedules; ``fused`` maps to ``decoupled`` there (a fold has no
+    per-element writeback to chain a prefix into).
     """
     if schedule not in SCHEDULES:
         raise ValueError(
@@ -418,7 +608,14 @@ def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
     if exclusive and not spec.supports_exclusive:
         raise ValueError(
             f"monoid {spec.name!r} does not support exclusive mode")
+    if spec.transform is not None:
+        if return_totals:
+            raise ValueError(
+                "return_totals is meaningless for carried-payload "
+                "monoids: the output IS the fold")
+        fn = fold_carry if schedule == "carry" else fold_decoupled
+        return fn(tuple(operands), spec, layout, interpret=interpret)
     fn = {"carry": scan_carry, "decoupled": scan_decoupled,
           "fused": scan_fused}[schedule]
     return fn(tuple(operands), spec, layout, exclusive=exclusive,
-              interpret=interpret)
+              interpret=interpret, return_totals=return_totals)

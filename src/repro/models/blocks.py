@@ -105,14 +105,15 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
 
 
 def _attn_mlp_core(params, x, cfg, *, kind, positions, cache, cache_len,
-                   attn_impl, ffn, unroll=False):
+                   attn_impl, ffn, attn_schedule="auto", unroll=False):
     """Shared wiring for attention blocks; ``ffn`` runs the second half."""
     h = apply_norm(params["norm1"], x, cfg)
     attn_out, new_kv = apply_attention(
         params["attn"], h, cfg, kind=("local" if kind == "local" else
                                       "global"),
         positions=positions, cache=None if cache is None else cache["kv"],
-        cache_len=cache_len, impl=attn_impl, unroll=unroll,
+        cache_len=cache_len, impl=attn_impl, schedule=attn_schedule,
+        unroll=unroll,
     )
     if cfg.post_block_norm:
         attn_out = apply_norm(params["post_norm1"], attn_out, cfg)
@@ -138,6 +139,7 @@ def apply_block(
     cache: Optional[dict] = None,
     cache_len: Optional[jax.Array] = None,
     attn_impl: Optional[str] = None,
+    attn_schedule: str = "auto",
     unroll: bool = False,
 ):
     if kind in ("global", "local"):
@@ -145,8 +147,8 @@ def apply_block(
             return apply_mlp(params["mlp"], h, cfg), zero_aux()
         return _attn_mlp_core(
             params, x, cfg, kind=kind, positions=positions, cache=cache,
-            cache_len=cache_len, attn_impl=attn_impl, ffn=ffn,
-            unroll=unroll)
+            cache_len=cache_len, attn_impl=attn_impl,
+            attn_schedule=attn_schedule, ffn=ffn, unroll=unroll)
 
     if kind == "moe":
         def ffn(h):
@@ -157,8 +159,8 @@ def apply_block(
                            dropped_fraction=moe_aux.dropped_fraction)
         return _attn_mlp_core(
             params, x, cfg, kind=kind, positions=positions, cache=cache,
-            cache_len=cache_len, attn_impl=attn_impl, ffn=ffn,
-            unroll=unroll)
+            cache_len=cache_len, attn_impl=attn_impl,
+            attn_schedule=attn_schedule, ffn=ffn, unroll=unroll)
 
     if kind == "mamba":
         h = apply_norm(params["norm1"], x, cfg)
@@ -194,7 +196,8 @@ def apply_block(
         h = jnp.einsum("btc,cd->btd", h, params["shared_proj_in"]["w"])
         h, aux, new_cache = _attn_mlp_core(
             shared, h, cfg, kind="global", positions=positions, cache=cache,
-            cache_len=cache_len, attn_impl=attn_impl, unroll=unroll,
+            cache_len=cache_len, attn_impl=attn_impl,
+            attn_schedule=attn_schedule, unroll=unroll,
             ffn=lambda hh: (apply_mlp(shared["mlp"], hh, cfg), zero_aux()))
         y = jnp.einsum("btd,de->bte", h, params["shared_proj_out"]["w"])
         return x + y, aux, new_cache

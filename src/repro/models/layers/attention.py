@@ -3,8 +3,11 @@
 Implementation selection mirrors the scan policy (paper §5): small sequences
 use the dense form; long sequences use the *blockwise online-softmax scan*
 (`repro.kernels.flash_attention.ref.blockwise_ref`, autodiff-able) and the
-Pallas flash kernel on TPU for inference — all three compute the same
-softmax-pair monoid scan.
+engine-backed flash kernel (`impl="flash"`) for inference — all three
+compute the same softmax-pair monoid fold. The flash route threads
+``schedule`` ("carry"|"decoupled"|"auto") down to the scan engine's fold
+schedules, so the serve prefill path can land on the split-KV decoupled
+form for the long-KV class via ``policy.choose_attention_schedule``.
 """
 
 from __future__ import annotations
@@ -102,6 +105,7 @@ def apply_attention(
     cache: Optional[dict] = None,
     cache_len: Optional[jax.Array] = None,
     impl: Optional[str] = None,
+    schedule: str = "auto",
     causal: bool = True,
     unroll: bool = False,
 ):
@@ -110,7 +114,8 @@ def apply_attention(
     Training/prefill: ``cache=None``; decode: pass the layer cache and the
     number of valid entries ``cache_len`` — new K/V are written at
     ``cache_len`` (modulo window for local layers) and attention spans the
-    cache. Returns (out, new_cache).
+    cache. Returns (out, new_cache). ``schedule`` picks the flash-engine
+    fold organization when the flash route runs (carry|decoupled|auto).
     """
     B, S, _ = x.shape
     window = cfg.sliding_window if kind == "local" else None
@@ -168,16 +173,24 @@ def apply_attention(
     elif (cache is not None and window is None and S == cache["k"].shape[2]
           and S > 4096 and not _baseline):
         # Full-cache prefill of a GLOBAL layer at long S: the O(S²) f32
-        # logits of the dense path dwarf HBM — use the blockwise
-        # online-softmax scan and write the cache directly (§Perf).
+        # logits of the dense path dwarf HBM — use the online-softmax
+        # fold and write the cache directly (§Perf). ``impl="flash"``
+        # lands on the scan-engine kernel (schedule=auto routes long-KV
+        # shapes to the split-KV decoupled fold); otherwise the
+        # autodiff-able jnp blockwise scan.
         H, Hkv = cfg.num_heads, cfg.num_kv_heads
-        out = blockwise_ref(
-            qh.reshape(B * H, S, cfg.head_dim),
-            kh.reshape(B * Hkv, S, cfg.head_dim),
-            vh.reshape(B * Hkv, S, cfg.head_dim),
-            group=H // Hkv, scale=scale, causal=causal,
-            softcap=cfg.attn_softcap, block_k=1024, unroll=unroll,
-        ).reshape(B, H, S, cfg.head_dim)
+        if impl == "flash":
+            out = flash_attention(
+                qh, kh, vh, scale=scale, causal=causal,
+                softcap=cfg.attn_softcap, schedule=schedule)
+        else:
+            out = blockwise_ref(
+                qh.reshape(B * H, S, cfg.head_dim),
+                kh.reshape(B * Hkv, S, cfg.head_dim),
+                vh.reshape(B * Hkv, S, cfg.head_dim),
+                group=H // Hkv, scale=scale, causal=causal,
+                softcap=cfg.attn_softcap, block_k=1024, unroll=unroll,
+            ).reshape(B, H, S, cfg.head_dim)
         new_cache = {"k": kh, "v": vh}
     elif cache is not None:
         slots = cache["k"].shape[2]
@@ -196,11 +209,33 @@ def apply_attention(
             k_pos = total - slots + wrap
         else:
             k_pos = k_slot
-        out = _dense_attn(
-            qh, kc, vc, scale=scale, causal=causal, window=window,
-            softcap=cfg.attn_softcap, q_pos=positions,
-            k_pos=k_pos, kv_len=cache_len + S,
-        )
+
+        def _cached_dense(_):
+            return _dense_attn(
+                qh, kc, vc, scale=scale, causal=causal, window=window,
+                softcap=cfg.attn_softcap, q_pos=positions,
+                k_pos=k_pos, kv_len=cache_len + S,
+            )
+
+        if impl == "flash" and window is None and S > 1:
+            # Prefill of a GLOBAL layer into a PADDED cache (cache longer
+            # than the live prefix): attend the S live keys directly on
+            # the engine-backed fold — masking dead slots is implicit
+            # (they are never read). Valid only from an EMPTY cache
+            # (absolute q/k positions equal segment offsets), and
+            # ``cache_len`` is traced, so the guard is a runtime
+            # ``lax.cond``: a mid-stream call (chunked prefill,
+            # multi-token verification) keeps the dense path's cached
+            # keys instead of silently dropping them.
+            def _flash_prefill(_):
+                return flash_attention(
+                    qh, kh, vh, scale=scale, causal=causal,
+                    softcap=cfg.attn_softcap, schedule=schedule)
+
+            out = jax.lax.cond(
+                cache_len == 0, _flash_prefill, _cached_dense, None)
+        else:
+            out = _cached_dense(None)
     else:
         if impl is None:
             import os
@@ -241,7 +276,7 @@ def apply_attention(
         elif impl == "flash":
             out = flash_attention(
                 qh, kh, vh, scale=scale, causal=causal, window=window,
-                softcap=cfg.attn_softcap,
+                softcap=cfg.attn_softcap, schedule=schedule,
             )
         else:
             raise ValueError(f"unknown attention impl {impl!r}")

@@ -76,7 +76,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
 
 
 def _body_fn(cfg: ModelConfig, x0, positions, cache_len, attn_impl, decode,
-             shared, unroll=False):
+             shared, attn_schedule="auto", unroll=False):
     """Returns the lax.scan body over periods."""
 
     def body(carry, per_layer):
@@ -90,7 +90,8 @@ def _body_fn(cfg: ModelConfig, x0, positions, cache_len, attn_impl, decode,
             x, a, new_c = blk.apply_block(
                 params_sl[name], x, cfg, kind, shared=shared, x0=x0,
                 positions=positions, cache=cache, cache_len=cache_len,
-                attn_impl=attn_impl, unroll=unroll)
+                attn_impl=attn_impl, attn_schedule=attn_schedule,
+                unroll=unroll)
             aux = jax.tree.map(jnp.add, aux, a)
             if decode:
                 new_cache_sl[name] = new_c
@@ -109,6 +110,7 @@ def forward(
     cache: Optional[Pytree] = None,
     cache_len: Optional[jax.Array] = None,
     attn_impl: Optional[str] = None,
+    attn_schedule: str = "auto",
     remat: bool = False,
     unroll: bool = False,
 ):
@@ -135,7 +137,7 @@ def forward(
     decode = cache is not None
     shared = params.get("shared")
     body = _body_fn(cfg, x, positions, cache_len, attn_impl, decode, shared,
-                    unroll=unroll)
+                    attn_schedule=attn_schedule, unroll=unroll)
     if remat:
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.nothing_saveable)
@@ -227,7 +229,7 @@ def decode_step(
 def prefill(
     params, tokens, cfg: ModelConfig, max_len: int,
     embeds: Optional[jax.Array] = None, attn_impl: Optional[str] = None,
-    unroll: bool = False,
+    attn_schedule: str = "auto", unroll: bool = False,
 ):
     """Run the prompt through the model, returning (logits_last, cache).
 
@@ -239,6 +241,6 @@ def prefill(
     hidden, _, cache = forward(
         params, tokens, cfg, embeds=embeds, cache=cache,
         cache_len=jnp.zeros((), jnp.int32), attn_impl=attn_impl,
-        unroll=unroll)
+        attn_schedule=attn_schedule, unroll=unroll)
     logits = lm_logits(params, hidden[:, -1:], cfg)[:, 0]
     return logits, cache

@@ -38,6 +38,12 @@ class EngineConfig:
     top_p: float = 1.0
     eos_id: int = 1
     seed: int = 0
+    # Prefill attention route: ``attn_impl="flash"`` runs prompt attention
+    # on the engine-backed flash fold, ``attn_schedule`` its grid
+    # organization (carry | decoupled | auto — policy decides; the long-KV
+    # class lands on the split-KV decoupled form).
+    attn_impl: Optional[str] = None
+    attn_schedule: str = "auto"
 
 
 @dataclasses.dataclass
@@ -119,7 +125,9 @@ class Engine:
     def _prefill_for(self, S: int):
         if S not in self._prefill_cache:
             self._prefill_cache[S] = jax.jit(
-                make_prefill_fn(self.cfg, self.ecfg.max_len))
+                make_prefill_fn(self.cfg, self.ecfg.max_len,
+                                attn_impl=self.ecfg.attn_impl,
+                                attn_schedule=self.ecfg.attn_schedule))
         return self._prefill_cache[S]
 
     def _sample(self, logits: jax.Array) -> jax.Array:

@@ -42,7 +42,14 @@ def make_serve_step(cfg: ModelConfig, unroll: bool = False):
     return step
 
 
-def make_prefill_fn(cfg: ModelConfig, max_len: int, unroll: bool = False):
+def make_prefill_fn(cfg: ModelConfig, max_len: int, unroll: bool = False,
+                    attn_impl: Optional[str] = None,
+                    attn_schedule: str = "auto"):
+    """``attn_impl="flash"`` routes decoder-only prefill attention through
+    the engine-backed flash fold (KV cache may be longer than the prompt
+    — the padded-cache case); ``attn_schedule`` picks its grid
+    organization (carry | decoupled | auto, see
+    ``core/scan/policy.choose_attention_schedule``)."""
     if cfg.is_encdec:
         def fn(params, tokens, embeds):
             memory = encdec_mod.encode(params, embeds, cfg, unroll=unroll)
@@ -56,7 +63,9 @@ def make_prefill_fn(cfg: ModelConfig, max_len: int, unroll: bool = False):
 
     def fn(params, tokens, embeds=None):
         logits, cache = lm_mod.prefill(
-            params, tokens, cfg, max_len, embeds=embeds, unroll=unroll)
+            params, tokens, cfg, max_len, embeds=embeds,
+            attn_impl=attn_impl, attn_schedule=attn_schedule,
+            unroll=unroll)
         return logits, cache
 
     return fn

@@ -1,0 +1,256 @@
+"""Engine-backed flash attention: schedule parity across the config grid.
+
+Mirrors the 3-schedule × 4-monoid sweep in ``test_scan_engine.py`` for
+the SOFTMAX_PAIR carried-payload registration: the acceptance bar for
+folding flash attention onto the scan engine (interpret mode on CPU) is
+
+  * both fold schedules (carry / decoupled split-KV) match the dense
+    oracle ``ref.py:mha_ref`` across {causal, sliding window, softcap,
+    GQA group sizes, kv_len not a multiple of block_k, all-masked rows};
+  * the schedules agree with each OTHER to tight tolerance (folds
+    re-associate the payload rescaling at chunk boundaries, so parity is
+    atol-tight rather than bitwise — unlike the element-monoid sweep);
+  * the registration surface: registry entry, spec shape, the engine's
+    transform/finalize dispatch, and the two-way attention policy rule.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scan import assoc, policy
+from repro.kernels import scan_engine
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_kernel, pick_kv_splits)
+
+SCHEDULES = ("carry", "decoupled")
+
+
+def _rand_qkv(rng, B, Hq, Hkv, Tq, Tk, D, dtype=jnp.float32):
+    q = jnp.asarray(rng.standard_normal((B, Hq, Tq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Tk, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Tk, D)), dtype)
+    return q, k, v
+
+
+def _dense(q, k, v, **kw):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    return fa_ref.mha_ref(
+        q.reshape(B * Hq, Tq, D), k.reshape(B * Hkv, Tk, D),
+        v.reshape(B * Hkv, Tk, D), group=Hq // Hkv, **kw,
+    ).reshape(B, Hq, Tq, D)
+
+
+# ---------------------------------------------------------------------------
+# schedule-parity sweep: 2 fold schedules x config grid, vs the dense oracle
+# ---------------------------------------------------------------------------
+
+
+CONFIGS = [
+    # (name, B, Hkv, group, Tq, Tk, D, causal, window, softcap, bq, bk)
+    ("causal", 2, 2, 1, 256, 256, 32, True, None, None, 128, 128),
+    ("noncausal", 1, 2, 1, 256, 256, 32, False, None, None, 128, 128),
+    ("window", 1, 2, 1, 256, 256, 32, True, 64, None, 64, 128),
+    ("softcap", 1, 1, 1, 256, 256, 32, True, None, 30.0, 128, 128),
+    ("gqa2", 2, 2, 2, 256, 256, 32, True, None, None, 128, 128),
+    ("gqa4_window_cap", 1, 2, 4, 256, 256, 16, True, 96, 20.0, 128, 64),
+    ("ragged_kv", 1, 2, 1, 300, 300, 32, True, None, None, 128, 128),
+    ("ragged_kv_noncausal", 1, 1, 1, 200, 300, 16, False, None, None,
+     128, 128),
+]
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize(
+    "cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_flash_engine_matches_dense(cfg, schedule):
+    name, B, Hkv, g, Tq, Tk, D, causal, window, softcap, bq, bk = cfg
+    rng = np.random.default_rng(abs(hash(name)) % 2**31)
+    q, k, v = _rand_qkv(rng, B, Hkv * g, Hkv, Tq, Tk, D)
+    got = fa_ops.flash_attention(
+        q, k, v, scale=D ** -0.5, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, schedule=schedule,
+        interpret=True)
+    ref = _dense(q, k, v, scale=D ** -0.5, causal=causal, window=window,
+                 softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize(
+    "cfg", CONFIGS, ids=[c[0] for c in CONFIGS])
+def test_flash_engine_cross_schedule_parity(cfg):
+    """carry vs decoupled: the same fold re-associated at chunk
+    boundaries only — atol-tight across the whole config grid."""
+    name, B, Hkv, g, Tq, Tk, D, causal, window, softcap, bq, bk = cfg
+    rng = np.random.default_rng(abs(hash(name)) % 2**31)
+    q, k, v = _rand_qkv(rng, B, Hkv * g, Hkv, Tq, Tk, D)
+    outs = [
+        fa_ops.flash_attention(
+            q, k, v, scale=D ** -0.5, causal=causal, window=window,
+            softcap=softcap, block_q=bq, block_k=bk, schedule=s,
+            interpret=True)
+        for s in SCHEDULES
+    ]
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_flash_engine_all_masked_rows(schedule):
+    """Rows whose whole KV band is masked (q positions beyond
+    kv_len + window) must degrade to the uniform softmax — the finite
+    NEG_INF mask keeps the max-carry NaN-free and matches the dense
+    reference's exp(0) arithmetic exactly."""
+    rng = np.random.default_rng(17)
+    Tq = Tk = 256
+    D, kv_len, window = 16, 64, 32
+    q = jnp.asarray(rng.standard_normal((2, Tq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, Tk, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, Tk, D)), jnp.float32)
+    # rows >= kv_len + window see NO live key: fully masked
+    got = flash_attention_kernel(
+        q, k, v, scale=D ** -0.5, causal=True, window=window,
+        kv_len=kv_len, block_q=64, block_k=64, schedule=schedule,
+        interpret=True)
+    ref = fa_ref.mha_ref(q, k, v, scale=D ** -0.5, causal=True,
+                         window=window, kv_len=kv_len)
+    assert not bool(jnp.any(jnp.isnan(got)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_flash_engine_bf16(schedule):
+    rng = np.random.default_rng(13)
+    q, k, v = _rand_qkv(rng, 1, 2, 2, 128, 128, 32, jnp.bfloat16)
+    got = fa_ops.flash_attention(q, k, v, scale=32 ** -0.5,
+                                 schedule=schedule, interpret=True)
+    ref = _dense(q, k, v, scale=32 ** -0.5)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("splits", [1, 2, 4, 8])
+def test_flash_engine_split_invariance(splits):
+    """The decoupled fold must not depend on the chunk count."""
+    rng = np.random.default_rng(7)
+    q, k, v = _rand_qkv(rng, 1, 2, 1, 128, 1024, 16)
+    ref = _dense(q, k, v, scale=0.25, causal=True)
+    got = fa_ops.flash_attention(
+        q, k, v, scale=0.25, causal=True, schedule="decoupled",
+        kv_splits=splits, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_blockwise_ref_still_matches_engine():
+    """The autodiff-able training-path oracle and the engine kernel are
+    two statements of the same fold."""
+    rng = np.random.default_rng(5)
+    q, k, v = _rand_qkv(rng, 1, 2, 2, 192, 192, 16)
+    eng = fa_ops.flash_attention(q, k, v, scale=0.25, causal=True,
+                                 schedule="carry", interpret=True)
+    blk = fa_ref.blockwise_ref(
+        q.reshape(2, 192, 16), k.reshape(2, 192, 16),
+        v.reshape(2, 192, 16), scale=0.25, causal=True,
+        block_k=64).reshape(1, 2, 192, 16)
+    np.testing.assert_allclose(np.asarray(eng), np.asarray(blk),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# registration surface
+# ---------------------------------------------------------------------------
+
+
+def test_softmax_pair_registered_with_engine():
+    assert "softmax_pair" in scan_engine.monoids.REGISTRY
+    spec = scan_engine.monoids.REGISTRY["softmax_pair"]()
+    assert isinstance(spec, assoc.KernelSpec)
+    assert spec.n_leaves == 3              # (m, l, acc) payload triple
+    assert spec.transform is not None and spec.finalize is not None
+    assert not spec.supports_exclusive
+
+
+def test_engine_rejects_bad_fold_requests():
+    spec = assoc.softmax_pair_kernel_spec(scale=1.0)
+    lay = scan_engine.KVBlocks(bh=2, bh_kv=2, tq=128, tk=128, d=16,
+                               bq=128, bk=128)
+    x = jnp.ones((2, 128, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        scan_engine.scan((x, x, x), spec, lay, schedule="carry",
+                         exclusive=True)
+    with pytest.raises(ValueError):
+        scan_engine.scan((x, x, x), spec, lay, schedule="carry",
+                         return_totals=True)
+    with pytest.raises(ValueError):
+        scan_engine.KVBlocks(bh=3, bh_kv=2, tq=128, tk=128, d=16,
+                             bq=128, bk=128)  # bh != bh_kv * group
+    with pytest.raises(ValueError):
+        scan_engine.KVBlocks(bh=2, bh_kv=2, tq=128, tk=512, d=16,
+                             bq=128, bk=128, splits=3)  # 3 !| 4 blocks
+
+
+def test_pick_kv_splits_divides():
+    assert pick_kv_splits(8, 16) == 8
+    assert pick_kv_splits(12, 8) == 6      # largest divisor <= target
+    assert pick_kv_splits(7, 4) == 1       # prime block count
+    assert pick_kv_splits(1) == 1
+
+
+# ---------------------------------------------------------------------------
+# policy: the two-way attention rule
+# ---------------------------------------------------------------------------
+
+
+def test_attention_policy_decode_vs_prefill():
+    cores = policy.NUM_CORES
+    # decode with few heads: rows < cores -> split-KV
+    assert policy.choose_attention_schedule(cores // 2, 1 << 15) \
+        == "decoupled"
+    # long-KV scoring (32k at bk=128) with decode-class rows -> split-KV
+    assert policy.choose_attention_schedule(4 * cores, 1 << 15) \
+        == "decoupled"
+    # same KV but fully saturated prefill rows -> carry
+    assert policy.choose_attention_schedule(
+        cores * policy.SPLIT_KV_ROW_CAP, 1 << 15) == "carry"
+    # short KV, saturated rows -> carry
+    assert policy.choose_attention_schedule(cores * 4, 2048) == "carry"
+
+
+def test_attention_schedule_resolution_through_ops():
+    # decode-class shape: B=1, 8 heads, one q position, 64k-token cache
+    assert fa_ops.resolved_attention_schedule((1, 8, 1, 64), 1 << 16) \
+        == "decoupled"
+    # training/prefill-class shape: plenty of (head, q-block) rows
+    assert fa_ops.resolved_attention_schedule((8, 16, 4096, 64), 4096) \
+        == "carry"
+    with pytest.raises(ValueError):
+        fa_ops.resolved_attention_schedule((1, 8, 1, 64), 64,
+                                           schedule="fused")
+
+
+def test_decoupled_pads_prime_kv_block_counts():
+    """The ops wrapper must achieve a real split count even when the raw
+    KV block count is prime (the 500k-context class pads to 3907 blocks)
+    — the KV axis is padded to a multiple of the target chunk count, and
+    results still match the dense oracle on the unpadded kv_len."""
+    from repro.kernels.flash_attention.ops import _decoupled_padding
+    pad_k, splits = _decoupled_padding(7 * 128, 128, None)  # 7 blocks
+    assert splits == 7 and pad_k == 0
+    pad_k, splits = _decoupled_padding(17 * 128, 128, 16)   # prime 17
+    assert splits == 16 and (17 * 128 + pad_k) // 128 % 16 == 0
+    rng = np.random.default_rng(23)
+    q, k, v = _rand_qkv(rng, 1, 2, 1, 128, 17 * 128, 16)
+    got = fa_ops.flash_attention(q, k, v, scale=0.25, causal=False,
+                                 schedule="decoupled", kv_splits=16,
+                                 block_k=128, interpret=True)
+    ref = _dense(q, k, v, scale=0.25, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

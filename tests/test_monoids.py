@@ -118,3 +118,140 @@ def test_segmented_lift_matches_python(pairs):
         want.append(acc)
     np.testing.assert_allclose(np.asarray(out, np.float64), want,
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# registry-wide law sweep: every entry in assoc.REGISTRY, including
+# SOFTMAX_PAIR and MATRIX_AFFINE (runs under tests/_hypothesis_fallback.py
+# when the real hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+def _element_for(name, rng_vals):
+    """Build one monoid element for ``name`` from 4 drawn floats."""
+    x, y, z, w = (jnp.float32(v) for v in rng_vals)
+    if name in ("sum", "max", "min", "prod"):
+        return x
+    if name == "affine":
+        return (jnp.abs(x) + jnp.float32(0.125), y)
+    if name == "matrix_affine":
+        # scalar decay broadcasting over a (2, 2) matrix update
+        a = jnp.abs(x) + jnp.float32(0.125)
+        B = jnp.stack([jnp.stack([y, z]), jnp.stack([z, w])])
+        return (jnp.broadcast_to(a, (2, 2)), B)
+    if name == "softmax_pair":
+        return (x, jnp.abs(y) + jnp.float32(0.125))
+    raise AssertionError(f"unhandled registry monoid {name!r}")
+
+
+_quad = st.tuples(_f, _f, _f, _f)
+
+
+@pytest.mark.parametrize("name", sorted(assoc.REGISTRY))
+@given(e1=_quad, e2=_quad, e3=_quad)
+@settings(max_examples=25, deadline=None)
+def test_registry_monoid_associativity(name, e1, e2, e3):
+    m = assoc.REGISTRY[name]
+    a, b, c = (_element_for(name, e) for e in (e1, e2, e3))
+    _tclose(m.combine(m.combine(a, b), c), m.combine(a, m.combine(b, c)),
+            tol=1e-2)
+
+
+@pytest.mark.parametrize("name", sorted(assoc.REGISTRY))
+@given(e=_quad)
+@settings(max_examples=15, deadline=None)
+def test_registry_monoid_identity(name, e):
+    m = assoc.REGISTRY[name]
+    a = _element_for(name, e)
+    ident = m.identity_like(a)
+    _tclose(m.combine(ident, a), a)
+    _tclose(m.combine(a, ident), a)
+
+
+# ---------------------------------------------------------------------------
+# the NEG_INF finite-mask invariant (softmax max-carry edge elements)
+# ---------------------------------------------------------------------------
+
+
+_maybe_masked = st.sampled_from(["live", "masked"])
+
+
+@given(k1=_maybe_masked, k2=_maybe_masked, k3=_maybe_masked,
+       e1=_quad, e2=_quad, e3=_quad)
+@settings(max_examples=25, deadline=None)
+def test_softmax_pair_neg_inf_edges_stay_finite(k1, k2, k3, e1, e2, e3):
+    """Fully-masked blocks enter the fold as (NEG_INF, bk) elements; any
+    mix of masked/live operands must combine NaN-free and associatively
+    — this is what the kernels' finite NEG_INF (vs a true -inf) buys."""
+    m = assoc.SOFTMAX_PAIR
+
+    def elem(kind, vals):
+        mm, ss = _element_for("softmax_pair", vals)
+        if kind == "masked":
+            mm = jnp.float32(assoc.NEG_INF)
+        return (mm, ss)
+
+    a, b, c = elem(k1, e1), elem(k2, e2), elem(k3, e3)
+    left = m.combine(m.combine(a, b), c)
+    right = m.combine(a, m.combine(b, c))
+    for leaf in (*left, *right):
+        assert not bool(jnp.isnan(leaf)), (k1, k2, k3)
+    _tclose(left, right, tol=1e-2)
+
+
+def test_neg_inf_finite_sentinel_vs_true_inf():
+    """Why NEG_INF is finite: a true -inf max-carry NaNs the rescale
+    (``-inf - -inf``); the -1e30 sentinel keeps exp(0)=1 arithmetic."""
+    m = assoc.SOFTMAX_PAIR
+    masked = (jnp.float32(assoc.NEG_INF), jnp.float32(4.0))
+    out = m.combine(masked, masked)
+    assert not any(bool(jnp.isnan(leaf)) for leaf in out)
+    np.testing.assert_allclose(float(out[1]), 8.0)  # exp(0) = 1 arithmetic
+    inf_masked = (jnp.float32(-jnp.inf), jnp.float32(4.0))
+    out_inf = m.combine(inf_masked, inf_masked)
+    assert bool(jnp.isnan(out_inf[1]))  # the failure the sentinel avoids
+
+
+# ---------------------------------------------------------------------------
+# kernel-side carried payload: the (m, l, acc) triple of the flash spec
+# ---------------------------------------------------------------------------
+
+
+def _payload_elem(vals, masked=False):
+    x, y, z, w = (jnp.float32(v) for v in vals)
+    mm = jnp.float32(assoc.NEG_INF) if masked else x
+    ll = jnp.abs(y) + jnp.float32(0.125)
+    acc = jnp.stack([z, w])
+    return (mm[None], ll[None], acc)
+
+
+@given(k1=_maybe_masked, k2=_maybe_masked, k3=_maybe_masked,
+       e1=_quad, e2=_quad, e3=_quad)
+@settings(max_examples=25, deadline=None)
+def test_softmax_payload_triple_associativity(k1, k2, k3, e1, e2, e3):
+    """The kernel spec's combine carries the weighted-value accumulator
+    alongside the (m, l) pair; the lifted triple must stay associative
+    (including NEG_INF masked operands) or the split-KV decoupled fold
+    would diverge from the carry chain."""
+    spec = assoc.softmax_pair_kernel_spec(scale=1.0)
+    a = _payload_elem(e1, k1 == "masked")
+    b = _payload_elem(e2, k2 == "masked")
+    c = _payload_elem(e3, k3 == "masked")
+    left = spec.combine(spec.combine(a, b), c)
+    right = spec.combine(a, spec.combine(b, c))
+    for leaf in (*left, *right):
+        assert not bool(jnp.any(jnp.isnan(leaf)))
+    _tclose(left, right, tol=1e-2)
+
+
+@given(e=_quad)
+@settings(max_examples=15, deadline=None)
+def test_softmax_payload_identity_fills(e):
+    """The spec's fills (NEG_INF, 0, 0) are a two-sided identity — the
+    fold seeds and the chunk chain rely on it."""
+    spec = assoc.softmax_pair_kernel_spec(scale=1.0)
+    a = _payload_elem(e)
+    ident = tuple(jnp.full_like(leaf, f)
+                  for leaf, f in zip(a, spec.fills))
+    _tclose(spec.combine(ident, a), a)
+    _tclose(spec.combine(a, ident), a)

@@ -147,13 +147,46 @@ def test_fused_falls_back_to_decoupled():
 # ---------------------------------------------------------------------------
 
 
-def test_registry_covers_four_families():
+def test_registry_covers_five_families():
     assert set(scan_engine.monoids.REGISTRY) == {
-        "sum", "segmented_sum", "affine", "mask"}
+        "sum", "segmented_sum", "affine", "mask", "softmax_pair"}
     for name, factory in scan_engine.monoids.REGISTRY.items():
         spec = factory()
         assert isinstance(spec, assoc.KernelSpec)
         assert len(spec.fills) == spec.n_leaves
+
+
+def test_totals_chain_bitwise_across_schedules():
+    """``scan(..., return_totals=True)`` returns the RUNNING chunk-totals
+    chain (combined through chunk j): identical bits under all three
+    schedules, last column == the row reduction — what ``mask_compact``
+    uses for O(B·chunks) survivor counts (ROADMAP follow-up)."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(-9, 9, (3, 2048)), jnp.int32)
+    lay = scan_engine.Rows(3, 2048, 1, 256)
+    chains = []
+    for s in SCHEDULES:
+        (out,), (tot,) = scan_engine.scan(
+            (x,), monoids.SUM, lay, schedule=s, interpret=True,
+            return_totals=True)
+        assert tot.shape == (3, 8)
+        np.testing.assert_array_equal(
+            np.asarray(tot[:, -1]), np.asarray(x).sum(-1))
+        chains.append((out, tot))
+    assert _all_bit_identical(chains)
+
+
+def test_mask_compact_counts_from_totals_chain():
+    """Counts derived from the totals chain == a full jnp reduction,
+    for every schedule, ragged lengths and float masks included."""
+    rng = np.random.default_rng(10)
+    for shape in ((2, 517), (4, 4096), (1, 128)):
+        m = jnp.asarray(rng.random(shape) < 0.3, jnp.float32)
+        for s in SCHEDULES:
+            _, counts = kc_ops.mask_compact(m, interpret=True, schedule=s,
+                                            block_n=256)
+            np.testing.assert_array_equal(
+                np.asarray(counts), (np.asarray(m) != 0).sum(-1))
 
 
 def test_library_monoids_carry_kernel_specs():

@@ -151,3 +151,107 @@ def test_encdec_serve_path():
     logits2, cache = step(params, toks[:, :1], cache,
                           jnp.asarray(6, jnp.int32), memory)
     assert bool(jnp.isfinite(logits2).all())
+
+
+# ---------------------------------------------------------------------------
+# engine-backed flash prefill through serve/steps.py (schedule="auto")
+# ---------------------------------------------------------------------------
+
+
+def test_flash_prefill_matches_default_padded_cache(small_model):
+    """Prefill through ``serve/steps.py`` with attention routed onto the
+    engine-backed flash fold (schedule="auto") must score like the
+    default path — including the padded-KV-cache case (cache of
+    ``max_len`` slots much longer than the live prefix)."""
+    from repro.serve.steps import make_prefill_fn
+    cfg, params = small_model
+    prompt = jnp.asarray([[5, 9, 2, 7, 1, 3]], jnp.int32)  # S=6 << 32
+    lg_ref, cache_ref = make_prefill_fn(cfg, max_len=32)(params, prompt)
+    lg_fl, cache_fl = make_prefill_fn(
+        cfg, max_len=32, attn_impl="flash", attn_schedule="auto")(
+        params, prompt)
+    np.testing.assert_allclose(np.asarray(lg_fl), np.asarray(lg_ref),
+                               rtol=2e-4, atol=2e-4)
+    for a, b in zip(jax.tree.leaves(cache_fl), jax.tree.leaves(cache_ref)):
+        assert a.shape == b.shape  # same padded-cache geometry
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("schedule", ["auto", "carry", "decoupled"])
+def test_flash_prefill_vs_decode_score_parity(small_model, schedule):
+    """Prefill-then-decode must score the continuation exactly like a
+    one-token-longer flash prefill: the engine-backed prefill cache and
+    the dense decode path agree on every schedule route."""
+    from repro.models import lm
+    from repro.serve.steps import make_prefill_fn
+    cfg, params = small_model
+    toks = jnp.asarray([[5, 9, 2, 7, 1, 3, 8]], jnp.int32)
+    # scores from a full flash prefill of all 7 tokens
+    lg_full, _ = make_prefill_fn(
+        cfg, max_len=32, attn_impl="flash", attn_schedule=schedule)(
+        params, toks)
+    # scores from flash prefill of 6 + dense decode of token 7
+    _, cache = make_prefill_fn(
+        cfg, max_len=32, attn_impl="flash", attn_schedule=schedule)(
+        params, toks[:, :-1])
+    lg_dec, _ = lm.decode_step(params, toks[:, -1:], cache,
+                               jnp.asarray(6, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(lg_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_engine_flash_route_greedy_parity(small_model):
+    """End to end: an Engine configured to prefill on the flash fold
+    generates the same greedy tokens as the default engine."""
+    cfg, params = small_model
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    outs = []
+    for kw in ({}, {"attn_impl": "flash", "attn_schedule": "auto"}):
+        eng = Engine(params, cfg, EngineConfig(
+            max_slots=1, max_len=32, max_new_tokens=5, temperature=0.0,
+            eos_id=-1, **kw))
+        eng.submit(Request(rid=0, prompt=prompt))
+        outs.append(eng.run_to_completion()[0].output)
+    assert outs[0] == outs[1]
+
+
+def test_long_kv_serve_class_lands_on_split_kv():
+    """The 32k/500k-context serve class — decode/scoring rows against a
+    long padded cache — must resolve schedule="auto" to the split-KV
+    decoupled fold, while saturated training prefill keeps carry."""
+    from repro.kernels.flash_attention import resolved_attention_schedule
+    # B=1 decode, 32 q-heads, 32k cache -> decoupled
+    assert resolved_attention_schedule((1, 32, 1, 128), 1 << 15) \
+        == "decoupled"
+    # 500k-context scoring step
+    assert resolved_attention_schedule((1, 8, 1, 128), 500_000) \
+        == "decoupled"
+    # training prefill: 8 x 32 heads x many q blocks -> carry
+    assert resolved_attention_schedule((8, 32, 8192, 128), 8192) == "carry"
+
+
+def test_flash_route_keeps_cached_keys_mid_stream(small_model):
+    """The padded-cache flash prefill route is guarded by a runtime
+    ``cache_len == 0`` cond: a multi-token continuation against a warm
+    cache (cache_len > 0) must keep the dense path's cached keys, not
+    silently restart attention at position 0."""
+    from repro.models import lm
+    cfg, params = small_model
+    toks = jnp.asarray([[5, 9, 2, 7, 1, 3, 8, 4]], jnp.int32)
+    # warm the cache with the first 5 tokens (default path)
+    _, _, cache = lm.forward(
+        params, toks[:, :5], cfg, cache=lm.init_cache(cfg, 1, 32),
+        cache_len=jnp.zeros((), jnp.int32))
+    # continue with a 3-token chunk: flash-routed forward must equal the
+    # dense-routed forward (the cond falls back because cache_len != 0)
+    outs = {}
+    for impl in (None, "flash"):
+        h, _, _ = lm.forward(
+            params, toks[:, 5:], cfg, cache=jax.tree.map(lambda x: x, cache),
+            cache_len=jnp.asarray(5, jnp.int32), attn_impl=impl)
+        outs[impl] = h
+    np.testing.assert_allclose(np.asarray(outs["flash"]),
+                               np.asarray(outs[None]),
+                               rtol=1e-5, atol=1e-5)

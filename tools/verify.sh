@@ -79,6 +79,36 @@ for name, fn in cells.items():
     print(f"  {name}: carry == decoupled == fused (bitwise)")
 EOF
 
+echo "== flash-attention smoke: engine fold schedules vs dense oracle =="
+python - <<'EOF'
+import numpy as np
+import jax.numpy as jnp
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+
+rng = np.random.default_rng(1)
+B, Hkv, g, T, D = 1, 2, 2, 256, 32
+q = jnp.asarray(rng.standard_normal((B, Hkv * g, T, D)), jnp.float32)
+k = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+v = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+ref = fa_ref.mha_ref(
+    q.reshape(B * Hkv * g, T, D), k.reshape(B * Hkv, T, D),
+    v.reshape(B * Hkv, T, D), group=g, scale=D ** -0.5,
+).reshape(q.shape)
+for s in ("carry", "decoupled"):
+    got = fa_ops.flash_attention(q, k, v, scale=D ** -0.5, schedule=s,
+                                 interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref)))
+    assert err < 2e-3, f"flash {s}: {err} off the dense oracle"
+    print(f"  softmax_pair/{s}: max|err| vs dense = {err:.2e}")
+EOF
+
+# The full benchmark dry-run below also runs the attention suite via
+# run.py; this standalone call additionally exercises fig_attention's
+# own CLI entry point (__main__ + --dry-run flag parsing).
+echo "== attention benchmark dry-run smoke =="
+python -m benchmarks.fig_attention --dry-run
+
 echo "== benchmark dry-run smoke =="
 python -m benchmarks.run --dry-run
 
