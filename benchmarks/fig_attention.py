@@ -31,7 +31,6 @@ SCHEDULES = ("carry", "decoupled")
 
 
 def _cases(smoke: bool):
-    rng = np.random.default_rng(0)
     if smoke:
         B, Hkv, g, T, D = 1, 2, 2, 256, 32
     else:
@@ -50,7 +49,6 @@ def _cases(smoke: bool):
         ("softcap", dict(causal=True, softcap=30.0)),
         ("full", dict(causal=False)),
     ]
-    del rng
     return [(name, qkv(i), dict(kw, scale=D ** -0.5))
             for i, (name, kw) in enumerate(grid)]
 
@@ -83,9 +81,55 @@ def run(smoke: bool = False) -> Table:
     return t
 
 
+def run_bwd(smoke: bool = False) -> Table:
+    """Backward sweep: jax.grad through the engine flash (custom_vjp →
+    stats forward + dq/dkv folds) vs autodiff of the jnp blockwise
+    reference, per schedule and per causal-bound setting — so the
+    bound's compute saving and the engine-vs-autodiff gap can both be
+    eyeballed on hardware."""
+    import jax
+
+    t = Table("Flash attention backward: engine folds vs autodiff "
+              "blockwise (kernel interpret mode)",
+              ["config", "schedule", "kv bounds", "max|dgrad| vs autodiff",
+               "Gdot/s", "ms"])
+    for name, (q, k, v), kw in _cases(smoke):
+        B, Hq, T, D = q.shape
+        Hkv = k.shape[1]
+
+        def ref_loss(q, k, v, kw=kw):
+            o = fa_ref.blockwise_ref(
+                q.reshape(B * Hq, T, D), k.reshape(B * Hkv, T, D),
+                v.reshape(B * Hkv, T, D), group=Hq // Hkv,
+                block_k=min(512, T), **kw)
+            return jnp.sum(o ** 2)
+
+        want = jax.grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+        for schedule in SCHEDULES:
+            for bounds in (True, False):
+                def loss(q, k, v, schedule=schedule, bounds=bounds, kw=kw):
+                    return jnp.sum(fa_ops.flash_attention(
+                        q, k, v, schedule=schedule, use_kv_bounds=bounds,
+                        interpret=True, **kw) ** 2)
+
+                grad_fn = jax.grad(loss, argnums=(0, 1, 2))
+                got = grad_fn(q, k, v)
+                err = max(float(jnp.max(jnp.abs(a - b)))
+                          for a, b in zip(got, want))
+                sec = time_fn(lambda: grad_fn(q, k, v)[0],
+                              iters=3, warmup=1)
+                # fwd-with-stats + dq + dkv: ~3.5x the forward dots
+                elems = 7 * B * Hq * T * T * D
+                t.add(name, schedule, "on" if bounds else "off", err,
+                      throughput(elems, sec), sec * 1e3)
+    return t
+
+
 def main(argv=None):
     names = list(argv if argv is not None else sys.argv[1:])
-    run(smoke="--dry-run" in names).show()
+    smoke = "--dry-run" in names
+    run(smoke).show()
+    run_bwd(smoke).show()
     return 0
 
 

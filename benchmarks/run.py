@@ -28,7 +28,7 @@ SUITES = {
               fig10_partition_size.run_kernel_vmem],
     "fig11": [fig11_dilation.run],
     "fig13": [fig13_policy.run, fig13_policy.run_traffic_model],
-    "attention": [fig_attention.run],
+    "attention": [fig_attention.run, fig_attention.run_bwd],
     "decoupled": [fig_decoupled.run, fig_decoupled.run_traffic],
     "engine": [fig_engine.run],
     "moe": [moe_dispatch.run],

@@ -22,7 +22,10 @@ emitters) — the interface the monoid-generic scan engine
 Registered here: sum, segmented sum, affine, the compact-mask spec, and
 the flash-attention softmax-pair spec (a *carried payload* monoid: its
 elements are built per block by an input TRANSFORM from raw operand
-tiles rather than read from pre-materialized element arrays).
+tiles rather than read from pre-materialized element arrays) plus its
+two BACKWARD specs — dq as a sum fold over KV blocks, dk/dv as a sum
+fold over a transposed q-major layout — which recompute the logits
+per tile instead of materializing the attention matrix.
 """
 
 from __future__ import annotations
@@ -266,9 +269,13 @@ def mask_kernel_spec(sentinel: int) -> KernelSpec:
 
 
 # Finite stand-in for -inf in masked logits: keeps the softmax-pair
-# max-carry NaN-free (``-inf - -inf`` is NaN; ``NEG_INF - NEG_INF`` is 0,
-# so a fully-masked block degrades to the uniform softmax exactly like
-# the dense reference).
+# max-carry NaN-free (``-inf - -inf`` is NaN; ``NEG_INF - NEG_INF`` is 0).
+# Masked probabilities are additionally zeroed (``p = where(mask, ·, 0)``)
+# so a fully-masked row yields l == 0 and finalizes to EXACTLY 0 — not
+# the visited-column-count-dependent uniform softmax. That invariance is
+# what makes the causal-aware KV bound bitwise-free: a skipped
+# fully-masked block's element is the monoid identity ``(NEG_INF, 0, 0)``,
+# and combining the identity in is bitwise a no-op.
 NEG_INF = -1e30
 
 
@@ -289,6 +296,37 @@ def _softmax_acc_kcombine(left, right):
     return (m, l1 * alpha1 + l2 * alpha2, a1 * alpha1 + a2 * alpha2)
 
 
+def _attn_block_logits(q, k, block_ids, *, scale, causal, window, softcap,
+                       kv_len, block_q, block_k):
+    """Shared q·kᵀ logits tile for the attention forward AND backward
+    transforms: ``(s, mask)`` where ``s`` is the scaled (and softcapped)
+    logits block BEFORE masking and ``mask`` the combined
+    causal/window/length liveness — stated once so the backward's
+    recomputed logits are bit-identical to the forward's.
+
+    ``block_ids`` convention (``KVBlocks``/``QBlocks`` layouts):
+    ``(head, q_block, kv_block)`` — absolute row/col positions derive
+    from the last two. ``kv_len`` masks padded KV tails (``None``: no
+    length mask beyond the geometry).
+    """
+    _, qi, kj = block_ids[0], block_ids[-2], block_ids[-1]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale       # (bq, bk)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if kv_len is not None:
+        mask &= cols < kv_len
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    return s, mask
+
+
 def softmax_pair_kernel_spec(
     *,
     scale: float,
@@ -298,6 +336,7 @@ def softmax_pair_kernel_spec(
     kv_len: "int | None" = None,
     block_q: int = 128,
     block_k: int = 128,
+    with_stats: bool = False,
 ) -> KernelSpec:
     """Flash-attention monoid: online softmax with the value payload.
 
@@ -309,32 +348,29 @@ def softmax_pair_kernel_spec(
     the engine's schedules never see an element array, only operands
     ``(q, k, v)`` tiles of shapes ``(bq, d)/(bk, d)/(bk, d)``.
 
-    ``block_ids`` convention (``KVBlocks`` layout): ``(head, q_block,
-    kv_block)`` — the transform derives absolute row/col positions from
-    the last two. ``kv_len`` masks padded KV tails (``None``: no length
-    mask beyond the geometry).
+    ``with_stats=True`` additionally emits the folded ``(m, l)`` row
+    statistics (f32, trailing dim 1) after the normalized output — the
+    residuals the backward folds need to reconstruct the softmax without
+    materializing the attention matrix.
+
+    Masked probabilities are zeroed, so a fully-masked row emits exactly
+    0 (and zero gradients) rather than a uniform average over however
+    many masked columns the grid happened to visit — the invariance that
+    lets the causal-aware KV bound skip fully-masked blocks bitwise-free.
     """
 
     def transform(ops, block_ids):
         q, k, v = (o.astype(jnp.float32) for o in ops)
-        _, qi, kj = block_ids[0], block_ids[-2], block_ids[-1]
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (bq, bk)
-        if softcap is not None:
-            s = softcap * jnp.tanh(s / softcap)
-        rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        cols = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = jnp.ones(s.shape, jnp.bool_)
-        if kv_len is not None:
-            mask &= cols < kv_len
-        if causal:
-            mask &= cols <= rows
-        if window is not None:
-            mask &= cols > rows - window
+        s, mask = _attn_block_logits(
+            q, k, block_ids, scale=scale, causal=causal, window=window,
+            softcap=softcap, kv_len=kv_len, block_q=block_q,
+            block_k=block_k)
         s = jnp.where(mask, s, NEG_INF)
         m = jnp.max(s, axis=1, keepdims=True)             # (bq, 1)
-        p = jnp.exp(s - m)                                # (bq, bk)
+        # exp underflows to exactly 0 at masked columns of LIVE rows, so
+        # the where only changes fully-masked rows (m == NEG_INF there,
+        # where exp(s - m) would be exp(0) = 1): they get l == 0.
+        p = jnp.where(mask, jnp.exp(s - m), 0.0)          # (bq, bk)
         l = jnp.sum(p, axis=1, keepdims=True)             # (bq, 1)
         acc = jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
@@ -343,21 +379,153 @@ def softmax_pair_kernel_spec(
 
     def finalize(combined):
         m, l, acc = combined
-        # Fully-masked rows keep l > 0 through the NEG_INF arithmetic
-        # (uniform softmax, like the dense reference); l == 0 can only
-        # arise from an empty fold and must not divide.
+        # l == 0 marks a fully-masked row (or an empty fold): acc is 0
+        # there, and the guarded divide makes the output exactly 0.
         safe = jnp.where(l == 0.0, 1.0, l)
+        if with_stats:
+            return (acc / safe, m, l)
         return (acc / safe,)
+
+    def out_dtypes(dts):
+        if with_stats:
+            return (jnp.dtype(dts[0]), jnp.dtype(jnp.float32),
+                    jnp.dtype(jnp.float32))
+        return (jnp.dtype(dts[0]),)
 
     return KernelSpec(
         name="softmax_pair",
         fills=(NEG_INF, 0, 0),
         combine=_softmax_acc_kcombine,
         elem_dtypes=lambda dts: (jnp.dtype(jnp.float32),) * 3,
-        out_dtypes=lambda dts: (jnp.dtype(dts[0]),),
+        out_dtypes=out_dtypes,
         supports_exclusive=False,
         transform=transform,
         finalize=finalize,
+    )
+
+
+def _identity_finalize(combined):
+    return tuple(combined)
+
+
+def _attn_bwd_ds(ops, block_ids, *, scale, causal, window, softcap, kv_len,
+                 block_q, block_k):
+    """Shared backward tile: recomputed probabilities ``p`` and masked
+    logit gradients ``ds`` for one (q-block, kv-block) cell.
+
+    ``ops`` are f32 tiles ``(q, k, v, do, m, l, delta)`` where ``m``/``l``
+    are the forward's saved row statistics and ``delta = rowsum(dO ⊙ O)``
+    — the standard flash backward: ``p = exp(s - m)/l`` (no materialized
+    attention matrix outside this tile), ``dp = dO·Vᵀ``,
+    ``ds = p ⊙ (dp - delta)``, with the softcap chain rule
+    ``tanh' = 1 - (s/cap)²`` applied on the recomputed capped logits.
+    """
+    q, k, v, do, m, l, delta = ops
+    s, mask = _attn_block_logits(
+        q, k, block_ids, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_len=kv_len, block_q=block_q, block_k=block_k)
+    sm = jnp.where(mask, s, NEG_INF)
+    safe_l = jnp.where(l == 0.0, 1.0, l)
+    p = jnp.where(mask, jnp.exp(sm - m), 0.0) / safe_l    # (bq, bk)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bq, bk)
+    ds = p * (dp - delta)
+    if softcap is not None:
+        ds = ds * (1.0 - (s / softcap) ** 2)              # tanh'
+    return p, ds
+
+
+def _dsum_kcombine(left, right):
+    return tuple(a + b for a, b in zip(left, right))
+
+
+def softmax_pair_bwd_dq_kernel_spec(
+    *,
+    scale: float,
+    causal: bool = True,
+    window: "int | None" = None,
+    softcap: "float | None" = None,
+    kv_len: "int | None" = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> KernelSpec:
+    """Flash-backward dq: a SUM fold over KV blocks (``KVBlocks``).
+
+    Operands ``(q, k, v, do, m, l, delta)``; each block contributes
+    ``scale · ds @ K`` to the carried (bq, d) dq accumulator. Plain sum
+    monoid — all the attention structure lives in the transform, so the
+    engine's fold schedules (carry accumulate / split-KV decoupled) run
+    it unchanged.
+    """
+
+    def transform(ops, block_ids):
+        ops = tuple(o.astype(jnp.float32) for o in ops)
+        _, ds = _attn_bwd_ds(
+            ops, block_ids, scale=scale, causal=causal, window=window,
+            softcap=softcap, kv_len=kv_len, block_q=block_q,
+            block_k=block_k)
+        k = ops[1]
+        dq = jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, d)
+        return (dq,)
+
+    return KernelSpec(
+        name="softmax_bwd_dq",
+        fills=(0,),
+        combine=_dsum_kcombine,
+        elem_dtypes=lambda dts: (jnp.dtype(jnp.float32),),
+        out_dtypes=lambda dts: (jnp.dtype(dts[0]),),
+        supports_exclusive=False,
+        transform=transform,
+        finalize=_identity_finalize,
+    )
+
+
+def softmax_pair_bwd_dkv_kernel_spec(
+    *,
+    scale: float,
+    causal: bool = True,
+    window: "int | None" = None,
+    softcap: "float | None" = None,
+    kv_len: "int | None" = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> KernelSpec:
+    """Flash-backward dk/dv: a SUM fold over q blocks (``QBlocks``).
+
+    The transposed organization: for each KV block the fold walks the
+    (group × q-block) axis — GQA head summation included, since every q
+    head mapping to this KV head is part of the fold — accumulating
+    ``dk += scale · dsᵀ @ Q`` and ``dv += pᵀ @ dO`` into the carried
+    (bk, d) pair.
+    """
+
+    def transform(ops, block_ids):
+        ops = tuple(o.astype(jnp.float32) for o in ops)
+        p, ds = _attn_bwd_ds(
+            ops, block_ids, scale=scale, causal=causal, window=window,
+            softcap=softcap, kv_len=kv_len, block_q=block_q,
+            block_k=block_k)
+        q, do = ops[0], ops[3]
+        dk = jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bk, d)
+        dv = jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bk, d)
+        return (dk, dv)
+
+    return KernelSpec(
+        name="softmax_bwd_dkv",
+        fills=(0, 0),
+        combine=_dsum_kcombine,
+        elem_dtypes=lambda dts: (jnp.dtype(jnp.float32),) * 2,
+        out_dtypes=lambda dts: (jnp.dtype(dts[1]), jnp.dtype(dts[2])),
+        supports_exclusive=False,
+        transform=transform,
+        finalize=_identity_finalize,
     )
 
 

@@ -22,8 +22,13 @@ masking for padded caches, and two grid schedules:
                             parallel, partial payloads combined by a
                             tiny jnp chain (long-KV decode/scoring).
 
-Forward only: training paths use the autodiff-able jnp blockwise
-reference (ref.py) under remat; this kernel serves inference.
+Forward and backward: the forward optionally emits the folded ``(m, l)``
+row statistics, and ``flash_attention_bwd_kernel`` runs the backward as
+two more engine folds over the same KV layout — dq over ``KVBlocks``,
+dk/dv over the transposed ``QBlocks`` — against the backward specs in
+``assoc`` (recomputed logits, no materialized attention matrix). Both
+directions honor the causal-aware KV extent (``use_kv_bounds``): grid
+cells that are provably fully masked are skipped, bitwise-free.
 """
 
 from __future__ import annotations
@@ -31,11 +36,13 @@ from __future__ import annotations
 import jax
 
 from repro.core.scan import policy
-from repro.core.scan.assoc import NEG_INF, softmax_pair_kernel_spec
+from repro.core.scan.assoc import (NEG_INF, softmax_pair_bwd_dkv_kernel_spec,
+                                   softmax_pair_bwd_dq_kernel_spec,
+                                   softmax_pair_kernel_spec)
 from repro.kernels import scan_engine
 
-__all__ = ["NEG_INF", "default_kv_split_target", "flash_attention_kernel",
-           "pick_kv_splits"]
+__all__ = ["NEG_INF", "default_kv_split_target", "flash_attention_bwd_kernel",
+           "flash_attention_kernel", "pick_kv_splits"]
 
 
 def default_kv_split_target() -> int:
@@ -80,8 +87,11 @@ def flash_attention_kernel(
     block_k: int = 128,
     schedule: str = "carry",
     kv_splits: "int | None" = None,
+    return_stats: bool = False,
+    use_kv_bounds: bool = True,
+    count_cells: bool = False,
     interpret: bool = False,
-) -> jax.Array:
+):
     """Attention over flattened (batch·heads) leading axes.
 
     ``q`` has BH = B·H_q rows; ``k``/``v`` have B·H_kv; ``group`` maps
@@ -90,6 +100,13 @@ def flash_attention_kernel(
     Obs. 5). ``schedule`` picks the fold organization; ``kv_splits``
     overrides the decoupled chunk count (default: policy-sized divisor
     of the KV block count).
+
+    ``return_stats=True`` returns ``(out, m, l)`` — the folded row max
+    and normalizer (each (BH, Tq, 1) f32), the backward's residuals.
+    ``use_kv_bounds`` gates the causal-aware KV extent (skip grid cells
+    that are provably fully masked — bitwise-identical output);
+    ``count_cells=True`` (carry schedule) additionally returns the
+    per-(head, q-block) executed-cell counts.
     """
     BH, Tq, d = q.shape
     BHkv, Tk, dk = k.shape
@@ -103,10 +120,87 @@ def flash_attention_kernel(
         splits = pick_kv_splits(Tk // block_k, kv_splits)
     layout = scan_engine.KVBlocks(
         bh=BH, bh_kv=BHkv, tq=Tq, tk=Tk, d=d, bq=block_q, bk=block_k,
-        group=group, splits=splits, leaf_dims=(1, 1, d))
+        group=group, splits=splits, leaf_dims=(1, 1, d),
+        out_dims=(d, 1, 1) if return_stats else (d,),
+        kv_bounds=(causal, window, kv_len) if use_kv_bounds else None)
     spec = softmax_pair_kernel_spec(
         scale=scale, causal=causal, window=window, softcap=softcap,
-        kv_len=kv_len, block_q=block_q, block_k=block_k)
-    out, = scan_engine.scan(
-        (q, k, v), spec, layout, schedule=schedule, interpret=interpret)
-    return out
+        kv_len=kv_len, block_q=block_q, block_k=block_k,
+        with_stats=return_stats)
+    res = scan_engine.scan(
+        (q, k, v), spec, layout, schedule=schedule, interpret=interpret,
+        count_cells=count_cells)
+    if count_cells:
+        res, counts = res
+        return (tuple(res) if return_stats else res[0]), counts
+    return tuple(res) if return_stats else res[0]
+
+
+def flash_attention_bwd_kernel(
+    q: jax.Array,      # (BH, Tq, d)
+    k: jax.Array,      # (BHkv, Tk, d)
+    v: jax.Array,      # (BHkv, Tk, d)
+    do: jax.Array,     # (BH, Tq, d) — output cotangent
+    m: jax.Array,      # (BH, Tq, 1) f32 — forward row max
+    l: jax.Array,      # (BH, Tq, 1) f32 — forward row normalizer
+    delta: jax.Array,  # (BH, Tq, 1) f32 — rowsum(dO ⊙ O) precompute
+    *,
+    group: int = 1,
+    scale: float,
+    causal: bool = True,
+    window: "int | None" = None,
+    softcap: "float | None" = None,
+    kv_len: "int | None" = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    schedule: str = "carry",
+    kv_splits: "int | None" = None,
+    use_kv_bounds: bool = True,
+    interpret: bool = False,
+):
+    """Flash backward as two engine folds: ``(dq, dk, dv)``.
+
+    dq folds over KV blocks in the forward's ``KVBlocks`` layout; dk/dv
+    fold over the transposed ``QBlocks`` (group × q-block) axis so the
+    GQA head summation is the fold itself. Both are plain SUM monoids
+    whose transforms recompute the logits tile — nothing T×T is ever
+    materialized. ``schedule="decoupled"`` runs each fold's axis in
+    parallel chunks stitched by the jnp chain (split-KV for dq, split-Q
+    for dk/dv).
+    """
+    BH, Tq, d = q.shape
+    BHkv, Tk, dk_ = k.shape
+    assert d == dk_ and v.shape == k.shape and BH == BHkv * group
+    assert do.shape == q.shape and m.shape == (BH, Tq, 1)
+    if Tq % block_q or Tk % block_k:
+        raise ValueError(f"({Tq},{Tk}) not divisible by ({block_q},{block_k})")
+    kv_len = Tk if kv_len is None else kv_len
+    bounds = (causal, window, kv_len) if use_kv_bounds else None
+    mask_cfg = dict(scale=scale, causal=causal, window=window,
+                    softcap=softcap, kv_len=kv_len, block_q=block_q,
+                    block_k=block_k)
+    ops = (q, k, v, do, m, l, delta)
+
+    dq_splits = 1
+    if schedule != "carry":
+        dq_splits = pick_kv_splits(Tk // block_k, kv_splits)
+    dq_layout = scan_engine.KVBlocks(
+        bh=BH, bh_kv=BHkv, tq=Tq, tk=Tk, d=d, bq=block_q, bk=block_k,
+        group=group, splits=dq_splits, leaf_dims=(d,), out_dims=(d,),
+        op_kinds=("q", "kv", "kv", "q", "qstat", "qstat", "qstat"),
+        kv_bounds=bounds)
+    dq, = scan_engine.scan(
+        ops, softmax_pair_bwd_dq_kernel_spec(**mask_cfg), dq_layout,
+        schedule=schedule, interpret=interpret)
+
+    dkv_splits = 1
+    if schedule != "carry":
+        dkv_splits = pick_kv_splits(group * (Tq // block_q), kv_splits)
+    dkv_layout = scan_engine.QBlocks(
+        bh=BH, bh_kv=BHkv, tq=Tq, tk=Tk, d=d, bq=block_q, bk=block_k,
+        group=group, splits=dkv_splits, leaf_dims=(d, d), out_dims=(d, d),
+        kv_bounds=bounds)
+    dk, dv = scan_engine.scan(
+        ops, softmax_pair_bwd_dkv_kernel_spec(**mask_cfg), dkv_layout,
+        schedule=schedule, interpret=interpret)
+    return dq, dk, dv

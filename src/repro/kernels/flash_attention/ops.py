@@ -5,18 +5,30 @@ sequence lengths to block multiples (mask-correct via ``kv_len``),
 resolves ``schedule="auto"`` through ``policy.choose_attention_schedule``
 (carry for row-saturated shapes, split-KV decoupled for long-KV
 decode/scoring), and interpret-mode fallback off-TPU.
+
+``flash_attention`` is differentiable via ``jax.custom_vjp``: the
+forward rule reruns the fold with ``return_stats=True`` to save the
+``(m, l)`` row statistics, the backward rule derives the
+``delta = rowsum(dO ⊙ O)`` precompute (one tiny row fold) and runs the
+two backward engine folds (dq over KV blocks, dk/dv over the transposed
+q-major layout) under the SAME resolved schedule and causal-aware KV
+bounds as the forward — so training through ``impl="flash"`` is a peer
+of the autodiff-able dense/blockwise references.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.scan import policy
+from repro.core.scan.assoc import NEG_INF
 from repro.kernels.flash_attention.flash_attention import (
-    default_kv_split_target, flash_attention_kernel)
+    default_kv_split_target, flash_attention_bwd_kernel,
+    flash_attention_kernel)
 
 SCHEDULES = ("carry", "decoupled")
 RESOLVABLE = SCHEDULES + ("auto",)
@@ -32,7 +44,7 @@ def _round_up(v: int, m: int) -> int:
 
 def _tiles(Tq: int, Tk: int, block_q: int, block_k: int):
     """The (bq, bk, nq) tiling the kernel will ACTUALLY use — the single
-    source of truth shared by ``_impl`` and the schedule resolver, so the
+    source of truth shared by the impl and the schedule resolver, so the
     policy's chunks-per-core test never drifts from the real grid."""
     bq = min(block_q, _round_up(Tq, 8))
     bk = min(block_k, _round_up(Tk, 128))
@@ -53,25 +65,36 @@ def _decoupled_padding(Tk: int, bk: int, kv_splits: "int | None"):
     return _round_up(nk, splits) * bk - Tk, splits
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "scale", "causal", "window", "softcap",
-        "block_q", "block_k", "schedule", "kv_splits", "interpret",
-    ),
-)
-def _impl(q, k, v, scale, causal, window, softcap, block_q, block_k,
-          schedule, kv_splits, interpret):
+class FlashConfig(NamedTuple):
+    """Hashable static configuration shared by the forward and backward
+    rules of the ``custom_vjp`` (``schedule`` arrives RESOLVED)."""
+
+    scale: float
+    causal: bool
+    window: Optional[int]
+    softcap: Optional[float]
+    block_q: int
+    block_k: int
+    schedule: str
+    kv_splits: Optional[int]
+    use_kv_bounds: bool
+    interpret: bool
+
+
+def _padding(Tq: int, Tk: int, cfg: FlashConfig):
+    """(bq, bk, pad_q, pad_k, kv_splits) for this shape and schedule."""
+    bq, bk, _ = _tiles(Tq, Tk, cfg.block_q, cfg.block_k)
+    pad_q = (-Tq) % bq
+    if cfg.schedule == "decoupled":
+        pad_k, kv_splits = _decoupled_padding(Tk, bk, cfg.kv_splits)
+    else:
+        pad_k, kv_splits = (-Tk) % bk, cfg.kv_splits
+    return bq, bk, pad_q, pad_k, kv_splits
+
+
+def _flatten_pad(q, k, v, pad_q, pad_k):
     B, Hq, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
-    group = Hq // Hkv
-    bq, bk, _ = _tiles(Tq, Tk, block_q, block_k)
-    pad_q = (-Tq) % bq
-    if schedule == "decoupled":
-        pad_k, kv_splits = _decoupled_padding(Tk, bk, kv_splits)
-    else:
-        pad_k = (-Tk) % bk
-
     qf = q.reshape(B * Hq, Tq, D)
     kf = k.reshape(B * Hkv, Tk, D)
     vf = v.reshape(B * Hkv, Tk, D)
@@ -80,14 +103,91 @@ def _impl(q, k, v, scale, causal, window, softcap, block_q, block_k,
     if pad_k:
         kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
         vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    return qf, kf, vf
 
+
+def _kernel_kwargs(cfg: FlashConfig, Tk, bq, bk, kv_splits, group):
+    return dict(group=group, scale=cfg.scale, causal=cfg.causal,
+                window=cfg.window, softcap=cfg.softcap, kv_len=Tk,
+                block_q=bq, block_k=bk, schedule=cfg.schedule,
+                kv_splits=kv_splits, use_kv_bounds=cfg.use_kv_bounds,
+                interpret=cfg.interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _impl(q, k, v, cfg: FlashConfig):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    bq, bk, pad_q, pad_k, kv_splits = _padding(Tq, Tk, cfg)
+    qf, kf, vf = _flatten_pad(q, k, v, pad_q, pad_k)
     out = flash_attention_kernel(
-        qf, kf, vf,
-        group=group, scale=scale, causal=causal, window=window,
-        softcap=softcap, kv_len=Tk, block_q=bq, block_k=bk,
-        schedule=schedule, kv_splits=kv_splits, interpret=interpret,
-    )
+        qf, kf, vf, **_kernel_kwargs(cfg, Tk, bq, bk, kv_splits, Hq // Hkv))
     return out[:, :Tq].reshape(B, Hq, Tq, D)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _impl_stats(q, k, v, cfg: FlashConfig):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    bq, bk, pad_q, pad_k, kv_splits = _padding(Tq, Tk, cfg)
+    qf, kf, vf = _flatten_pad(q, k, v, pad_q, pad_k)
+    out, m, l = flash_attention_kernel(
+        qf, kf, vf, return_stats=True,
+        **_kernel_kwargs(cfg, Tk, bq, bk, kv_splits, Hq // Hkv))
+    return (out[:, :Tq].reshape(B, Hq, Tq, D),
+            m[:, :Tq].reshape(B, Hq, Tq, 1),
+            l[:, :Tq].reshape(B, Hq, Tq, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _impl_bwd(q, k, v, out, m, l, g, cfg: FlashConfig):
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    bq, bk, pad_q, pad_k, kv_splits = _padding(Tq, Tk, cfg)
+    qf, kf, vf = _flatten_pad(q, k, v, pad_q, pad_k)
+    # The small precompute fold: delta = rowsum(dO ⊙ O), one f32 scalar
+    # per query row — the shared term of the softmax VJP.
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1, keepdims=True)
+
+    def qrow(x, fill):
+        x = x.reshape(B * Hq, Tq, x.shape[-1])
+        if pad_q:
+            x = jnp.pad(x, ((0, 0), (0, pad_q), (0, 0)),
+                        constant_values=fill)
+        return x
+
+    # Padded q rows carry dO = 0 and delta = 0, so every term they feed
+    # (dq, and their dk/dv contributions) vanishes — PROVIDED their
+    # recomputed p is finite: m pads to +1e30 (not the NEG_INF identity,
+    # under which exp(s - m) on the padded rows' causally-live columns
+    # would overflow to inf and poison the dk/dv sums with inf·0 NaNs),
+    # making p underflow to exactly 0 there.
+    dq, dk, dv = flash_attention_bwd_kernel(
+        qf, kf, vf, qrow(g, 0), qrow(m, -NEG_INF), qrow(l, 0),
+        qrow(delta, 0),
+        **_kernel_kwargs(cfg, Tk, bq, bk, kv_splits, Hq // Hkv))
+    return (dq[:, :Tq].reshape(B, Hq, Tq, D).astype(q.dtype),
+            dk[:, :Tk].reshape(B, Hkv, Tk, D).astype(k.dtype),
+            dv[:, :Tk].reshape(B, Hkv, Tk, D).astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, cfg: FlashConfig):
+    return _impl(q, k, v, cfg)
+
+
+def _flash_fwd_rule(q, k, v, cfg: FlashConfig):
+    out, m, l = _impl_stats(q, k, v, cfg)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd_rule(cfg: FlashConfig, res, g):
+    q, k, v, out, m, l = res
+    return _impl_bwd(q, k, v, out, m, l, g, cfg)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
 
 
 def resolved_attention_schedule(
@@ -100,7 +200,9 @@ def resolved_attention_schedule(
     (B·H, q-blocks) rows, so the policy's batch is the number of
     independent fold chains and its chunk length the real KV block.
     Exposed so consumers (serve tests, benchmarks) can assert the
-    long-KV decode/scoring class lands on the split-KV form.
+    long-KV decode/scoring class lands on the split-KV form. The
+    backward folds inherit the forward's resolution — one choice per
+    ``custom_vjp`` instance.
     """
     if schedule not in RESOLVABLE:
         raise ValueError(
@@ -126,13 +228,19 @@ def flash_attention(
     block_k: int = 128,
     schedule: str = "auto",
     kv_splits: "int | None" = None,
+    use_kv_bounds: bool = True,
     interpret: "bool | None" = None,
 ) -> jax.Array:
     """Flash attention over (B, H, T, D) tensors with GQA kv heads.
 
     ``schedule`` picks the fold organization (carry|decoupled|auto — see
     ``core/scan/policy.choose_attention_schedule``); ``interpret=None``
-    auto-selects compiled on TPU, interpret elsewhere.
+    auto-selects compiled on TPU, interpret elsewhere. Differentiable:
+    ``jax.grad`` runs the flash backward as engine folds (same schedule,
+    same KV bounds) instead of detouring through the jnp references.
+    ``use_kv_bounds=False`` disables the causal-aware cell skipping
+    (bitwise-identical results either way — the knob exists for the
+    parity tests and for hardware A/B measurement).
     """
     if scale is None:
         scale = q.shape[-1] ** -0.5
@@ -140,5 +248,9 @@ def flash_attention(
         interpret = not _on_tpu()
     schedule = resolved_attention_schedule(
         q.shape, k.shape[2], block_q, block_k, schedule)
-    return _impl(q, k, v, scale, causal, window, softcap,
-                 block_q, block_k, schedule, kv_splits, interpret)
+    cfg = FlashConfig(
+        scale=float(scale), causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, schedule=schedule,
+        kv_splits=kv_splits, use_kv_bounds=use_kv_bounds,
+        interpret=interpret)
+    return _flash(q, k, v, cfg)

@@ -5,6 +5,16 @@
                     monoid: autodiff-able, O(T·block) memory. Used by the
                     training path; also validates that the kernel's scan
                     structure matches a pure-jnp formulation.
+
+Fully-masked rows (q positions past ``kv_len + window``) emit EXACTLY 0
+with zero gradients: probabilities are zeroed at masked columns and the
+normalizer divide is guarded. The unguarded ``softmax(NEG_INF row)``
+form instead yields a uniform average over the masked columns — an
+output that depends on how many padded/masked columns the formulation
+happens to visit, and that under autodiff leaks a nonzero cotangent
+into ``v``. The guard keeps both references well-defined baselines for
+the kernel gradient-parity wall and is bitwise-free for live rows
+(``exp(NEG_INF - m)`` underflows to exactly 0 there).
 """
 
 from __future__ import annotations
@@ -14,7 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.core.scan.assoc import NEG_INF
 
 
 def _mask(rows, cols, kv_len, causal, window):
@@ -24,6 +34,24 @@ def _mask(rows, cols, kv_len, causal, window):
     if window is not None:
         m &= cols > rows - window
     return m
+
+
+def masked_softmax(s, mask):
+    """The repo-wide zeroed-probability softmax over the last axis.
+
+    Masked logits see ``NEG_INF`` for the row max, masked probabilities
+    are EXACTLY 0 (bitwise-neutral for live rows, where the exp already
+    underflows to 0), and the guarded divide sends fully-masked rows to
+    0 instead of a uniform average. Every attention implementation —
+    dense layer path, these oracles, the kernel transform — states its
+    softmax this way so the gradient-parity wall and the causal-aware
+    KV bound's bitwise identity share one convention.
+    """
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return p / jnp.where(l == 0.0, 1.0, l)
 
 
 def mha_ref(
@@ -42,8 +70,7 @@ def mha_ref(
         s = softcap * jnp.tanh(s / softcap)
     rows = jnp.arange(Tq)[:, None]
     cols = jnp.arange(Tk)[None, :]
-    s = jnp.where(_mask(rows, cols, kv_len, causal, window)[None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = masked_softmax(s, _mask(rows, cols, kv_len, causal, window)[None])
     return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
@@ -75,11 +102,12 @@ def blockwise_ref(
         if softcap is not None:
             s = softcap * jnp.tanh(s / softcap)
         cols = kj * block_k + jnp.arange(block_k)[None, :]
-        s = jnp.where(_mask(rows, cols, kv_len, causal, window)[None], s, NEG_INF)
+        mask = _mask(rows, cols, kv_len, causal, window)[None]
+        s = jnp.where(mask, s, NEG_INF)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         alpha = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
         l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc = acc * alpha + jnp.einsum("hqk,hkd->hqd", p, vr)
         return (m_new, l_new, acc), None
@@ -154,9 +182,8 @@ def banded_ref(
         rows = qs + jnp.arange(bq)[:, None]
         cols = qs + bq - L + jnp.arange(L)[None, :]
         m = ((cols >= 0) & (cols < kv_len) & (cols <= rows)
-             & (cols > rows - window))
-        s = jnp.where(m[None, None, None], s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
+             & (cols > rows - window))[None, None, None]
+        p = masked_softmax(s, m)
         out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32))
         return None, out.astype(q.dtype)
 

@@ -43,7 +43,8 @@ are thin back-compat wrappers over this engine — adding a new schedule
 """
 
 from repro.kernels.scan_engine import monoids
-from repro.kernels.scan_engine.layouts import Channels, KVBlocks, Rows
+from repro.kernels.scan_engine.layouts import (Channels, KVBlocks, QBlocks,
+                                               Rows, block_live)
 from repro.kernels.scan_engine.schedules import (RESOLVABLE, SCHEDULES,
                                                  exclusive_chain, fold_carry,
                                                  fold_chain, fold_decoupled,
@@ -53,8 +54,9 @@ from repro.kernels.scan_engine.schedules import (RESOLVABLE, SCHEDULES,
                                                  scan_fused, tile_scan)
 
 __all__ = [
-    "Channels", "KVBlocks", "RESOLVABLE", "Rows", "SCHEDULES",
-    "exclusive_chain", "fold_carry", "fold_chain", "fold_decoupled",
-    "fused_native_available", "monoids", "resolve_schedule", "scan",
-    "scan_carry", "scan_decoupled", "scan_fused", "tile_scan",
+    "Channels", "KVBlocks", "QBlocks", "RESOLVABLE", "Rows", "SCHEDULES",
+    "block_live", "exclusive_chain", "fold_carry", "fold_chain",
+    "fold_decoupled", "fused_native_available", "monoids",
+    "resolve_schedule", "scan", "scan_carry", "scan_decoupled",
+    "scan_fused", "tile_scan",
 ]

@@ -18,7 +18,20 @@ geometry. Three layouts cover the five kernel families:
             ``h`` to kv head ``h // group`` — free addressing, paper
             Obs. 5), monoid leaves are per-q-block payload carries with
             per-leaf trailing dims (``leaf_dims``), and outputs are the
-            fold. Used by the flash-attention registration.
+            fold. Used by the flash-attention registration (forward and
+            the backward dq fold).
+  QBlocks   the TRANSPOSED attention fold for the backward dk/dv: one
+            grid row per (kv head, KV block), folded along the
+            (group × q-block) axis — every q head addressing this KV
+            head is part of the fold, so GQA head summation is the fold
+            itself.
+
+Attention layouts optionally carry ``kv_bounds`` — the per-q-block KV
+extent (causal, window, kv_len): fold schedules skip grid cells whose
+mask is provably all-dead. With the zeroed-probability convention
+(``assoc.softmax_pair_kernel_spec``) a skipped cell's element is the
+monoid identity, so the bound is bitwise-invisible while causal prefill
+runs ~half the cells.
 
 All layouts put the scanned axis LAST in the grid, expose ``chunk``
 axis 1 in their chunk-total arrays, and keep the scan axis at size 1 in
@@ -51,6 +64,12 @@ class _UniformLeaves:
 
     def out_spec(self):
         return self.data_spec()
+
+    def out_spec_for(self, i):
+        return self.out_spec()
+
+    def out_shape_for(self, i):
+        return self.shape
 
     def chain_spec_for(self, leaf):
         return self.chain_spec()
@@ -229,8 +248,164 @@ class Channels(_UniformLeaves):
         return sem.at[pl.program_id(0), pl.program_id(1), seq_index]
 
 
+def block_live(qi, kj, *, bq, bk, causal, window, kv_len):
+    """Whether the (q-block ``qi``, kv-block ``kj``) mask has ANY live
+    entry — the per-q-block KV extent in predicate form.
+
+    Conservative in the safe direction: a False is a proof that every
+    (row, col) pair in the cell is masked (each conjunct is a necessary
+    condition for liveness over the block's row/col ranges), so skipping
+    the cell is exact; a rare True on a fully-masked cell merely folds
+    in the monoid identity. Works on python ints (analytic cell counts)
+    and traced program ids (in-kernel skip) alike.
+    """
+    live = True
+    if kv_len is not None:
+        live = kj * bk < kv_len
+    if causal:
+        live = live & (kj * bk <= (qi + 1) * bq - 1)
+    if window is not None:
+        live = live & ((kj + 1) * bk - 1 > qi * bq - window)
+    return live
+
+
+def _active_cell_count(nq, nk, *, bq, bk, bounds):
+    causal, window, kv_len = bounds
+    return sum(
+        bool(block_live(qi, kj, bq=bq, bk=bk, causal=causal,
+                        window=window, kv_len=kv_len))
+        for qi in range(nq) for kj in range(nk))
+
+
 @dataclasses.dataclass(frozen=True)
-class KVBlocks:
+class _AttnFold:
+    """Shared plumbing for the attention fold layouts (KVBlocks/QBlocks).
+
+    Both transposes share the field set, operand addressing kinds,
+    split-grid derivation, and the KV-extent liveness wiring; concrete
+    classes supply only the grid orientation — which axis is the fold,
+    the per-operand/output index maps, and the chain/carry geometry.
+
+    ``op_kinds`` names each operand's addressing — ``"q"`` (q-major
+    (bh, tq, d) tiles), ``"kv"`` (kv-major (bh_kv, tk, d) tiles with the
+    GQA ``h // group`` association), ``"qstat"`` (q-major per-row
+    statistics, trailing dim 1) — so the backward folds can feed
+    ``(q, k, v, do, m, l, delta)`` through the same layouts.
+    ``out_dims`` gives per-output trailing dims (stats outputs are
+    dim-1); ``kv_bounds = (causal, window, kv_len)`` enables the
+    per-q-block KV extent (``fold_active``).
+    """
+
+    bh: int              # flattened B·H_q query rows
+    bh_kv: int           # flattened B·H_kv rows; bh == bh_kv * group
+    tq: int
+    tk: int
+    d: int
+    bq: int
+    bk: int
+    group: int = 1
+    splits: int = 1      # fold-axis chunks for the decoupled schedule
+    leaf_dims: "tuple | None" = None   # per-leaf trailing dims
+    op_kinds: tuple = ("q", "kv", "kv")
+    out_dims: "tuple | None" = None    # per-output trailing dims; all d
+    kv_bounds: "tuple | None" = None   # (causal, window, kv_len) extent
+
+    def __post_init__(self):
+        name = type(self).__name__
+        _check_divisible((self.tq, self.tk), (self.bq, self.bk), name)
+        if self.bh != self.bh_kv * self.group:
+            raise ValueError(
+                f"bh={self.bh} != bh_kv={self.bh_kv} * group={self.group}")
+        if self.num_seq_blocks % self.splits:
+            raise ValueError(
+                f"splits={self.splits} must divide {self.num_seq_blocks} "
+                f"{name} fold blocks")
+        bad = set(self.op_kinds) - {"q", "kv", "qstat"}
+        if bad:
+            raise ValueError(f"unknown op kinds {sorted(bad)}")
+
+    # -- geometry --------------------------------------------------------
+    @property
+    def nq(self):
+        return self.tq // self.bq
+
+    @property
+    def nk(self):
+        return self.tk // self.bk
+
+    @property
+    def blocks_per_chunk(self):
+        return self.num_seq_blocks // self.splits
+
+    @property
+    def seq_grid_axis(self):
+        return len(self.grid) - 1
+
+    @property
+    def split_grid(self):
+        return self.grid[:-1] + (self.splits, self.blocks_per_chunk)
+
+    def semantics(self, seq_kind: str):
+        return ("parallel",) * (len(self.grid) - 1) + (seq_kind,)
+
+    def split_semantics(self):
+        # chunks parallel, sub-blocks within a chunk sequential
+        return ("parallel",) * 3 + ("arbitrary",)
+
+    def out_dim(self, i: int) -> int:
+        return self.d if self.out_dims is None else self.out_dims[i]
+
+    # -- block specs -----------------------------------------------------
+    def _check_ops(self, n_ops):
+        if n_ops != len(self.op_kinds):
+            raise ValueError(
+                f"{type(self).__name__} expects {len(self.op_kinds)} "
+                f"operands ({self.op_kinds}), got {n_ops}")
+
+    def op_specs(self, n_ops):
+        self._check_ops(n_ops)
+        return [self._op_spec(kind, split=False) for kind in self.op_kinds]
+
+    def split_op_specs(self, n_ops):
+        self._check_ops(n_ops)
+        return [self._op_spec(kind, split=True) for kind in self.op_kinds]
+
+    # -- causal-aware KV extent ------------------------------------------
+    def fold_active(self, ids):
+        """Liveness of the grid cell at semantic ids ``(h, qi, kj)`` —
+        ``None`` when no bounds are configured (always run)."""
+        if self.kv_bounds is None:
+            return None
+        causal, window, kv_len = self.kv_bounds
+        if not causal and window is None and kv_len is None:
+            # No live constraint: block_live would fold to the python
+            # constant True, which the schedules' pl.when/counter can't
+            # consume — report "no bound" instead.
+            return None
+        _, qi, kj = ids
+        return block_live(qi, kj, bq=self.bq, bk=self.bk, causal=causal,
+                          window=window, kv_len=kv_len)
+
+    def _live_plane_cells(self) -> int:
+        """Live cells of the (q-block, kv-block) plane under bounds."""
+        if self.kv_bounds is None:
+            return self.nq * self.nk
+        return _active_cell_count(self.nq, self.nk, bq=self.bq,
+                                  bk=self.bk, bounds=self.kv_bounds)
+
+    # -- in-kernel views -------------------------------------------------
+    def read_op(self, ref):
+        return ref[0]
+
+    def write(self, ref, val):
+        ref[0] = val.astype(ref.dtype)
+
+    def write_chain(self, ref, val):
+        ref[0, 0] = val.astype(ref.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVBlocks(_AttnFold):
     """Attention fold geometry for carried-payload (transform) monoids.
 
     q ``(bh, tq, d)`` attends k/v ``(bh_kv, tk, d)``; the scanned axis is
@@ -254,105 +429,52 @@ class KVBlocks:
                  chain + finalize stitches chunks back together.
 
     ``group`` maps q head ``h`` to kv head ``h // group`` in the k/v
-    index maps (GQA as free addressing, paper Obs. 5).
+    index maps (GQA as free addressing, paper Obs. 5). Used by the
+    flash forward AND the backward dq fold (see ``_AttnFold`` for the
+    operand-kind / out-dims / KV-bounds machinery).
     """
 
-    bh: int              # flattened B·H_q query rows
-    bh_kv: int           # flattened B·H_kv rows; bh == bh_kv * group
-    tq: int
-    tk: int
-    d: int
-    bq: int
-    bk: int
-    group: int = 1
-    splits: int = 1      # KV chunks for the decoupled fold
-    leaf_dims: "tuple | None" = None   # per-leaf trailing dims; (1,1,d)
-
-    def __post_init__(self):
-        _check_divisible((self.tq, self.tk), (self.bq, self.bk), "KVBlocks")
-        if self.bh != self.bh_kv * self.group:
-            raise ValueError(
-                f"bh={self.bh} != bh_kv={self.bh_kv} * group={self.group}")
-        if self.num_seq_blocks % self.splits:
-            raise ValueError(
-                f"splits={self.splits} must divide {self.num_seq_blocks} "
-                "KV blocks")
-
-    # -- geometry --------------------------------------------------------
     @property
     def shape(self):
         return (self.bh, self.tq, self.d)
 
     @property
-    def nq(self):
-        return self.tq // self.bq
-
-    @property
     def num_seq_blocks(self):
-        return self.tk // self.bk
-
-    @property
-    def blocks_per_chunk(self):
-        return self.num_seq_blocks // self.splits
+        return self.nk          # the fold walks KV blocks
 
     @property
     def grid(self):
-        return (self.bh, self.nq, self.num_seq_blocks)
-
-    @property
-    def seq_grid_axis(self):
-        return len(self.grid) - 1
-
-    @property
-    def split_grid(self):
-        return (self.bh, self.nq, self.splits, self.blocks_per_chunk)
-
-    def semantics(self, seq_kind: str):
-        return ("parallel",) * (len(self.grid) - 1) + (seq_kind,)
-
-    def split_semantics(self):
-        # chunks parallel, sub-blocks within a chunk sequential
-        return ("parallel",) * 3 + ("arbitrary",)
+        return (self.bh, self.nq, self.nk)
 
     def leaf_dim(self, leaf: int) -> int:
         dims = self.leaf_dims if self.leaf_dims is not None \
             else (1, 1, self.d)
         return dims[leaf]
 
-    # -- block specs -----------------------------------------------------
-    def op_specs(self, n_ops):
-        if n_ops != 3:
-            raise ValueError(f"KVBlocks expects (q, k, v) operands, "
-                             f"got {n_ops}")
-        g = self.group
-        return [
-            pl.BlockSpec((1, self.bq, self.d), lambda h, i, j: (h, i, 0)),
-            pl.BlockSpec((1, self.bk, self.d),
-                         lambda h, i, j, g=g: (h // g, j, 0)),
-            pl.BlockSpec((1, self.bk, self.d),
-                         lambda h, i, j, g=g: (h // g, j, 0)),
-        ]
-
-    def split_op_specs(self, n_ops):
-        if n_ops != 3:
-            raise ValueError(f"KVBlocks expects (q, k, v) operands, "
-                             f"got {n_ops}")
+    def _op_spec(self, kind, split: bool):
         g, bpc = self.group, self.blocks_per_chunk
-        return [
-            pl.BlockSpec((1, self.bq, self.d),
-                         lambda h, i, c, s: (h, i, 0)),
-            pl.BlockSpec((1, self.bk, self.d),
-                         lambda h, i, c, s, g=g, bpc=bpc:
-                         (h // g, c * bpc + s, 0)),
-            pl.BlockSpec((1, self.bk, self.d),
-                         lambda h, i, c, s, g=g, bpc=bpc:
-                         (h // g, c * bpc + s, 0)),
-        ]
+        if kind == "q" or kind == "qstat":
+            dim = self.d if kind == "q" else 1
+            if split:
+                return pl.BlockSpec((1, self.bq, dim),
+                                    lambda h, i, c, s: (h, i, 0))
+            return pl.BlockSpec((1, self.bq, dim),
+                                lambda h, i, j: (h, i, 0))
+        if split:
+            return pl.BlockSpec((1, self.bk, self.d),
+                                lambda h, i, c, s, g=g, bpc=bpc:
+                                (h // g, c * bpc + s, 0))
+        return pl.BlockSpec((1, self.bk, self.d),
+                            lambda h, i, j, g=g: (h // g, j, 0))
 
-    def out_spec(self):
+    def out_spec_for(self, i: int):
         # independent of the KV axis: the block persists in VMEM across
         # the sequential axis and is written once, at the last KV block
-        return pl.BlockSpec((1, self.bq, self.d), lambda h, i, j: (h, i, 0))
+        dim = self.out_dim(i)
+        return pl.BlockSpec((1, self.bq, dim), lambda h, qi, j: (h, qi, 0))
+
+    def out_shape_for(self, i: int):
+        return (self.bh, self.tq, self.out_dim(i))
 
     def chain_shape_for(self, leaf: int):
         return (self.bh * self.nq, self.splits, self.bq,
@@ -367,6 +489,19 @@ class KVBlocks:
     def carry_scratch(self, dtype, leaf=0):
         return pltpu.VMEM((self.bq, self.leaf_dim(leaf)), dtype)
 
+    def active_cells(self) -> int:
+        """Analytic count of live grid cells under ``kv_bounds`` (full
+        grid when bounds are off) — per flattened head row."""
+        return self._live_plane_cells()
+
+    # -- cell-count instrumentation (carry fold) -------------------------
+    @property
+    def count_shape(self):
+        return (self.bh, self.nq)
+
+    def count_spec(self):
+        return pl.BlockSpec((1, 1), lambda h, qi, j: (h, qi))
+
     # -- in-kernel views -------------------------------------------------
     def block_ids(self):
         return (pl.program_id(0), pl.program_id(1), pl.program_id(2))
@@ -376,15 +511,105 @@ class KVBlocks:
         return (pl.program_id(0), pl.program_id(1),
                 pl.program_id(2) * bpc + pl.program_id(3))
 
-    def read_op(self, ref):
-        return ref[0]
-
-    def write(self, ref, val):
-        ref[0] = val.astype(ref.dtype)
-
-    def write_chain(self, ref, val):
-        ref[0, 0] = val.astype(ref.dtype)
-
     def unchain_out(self, x):
         """(bh·nq, bq, dim) fold/finalize result -> (bh, tq, dim)."""
         return x.reshape(self.bh, self.tq, x.shape[-1])
+
+
+@dataclasses.dataclass(frozen=True)
+class QBlocks(_AttnFold):
+    """Transposed attention fold geometry: the backward dk/dv layout.
+
+    One grid row per (kv head, KV block); the scanned axis walks the
+    (group × q-block) product — every q head that addresses this KV head
+    under GQA plus every q block, so the head summation IS the fold.
+    Monoid leaves are per-KV-block accumulators of shape
+    ``(bk, leaf_dims[i])`` (flash backward: the dk and dv tiles), and
+    outputs land kv-major at ``(bh_kv, tk, out_dim)``.
+
+    Operand addressing mirrors :class:`KVBlocks` with the roles
+    transposed: kv-kind operands ride the grid row, q-kind operands are
+    indexed from the fold position ``f`` as
+    ``(h_kv·group + f // nq, f % nq)``. ``kv_bounds`` applies the same
+    per-(q-block, kv-block) liveness predicate — for a causal grid the
+    fold skips the q blocks above the diagonal.
+    """
+
+    op_kinds: tuple = ("q", "kv", "kv", "q", "qstat", "qstat", "qstat")
+
+    @property
+    def num_seq_blocks(self):
+        return self.group * self.nq    # the fold walks (group, q) blocks
+
+    @property
+    def grid(self):
+        return (self.bh_kv, self.nk, self.num_seq_blocks)
+
+    def leaf_dim(self, leaf: int) -> int:
+        return self.d if self.leaf_dims is None else self.leaf_dims[leaf]
+
+    def _op_spec(self, kind, split: bool):
+        g, nq, bpc = self.group, self.nq, self.blocks_per_chunk
+        if kind == "q" or kind == "qstat":
+            dim = self.d if kind == "q" else 1
+            if split:
+                return pl.BlockSpec(
+                    (1, self.bq, dim),
+                    lambda h, j, c, s, g=g, nq=nq, bpc=bpc:
+                    (h * g + (c * bpc + s) // nq, (c * bpc + s) % nq, 0))
+            return pl.BlockSpec(
+                (1, self.bq, dim),
+                lambda h, j, f, g=g, nq=nq: (h * g + f // nq, f % nq, 0))
+        if split:
+            return pl.BlockSpec((1, self.bk, self.d),
+                                lambda h, j, c, s: (h, j, 0))
+        return pl.BlockSpec((1, self.bk, self.d),
+                            lambda h, j, f: (h, j, 0))
+
+    def out_spec_for(self, i: int):
+        # independent of the fold axis: persists in VMEM, written once
+        dim = self.out_dim(i)
+        return pl.BlockSpec((1, self.bk, dim), lambda h, j, f: (h, j, 0))
+
+    def out_shape_for(self, i: int):
+        return (self.bh_kv, self.tk, self.out_dim(i))
+
+    def chain_shape_for(self, leaf: int):
+        return (self.bh_kv * self.nk, self.splits, self.bk,
+                self.leaf_dim(leaf))
+
+    def split_chain_spec_for(self, leaf: int):
+        nk = self.nk
+        return pl.BlockSpec(
+            (1, 1, self.bk, self.leaf_dim(leaf)),
+            lambda h, j, c, s, nk=nk: (h * nk + j, c, 0, 0))
+
+    def carry_scratch(self, dtype, leaf=0):
+        return pltpu.VMEM((self.bk, self.leaf_dim(leaf)), dtype)
+
+    def active_cells(self) -> int:
+        """Live fold cells per flattened kv-head row (every q head of
+        the group walks the same (qi, kj) liveness plane)."""
+        return self.group * self._live_plane_cells()
+
+    # -- cell-count instrumentation (carry fold) -------------------------
+    @property
+    def count_shape(self):
+        return (self.bh_kv, self.nk)
+
+    def count_spec(self):
+        return pl.BlockSpec((1, 1), lambda h, j, f: (h, j))
+
+    # -- in-kernel views -------------------------------------------------
+    def block_ids(self):
+        h, j, f = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        return (h * self.group + f // self.nq, f % self.nq, j)
+
+    def split_block_ids(self):
+        h, j = pl.program_id(0), pl.program_id(1)
+        f = pl.program_id(2) * self.blocks_per_chunk + pl.program_id(3)
+        return (h * self.group + f // self.nq, f % self.nq, j)
+
+    def unchain_out(self, x):
+        """(bh_kv·nk, bk, dim) fold/finalize result -> (bh_kv, tk, dim)."""
+        return x.reshape(self.bh_kv, self.tk, x.shape[-1])

@@ -50,6 +50,13 @@ carried state via ``spec.finalize``:
 Folds are not bitwise-invariant across schedules — the chunk chain
 re-associates the payload rescaling — but agree to float tolerance, and
 each matches the reference oracles to the usual kernel tolerances.
+
+Both fold forms honor the layout's optional KV-extent bounds
+(``layout.fold_active``): grid cells whose mask is provably all-dead
+skip the transform-and-combine entirely, leaving the carry untouched —
+bitwise identical to folding in the identity element the masked
+transform would have produced, at none of the cost. Causal prefill
+runs ~half its cells this way.
 """
 
 from __future__ import annotations
@@ -472,50 +479,98 @@ def fold_chain(spec: KernelSpec, totals, axis: int = 1):
     return final
 
 
-def _fold_carry_body(*refs, spec, layout, elem_dts, n_ops, n_out):
+def _fold_step(spec, layout, data_refs, carry_refs, elem_dts, ids):
+    """One fold accumulate — transform, combine, carry writeback —
+    gated on the layout's KV-extent liveness when bounds are on.
+
+    Returns the traced ``active`` predicate (``None`` without bounds):
+    a skipped cell leaves the carry untouched, which is bitwise equal to
+    folding in the monoid identity its fully-masked transform would have
+    produced.
+    """
+    active = layout.fold_active(ids)
+
+    def step():
+        ops = tuple(layout.read_op(r) for r in data_refs)
+        elem = spec.transform(ops, ids)
+        elem = tuple(e.astype(dt) for e, dt in zip(elem, elem_dts))
+        carry = tuple(r[...] for r in carry_refs)
+        new_carry = spec.combine(carry, elem)  # carry is EARLIER operand
+        for r, c in zip(carry_refs, new_carry):
+            r[...] = c.astype(r.dtype)
+
+    if active is None:
+        step()
+    else:
+        pl.when(active)(step)
+    return active
+
+
+def _fold_carry_body(*refs, spec, layout, elem_dts, n_ops, n_out, count):
     data_refs = refs[:n_ops]
     out_refs = refs[n_ops:n_ops + n_out]
-    carry_refs = refs[n_ops + n_out:]
+    cnt_refs = refs[n_ops + n_out:n_ops + n_out + count]
+    scratch = refs[n_ops + n_out + count:]
+    carry_refs = scratch[:spec.n_leaves]
+    cnt_scratch = scratch[spec.n_leaves:]
     j = pl.program_id(layout.seq_grid_axis)
 
     @pl.when(j == 0)
     def _reset():
         for r, f in zip(carry_refs, spec.fills):
             r[...] = jnp.full(r.shape, f, r.dtype)
+        for r in cnt_scratch:
+            r[...] = jnp.zeros(r.shape, r.dtype)
 
-    ops = tuple(layout.read_op(r) for r in data_refs)
-    elem = spec.transform(ops, layout.block_ids())
-    elem = tuple(e.astype(dt) for e, dt in zip(elem, elem_dts))
-    carry = tuple(r[...] for r in carry_refs)
-    new_carry = spec.combine(carry, elem)     # carry is the EARLIER operand
-    for r, c in zip(carry_refs, new_carry):
-        r[...] = c.astype(r.dtype)
+    active = _fold_step(spec, layout, data_refs, carry_refs, elem_dts,
+                        layout.block_ids())
+    for r in cnt_scratch:
+        r[0, 0] += (1 if active is None
+                    else active.astype(jnp.int32))
 
     @pl.when(j == layout.num_seq_blocks - 1)
     def _finalize():
-        for r, o in zip(out_refs, spec.finalize(new_carry)):
+        cur = tuple(r[...] for r in carry_refs)
+        for r, o in zip(out_refs, spec.finalize(cur)):
             layout.write(r, o)
+        for r, c in zip(cnt_refs, cnt_scratch):
+            r[0, 0] = c[0, 0]
 
 
-def fold_carry(operands, spec, layout, *, interpret=False):
-    """Single-pass accumulate of a carried-payload monoid (flash fwd)."""
+def fold_carry(operands, spec, layout, *, interpret=False,
+               count_cells=False):
+    """Single-pass accumulate of a carried-payload monoid (flash fwd).
+
+    ``count_cells=True`` appends an int32 ``layout.count_shape`` output
+    counting the fold cells that actually executed per grid row — the
+    instrumentation behind the causal-bound "launches ~half the cells"
+    assertion.
+    """
     elem_dts, out_dts = _dtypes(spec, operands)
+    count = 1 if count_cells else 0
     body = functools.partial(
         _fold_carry_body, spec=spec, layout=layout, elem_dts=elem_dts,
-        n_ops=len(operands), n_out=len(out_dts))
-    return tuple(pl.pallas_call(
+        n_ops=len(operands), n_out=len(out_dts), count=count)
+    outs = pl.pallas_call(
         body,
         grid=layout.grid,
         in_specs=layout.op_specs(len(operands)),
-        out_specs=[layout.out_spec()] * len(out_dts),
-        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts],
+        out_specs=[layout.out_spec_for(i) for i in range(len(out_dts))]
+        + [layout.count_spec()] * count,
+        out_shape=[jax.ShapeDtypeStruct(layout.out_shape_for(i), dt)
+                   for i, dt in enumerate(out_dts)]
+        + [jax.ShapeDtypeStruct(layout.count_shape, jnp.int32)] * count,
         scratch_shapes=[layout.carry_scratch(dt, i)
-                        for i, dt in enumerate(elem_dts)],
+                        for i, dt in enumerate(elem_dts)]
+        + [pltpu.VMEM((1, 1), jnp.int32)] * count,
         compiler_params=pallas_compat.compiler_params(
             dimension_semantics=layout.semantics("arbitrary")),
         interpret=interpret,
         name=f"scan_{spec.name}_fold_carry",
-    )(*operands))
+    )(*operands)
+    if count_cells:
+        return tuple(outs[:-1]), outs[-1]
+    return tuple(outs)
 
 
 def _fold_totals_body(*refs, spec, layout, elem_dts, n_ops):
@@ -530,17 +585,13 @@ def _fold_totals_body(*refs, spec, layout, elem_dts, n_ops):
         for r, f in zip(carry_refs, spec.fills):
             r[...] = jnp.full(r.shape, f, r.dtype)
 
-    ops = tuple(layout.read_op(r) for r in data_refs)
-    elem = spec.transform(ops, layout.split_block_ids())
-    elem = tuple(e.astype(dt) for e, dt in zip(elem, elem_dts))
-    carry = tuple(r[...] for r in carry_refs)
-    new_carry = spec.combine(carry, elem)
-    for r, c in zip(carry_refs, new_carry):
-        r[...] = c.astype(r.dtype)
+    _fold_step(spec, layout, data_refs, carry_refs, elem_dts,
+               layout.split_block_ids())
 
     @pl.when(s == layout.blocks_per_chunk - 1)
     def _publish():
-        for r, c in zip(chain_refs, new_carry):
+        cur = tuple(r[...] for r in carry_refs)
+        for r, c in zip(chain_refs, cur):
             layout.write_chain(r, c)
 
 
@@ -587,7 +638,7 @@ def fold_decoupled(operands, spec, layout, *, interpret=False):
 
 def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
          exclusive: bool = False, interpret: bool = False,
-         return_totals: bool = False):
+         return_totals: bool = False, count_cells: bool = False):
     """Run ``spec``'s monoid scan over ``operands`` under one schedule.
 
     Returns a tuple of output arrays (most registrations emit one).
@@ -600,7 +651,9 @@ def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
 
     Carried-payload monoids (``spec.transform``) run the fold forms of
     the schedules; ``fused`` maps to ``decoupled`` there (a fold has no
-    per-element writeback to chain a prefix into).
+    per-element writeback to chain a prefix into). ``count_cells=True``
+    (carry fold only) additionally returns the executed-cell counts —
+    the causal-bound instrumentation.
     """
     if schedule not in SCHEDULES:
         raise ValueError(
@@ -608,13 +661,19 @@ def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
     if exclusive and not spec.supports_exclusive:
         raise ValueError(
             f"monoid {spec.name!r} does not support exclusive mode")
+    if count_cells and (spec.transform is None or schedule != "carry"):
+        raise ValueError(
+            "count_cells instruments the carry fold only")
     if spec.transform is not None:
         if return_totals:
             raise ValueError(
                 "return_totals is meaningless for carried-payload "
                 "monoids: the output IS the fold")
-        fn = fold_carry if schedule == "carry" else fold_decoupled
-        return fn(tuple(operands), spec, layout, interpret=interpret)
+        if schedule == "carry":
+            return fold_carry(tuple(operands), spec, layout,
+                              interpret=interpret, count_cells=count_cells)
+        return fold_decoupled(tuple(operands), spec, layout,
+                              interpret=interpret)
     fn = {"carry": scan_carry, "decoupled": scan_decoupled,
           "fused": scan_fused}[schedule]
     return fn(tuple(operands), spec, layout, exclusive=exclusive,

@@ -13,6 +13,12 @@ Block kinds (``ModelConfig.layer_pattern``):
 Every ``apply_block`` returns ``(x, aux, cache)`` where ``aux`` is a dict of
 scalar f32 auxiliaries (moe losses; zeros elsewhere so the lax.scan over
 layers has a uniform carry).
+
+Attention blocks thread ``attn_impl``/``attn_schedule`` down to
+``apply_attention`` unchanged; since flash carries its engine-fold
+custom VJP, every value of ``attn_impl`` — dense, blockwise, banded,
+flash — is valid under ``jax.grad``, so blocks make no training-vs-
+inference distinction here.
 """
 
 from __future__ import annotations

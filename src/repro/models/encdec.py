@@ -64,7 +64,8 @@ def init_dec_cache(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
 
 
 def encode(params, frame_embeds, cfg: ModelConfig, remat: bool = False,
-           unroll: bool = False):
+           unroll: bool = False, attn_impl: "str | None" = None,
+           attn_schedule: str = "auto"):
     """(B, F, 1024) precomputed frames -> encoder memory (B, F, D)."""
     x = apply_frontend(params["frontend"], frame_embeds, cfg)
     positions = jnp.arange(x.shape[1])
@@ -72,7 +73,8 @@ def encode(params, frame_embeds, cfg: ModelConfig, remat: bool = False,
     def body(carry, p_sl):
         h = apply_norm(p_sl["norm1"], carry, cfg)
         a, _ = apply_attention(p_sl["attn"], h, cfg, positions=positions,
-                               causal=False)
+                               causal=False, impl=attn_impl,
+                               schedule=attn_schedule)
         carry = carry + a
         h = apply_norm(p_sl["norm2"], carry, cfg)
         carry = carry + apply_mlp(p_sl["mlp"], h, cfg)
@@ -89,6 +91,7 @@ def decode_forward(
     params, tokens, memory, cfg: ModelConfig, *,
     cache: Optional[Pytree] = None, cache_len: Optional[jax.Array] = None,
     remat: bool = False, unroll: bool = False,
+    attn_impl: Optional[str] = None, attn_schedule: str = "auto",
 ):
     """Decoder stack -> final-norm hidden (B, S, D); cache for serving."""
     x = embed_tokens(params, tokens, cfg)
@@ -104,7 +107,8 @@ def decode_forward(
         h = apply_norm(p_sl["norm1"], x, cfg)
         a, new_kv = apply_attention(
             p_sl["attn"], h, cfg, positions=positions,
-            cache=None if c_sl is None else c_sl["kv"], cache_len=cache_len)
+            cache=None if c_sl is None else c_sl["kv"], cache_len=cache_len,
+            impl=attn_impl, schedule=attn_schedule)
         x = x + a
         h = apply_norm(p_sl["norm2"], x, cfg)
         x = x + apply_cross_attention(p_sl["cross_attn"], h, memory, cfg)
@@ -123,13 +127,17 @@ def decode_forward(
 
 def encdec_loss(params, batch: dict, cfg: ModelConfig, *,
                 remat: bool = False, loss_chunk: int = 512,
-                attn_impl: "str | None" = None, unroll: bool = False):
+                attn_impl: "str | None" = None,
+                attn_schedule: str = "auto", unroll: bool = False):
     """batch: embeds (B,F,1024), tokens (B,S), labels, mask."""
     from repro.models.lm import chunked_ce_loss
     memory = encode(params, batch["embeds"], cfg, remat=remat,
-                    unroll=unroll)
+                    unroll=unroll, attn_impl=attn_impl,
+                    attn_schedule=attn_schedule)
     hidden, _ = decode_forward(params, batch["tokens"], memory, cfg,
-                               remat=remat, unroll=unroll)
+                               remat=remat, unroll=unroll,
+                               attn_impl=attn_impl,
+                               attn_schedule=attn_schedule)
     ce = chunked_ce_loss(params, hidden, batch["labels"], batch["mask"],
                          cfg, chunk=loss_chunk, unroll=unroll)
     return ce, {"ce": ce, "loss": ce}

@@ -3,11 +3,20 @@
 Implementation selection mirrors the scan policy (paper §5): small sequences
 use the dense form; long sequences use the *blockwise online-softmax scan*
 (`repro.kernels.flash_attention.ref.blockwise_ref`, autodiff-able) and the
-engine-backed flash kernel (`impl="flash"`) for inference — all three
-compute the same softmax-pair monoid fold. The flash route threads
+engine-backed flash kernel (`impl="flash"`) — all three compute the same
+softmax-pair monoid fold, and all three are TRAINING-ROUTE peers:
+``flash_attention`` carries a ``jax.custom_vjp`` whose backward runs as
+two more engine folds (dq over KV blocks, dk/dv over the transposed
+q-major layout), so ``impl="flash"`` survives ``jax.grad`` without
+detouring through the jnp references. The flash route threads
 ``schedule`` ("carry"|"decoupled"|"auto") down to the scan engine's fold
 schedules, so the serve prefill path can land on the split-KV decoupled
 form for the long-KV class via ``policy.choose_attention_schedule``.
+
+All implementations share the zeroed-probability masking convention:
+a fully-masked row emits exactly 0 with zero gradients (see ref.py) —
+the invariant the gradient-parity wall and the causal-aware KV bound
+both rest on.
 """
 
 from __future__ import annotations
@@ -19,13 +28,11 @@ import jax.numpy as jnp
 
 from repro.dist import shard
 from repro.kernels.flash_attention import (banded_ref, blockwise_ref,
-                                            flash_attention)
+                                            flash_attention, masked_softmax)
 from repro.models.config import ModelConfig
 from repro.models.layers.common import compute_dtype, dense_init
 from repro.models.layers.norms import rms_norm_headwise
 from repro.models.layers.rope import apply_rope
-
-NEG_INF = -1e30
 
 
 def init_attention(key, cfg: ModelConfig):
@@ -89,8 +96,7 @@ def _dense_attn(q, k, v, *, scale, causal, window, softcap, q_pos, k_pos,
         mask = mask & (k_pos[None, :] <= q_pos[:, None])
     if window is not None:
         mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = masked_softmax(s, mask[None, None, None])
     out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
     return out.reshape(B, H, Sq, hd).astype(q.dtype)
 

@@ -190,13 +190,20 @@ def chunked_ce_loss(
 def lm_loss(
     params, batch: dict, cfg: ModelConfig, *, remat: bool = False,
     loss_chunk: int = 512, attn_impl: Optional[str] = None,
-    unroll: bool = False,
+    attn_schedule: str = "auto", unroll: bool = False,
 ):
     """batch: tokens (B,S) int32, labels (B,S) int32, mask (B,S) f32,
-    optional embeds (B,F,E). Returns (loss, metrics)."""
+    optional embeds (B,F,E). Returns (loss, metrics).
+
+    ``attn_impl="flash"`` trains on the engine-backed flash kernel —
+    forward AND backward run as scan-engine folds via its custom VJP —
+    with ``attn_schedule`` picking the fold organization; dense and
+    blockwise remain the jnp autodiff peers.
+    """
     hidden, aux, _ = forward(
         params, batch["tokens"], cfg, embeds=batch.get("embeds"),
-        remat=remat, attn_impl=attn_impl, unroll=unroll)
+        remat=remat, attn_impl=attn_impl, attn_schedule=attn_schedule,
+        unroll=unroll)
     embeds = batch.get("embeds")
     F = embeds.shape[1] if embeds is not None else 0
     hidden = hidden[:, F:]

@@ -44,7 +44,11 @@ Pytree = Any
 class TrainStepConfig:
     microbatches: int = 1
     remat: bool = True
-    attn_impl: Optional[str] = None   # None = auto (dense<=4k, blockwise)
+    # None = auto (dense<=4k, blockwise); "flash" trains on the engine
+    # kernel — its custom_vjp runs the backward as scan-engine folds, so
+    # dense, blockwise and flash are grad-parity-checkable peers.
+    attn_impl: Optional[str] = None
+    attn_schedule: str = "auto"       # flash fold organization
     unroll_layers: bool = False       # dry-run: full cost in the HLO
     loss_chunk: int = 512
     peak_lr: float = 3e-4
@@ -76,6 +80,7 @@ def _accumulate_grads(loss_fn, params, batch, tcfg: TrainStepConfig,
             lambda p: loss_fn(p, batch, cfg, remat=tcfg.remat,
                               loss_chunk=tcfg.loss_chunk,
                               attn_impl=tcfg.attn_impl,
+                              attn_schedule=tcfg.attn_schedule,
                               unroll=tcfg.unroll_layers),
             has_aux=True)(params)
         return loss, metrics, grads
@@ -93,6 +98,7 @@ def _accumulate_grads(loss_fn, params, batch, tcfg: TrainStepConfig,
             lambda p: loss_fn(p, mb, cfg, remat=tcfg.remat,
                               loss_chunk=tcfg.loss_chunk,
                               attn_impl=tcfg.attn_impl,
+                              attn_schedule=tcfg.attn_schedule,
                               unroll=tcfg.unroll_layers),
             has_aux=True)(params)
         gacc = jax.tree.map(

@@ -24,6 +24,14 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = strategies
 
 
+def pytest_configure(config):
+    # Exhaustive sweeps (large-shape grad walls) ride behind -m slow so
+    # tools/verify.sh --fast and local iteration can deselect them with
+    # -m "not slow"; the tier-1 run executes everything.
+    config.addinivalue_line(
+        "markers", "slow: exhaustive sweep; deselect with -m 'not slow'")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,206 @@
+"""Causal-aware KV bounds: bitwise identity + strictly fewer cells.
+
+The attention fold layouts (``KVBlocks`` forward/dq, ``QBlocks`` dk/dv)
+carry an optional per-q-block KV extent ``(causal, window, kv_len)``;
+the fold schedules skip grid cells whose mask is provably all-dead.
+With the zeroed-probability convention a skipped cell's element is the
+monoid identity, so:
+
+  * forward outputs and dq/dk/dv are BITWISE identical bound-on vs
+    bound-off, under both fold schedules;
+  * causal prefill executes ~half the cells (instrumented count +
+    analytic ``active_cells``);
+  * the liveness predicate is conservative: every skipped cell is
+    verifiably all-masked against the dense mask.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import scan_engine
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_bwd_kernel, flash_attention_kernel)
+
+SCHEDULES = ("carry", "decoupled")
+
+BOUND_CONFIGS = [
+    # (name, Tq, Tk, D, causal, window, kv_len, bq, bk)
+    ("causal", 256, 256, 16, True, None, None, 64, 64),
+    ("causal_window", 256, 256, 16, True, 96, None, 64, 64),
+    ("causal_short_kv", 256, 256, 16, True, None, 160, 64, 64),
+    ("window_all_masked_tail", 256, 256, 16, True, 32, 64, 64, 64),
+    ("noncausal", 128, 256, 16, False, None, 200, 64, 64),
+]
+
+
+def _qkv(rng, Tq, Tk, D, H=2):
+    q = jnp.asarray(rng.standard_normal((H, Tq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((H, Tk, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((H, Tk, D)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize(
+    "cfg", BOUND_CONFIGS, ids=[c[0] for c in BOUND_CONFIGS])
+def test_forward_bitwise_bound_on_off(cfg, schedule):
+    name, Tq, Tk, D, causal, window, kv_len, bq, bk = cfg
+    rng = np.random.default_rng(abs(hash(name)) % 2**31)
+    q, k, v = _qkv(rng, Tq, Tk, D)
+    kw = dict(scale=D ** -0.5, causal=causal, window=window,
+              kv_len=kv_len, block_q=bq, block_k=bk, schedule=schedule,
+              interpret=True)
+    on = flash_attention_kernel(q, k, v, use_kv_bounds=True, **kw)
+    off = flash_attention_kernel(q, k, v, use_kv_bounds=False, **kw)
+    assert bool(jnp.all(on == off)), f"{name}/{schedule} diverged"
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize(
+    "cfg", BOUND_CONFIGS, ids=[c[0] for c in BOUND_CONFIGS])
+def test_backward_bitwise_bound_on_off(cfg, schedule):
+    name, Tq, Tk, D, causal, window, kv_len, bq, bk = cfg
+    rng = np.random.default_rng(abs(hash(name)) % 2**31 + 1)
+    q, k, v = _qkv(rng, Tq, Tk, D)
+    kw = dict(scale=D ** -0.5, causal=causal, window=window,
+              kv_len=kv_len, block_q=bq, block_k=bk, schedule=schedule,
+              interpret=True)
+    out, m, l = flash_attention_kernel(q, k, v, return_stats=True,
+                                       use_kv_bounds=True, **kw)
+    g = jnp.asarray(rng.standard_normal(out.shape), jnp.float32)
+    delta = jnp.sum(g * out, axis=-1, keepdims=True)
+    grads = {
+        b: flash_attention_bwd_kernel(q, k, v, g, m, l, delta,
+                                      use_kv_bounds=b, **kw)
+        for b in (True, False)
+    }
+    for leaf, (a, b) in enumerate(zip(grads[True], grads[False])):
+        assert bool(jnp.all(a == b)), f"{name}/{schedule} leaf {leaf}"
+
+
+def test_causal_prefill_cell_count_instrumented():
+    """Causal prefill must EXECUTE ~half the (q-block, kv-block) cells:
+    the carry fold's count_cells instrumentation returns the per-row
+    executed counts, which must equal the analytic ``active_cells`` and
+    be strictly fewer than the full grid."""
+    rng = np.random.default_rng(0)
+    Tq = Tk = 1024
+    D, bq, bk = 16, 128, 128
+    q, k, v = _qkv(rng, Tq, Tk, D)
+    out, counts = flash_attention_kernel(
+        q, k, v, scale=D ** -0.5, causal=True, block_q=bq, block_k=bk,
+        count_cells=True, interpret=True)
+    nq = nk = Tq // bq
+    layout = scan_engine.KVBlocks(
+        bh=2, bh_kv=2, tq=Tq, tk=Tk, d=D, bq=bq, bk=bk,
+        kv_bounds=(True, None, Tk))
+    per_row = layout.active_cells()
+    assert counts.shape == (2, nq)
+    assert int(counts.sum()) == 2 * per_row
+    # causal: the lower block triangle, nq(nq+1)/2 of nq² cells
+    assert per_row == nq * (nq + 1) // 2
+    full = nq * nk
+    assert per_row < full
+    assert per_row / full <= 0.6  # ~half, plus the diagonal
+    # and the instrumented run's output is bitwise the uninstrumented one
+    plain = flash_attention_kernel(
+        q, k, v, scale=D ** -0.5, causal=True, block_q=bq, block_k=bk,
+        interpret=True)
+    assert bool(jnp.all(out == plain))
+
+
+def test_bounds_off_counts_full_grid():
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, 256, 256, 16)
+    _, counts = flash_attention_kernel(
+        q, k, v, scale=0.25, causal=True, block_q=64, block_k=64,
+        use_kv_bounds=False, count_cells=True, interpret=True)
+    assert int(counts.sum()) == 2 * 4 * 4
+
+
+def test_qblocks_active_cells_matches_kvblocks():
+    """The transposed backward layout skips the SAME (qi, kj) cells —
+    group-scaled, since each q head of the group walks the plane."""
+    for window, kv_len in [(None, None), (96, None), (None, 160)]:
+        bounds = (True, window, kv_len if kv_len is not None else 256)
+        kv = scan_engine.KVBlocks(bh=4, bh_kv=2, tq=256, tk=256, d=16,
+                                  bq=64, bk=64, group=2, kv_bounds=bounds)
+        qb = scan_engine.QBlocks(bh=4, bh_kv=2, tq=256, tk=256, d=16,
+                                 bq=64, bk=64, group=2, kv_bounds=bounds)
+        assert qb.active_cells() == 2 * kv.active_cells()
+
+
+@pytest.mark.parametrize("window,kv_len,causal", [
+    (None, 256, True), (96, 256, True), (None, 160, True),
+    (32, 64, True), (None, 200, False), (64, 100, True)])
+def test_block_live_is_conservative(window, kv_len, causal):
+    """Property: whenever the liveness predicate says DEAD, every
+    (row, col) in the cell is masked under the dense mask — skipping is
+    provably exact. And every LIVE cell it reports for causal/kv_len
+    bounds alone contains a live entry (the bound is tight there)."""
+    Tq = Tk = 256
+    bq = bk = 64
+    rows = np.arange(Tq)[:, None]
+    cols = np.arange(Tk)[None, :]
+    mask = np.broadcast_to(cols < kv_len, (Tq, Tk))
+    if causal:
+        mask = mask & (cols <= rows)
+    if window is not None:
+        mask = mask & (cols > rows - window)
+    for qi in range(Tq // bq):
+        for kj in range(Tk // bk):
+            cell = mask[qi * bq:(qi + 1) * bq, kj * bk:(kj + 1) * bk]
+            live = scan_engine.block_live(
+                qi, kj, bq=bq, bk=bk, causal=causal, window=window,
+                kv_len=kv_len)
+            if not live:
+                assert not cell.any(), (qi, kj)
+            elif window is None:
+                # without a window the predicate is exact, not merely
+                # conservative
+                assert cell.any(), (qi, kj)
+
+
+def test_degenerate_bounds_count_full_grid():
+    """Regression: kv_bounds=(False, None, None) has no live constraint
+    — block_live would be the python constant True, which the schedule
+    bodies can't trace. fold_active must normalize it to "no bound" so
+    count_cells still works and reports the full grid."""
+    from repro.core.scan.assoc import softmax_pair_kernel_spec
+
+    lay = scan_engine.KVBlocks(bh=2, bh_kv=2, tq=128, tk=128, d=16,
+                               bq=64, bk=64,
+                               kv_bounds=(False, None, None))
+    assert lay.fold_active((0, 0, 0)) is None
+    assert lay.active_cells() == 4
+    rng = np.random.default_rng(11)
+    q, k, v = _qkv(rng, 128, 128, 16)
+    spec = softmax_pair_kernel_spec(scale=0.25, causal=False,
+                                    block_q=64, block_k=64)
+    (out,), counts = scan_engine.scan(
+        (q, k, v), spec, lay, schedule="carry", interpret=True,
+        count_cells=True)
+    assert int(counts.sum()) == 2 * 4
+
+
+def test_flash_attention_grad_bitwise_with_bounds_knob():
+    """End to end through the public wrapper + custom_vjp: grads with
+    the bounds knob on vs off are bitwise identical."""
+    rng = np.random.default_rng(5)
+    B, Hq, Hkv, T, D = 1, 4, 2, 256, 16
+    q = jnp.asarray(rng.standard_normal((B, Hq, T, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+
+    def grads(use_bounds):
+        def loss(q, k, v):
+            return jnp.sum(fa_ops.flash_attention(
+                q, k, v, causal=True, window=96,
+                use_kv_bounds=use_bounds, interpret=True) ** 2)
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    for a, b in zip(grads(True), grads(False)):
+        assert bool(jnp.all(a == b))
