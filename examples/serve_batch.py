@@ -30,11 +30,14 @@ def main():
             prompt=rng.integers(2, cfg.vocab_size, plen).astype(np.int32)))
     done = eng.run_to_completion()
     dt = time.perf_counter() - t0
+    eng.audit()  # lifecycle invariants: one finish reason each, none lost
     total = sum(len(r.output) for r in done)
     print(f"{len(done)} requests · {total} tokens · {dt:.1f}s "
           f"({total/dt:.1f} tok/s through {eng.ecfg.max_slots} slots)")
+    print(f"stats: {eng.stats.summary()}")
     for r in sorted(done, key=lambda r: r.rid)[:4]:
-        print(f"  req{r.rid}: {len(r.output)} tokens -> {r.output[:8]}…")
+        print(f"  req{r.rid}: [{r.finish_reason}] {len(r.output)} tokens "
+              f"-> {r.output[:8]}…")
 
 
 if __name__ == "__main__":

@@ -2,18 +2,25 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
         --smoke --requests 8 --max-new-tokens 16
+
+Hardening knobs ride along: ``--fault-seed`` runs the request mix under
+the deterministic chaos injector (transient errors / NaN logits /
+stalls), ``--deadline-ticks``/``--max-waiting`` exercise admission
+control and TTLs, and the run always ends with the ``EngineStats``
+health line the chaos tests assert on.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
 
 from repro import configs
-from repro.serve import Engine, EngineConfig, Request
+from repro.serve import Engine, EngineConfig, FaultInjector, Request
 from repro.train.step import init_params
 
 
@@ -29,6 +36,17 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--top-p", type=float, default=0.95)
     ap.add_argument("--seed", type=int, default=0)
+    # -- hardening / chaos knobs ---------------------------------------
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="run under the deterministic fault injector")
+    ap.add_argument("--fault-error-rate", type=float, default=0.05)
+    ap.add_argument("--fault-nan-rate", type=float, default=0.05)
+    ap.add_argument("--fault-stall-rate", type=float, default=0.02)
+    ap.add_argument("--max-waiting", type=int, default=None)
+    ap.add_argument("--admission-policy", choices=["reject", "block"],
+                    default="reject")
+    ap.add_argument("--deadline-ticks", type=int, default=None)
+    ap.add_argument("--no-bucket-prompts", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
@@ -40,24 +58,44 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
 
+    injector = None
+    if args.fault_seed is not None:
+        injector = FaultInjector.from_seed(
+            args.fault_seed, ticks=4 * args.requests * args.max_new_tokens,
+            p_error=args.fault_error_rate, p_nan=args.fault_nan_rate,
+            p_stall=args.fault_stall_rate)
+
     eng = Engine(params, cfg, EngineConfig(
         max_slots=args.slots, max_len=args.max_len,
         max_new_tokens=args.max_new_tokens, temperature=args.temperature,
-        top_p=args.top_p, eos_id=-1, seed=args.seed))
+        top_p=args.top_p, eos_id=-1, seed=args.seed,
+        max_waiting=args.max_waiting,
+        admission_policy=args.admission_policy,
+        deadline_ticks=args.deadline_ticks,
+        bucket_prompts=not args.no_bucket_prompts), injector=injector)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
-    for rid in range(args.requests):
-        prompt = rng.integers(
-            2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
-        eng.submit(Request(rid=rid, prompt=prompt))
-    done = eng.run_to_completion()
+    with warnings.catch_warnings():
+        warnings.simplefilter("default")
+        for rid in range(args.requests):
+            prompt = rng.integers(
+                2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
+            eng.submit(Request(rid=rid, prompt=prompt))
+        done = eng.run_to_completion()
     dt = time.perf_counter() - t0
+    eng.audit()
     ntok = sum(len(r.output) for r in done)
+    ok = sum(r.finish_reason in ("eos", "length_budget") for r in done)
     print(f"served {len(done)} requests, {ntok} tokens in {dt:.2f}s "
-          f"({ntok / dt:.1f} tok/s)")
+          f"({ntok / dt:.1f} tok/s, goodput {ok}/{len(done)})")
+    print(f"stats: {eng.stats.summary()}")
+    if injector is not None:
+        print(f"faults fired: error={injector.fired_count('error')} "
+              f"nan={injector.fired_count('nan')} "
+              f"stall={injector.fired_count('stall')}")
     for r in done[:3]:
-        print(f"  req {r.rid}: {r.output[:10]}...")
+        print(f"  req {r.rid}: [{r.finish_reason}] {r.output[:10]}...")
     return 0
 
 

@@ -146,6 +146,7 @@ def apply_block(
     cache_len: Optional[jax.Array] = None,
     attn_impl: Optional[str] = None,
     attn_schedule: str = "auto",
+    ssm_impl: Optional[str] = None,
     unroll: bool = False,
 ):
     if kind in ("global", "local"):
@@ -172,7 +173,8 @@ def apply_block(
         h = apply_norm(params["norm1"], x, cfg)
         y, new_ssm = apply_ssm(
             params["ssm"], h, cfg,
-            cache=None if cache is None else cache["ssm"])
+            cache=None if cache is None else cache["ssm"],
+            impl=ssm_impl or "auto")
         new_cache = None if cache is None else {"ssm": new_ssm}
         return x + y, zero_aux(), new_cache
 

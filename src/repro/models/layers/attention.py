@@ -83,7 +83,15 @@ def _theta(cfg: ModelConfig, kind: str) -> float:
 
 def _dense_attn(q, k, v, *, scale, causal, window, softcap, q_pos, k_pos,
                 kv_len):
-    """q (B,H,Sq,hd), k/v (B,Hkv,Sk,hd); GQA via head reshape."""
+    """q (B,H,Sq,hd), k/v (B,Hkv,Sk,hd); GQA via head reshape.
+
+    ``q_pos`` (Sq,) or (B,Sq), ``k_pos`` (Sk,) or (B,Sk), ``kv_len``
+    scalar or (B,): the serve engine passes PER-ROW positions/extents so
+    co-resident sequences of different lengths are masked independently
+    — one row's output never depends on its pool neighbours (the
+    isolation the chaos wall's bitwise invariant rests on). Scalar /
+    unbatched arguments keep the original broadcast shapes bit-for-bit.
+    """
     B, H, Sq, hd = q.shape
     Hkv = k.shape[1]
     g = H // Hkv
@@ -91,12 +99,18 @@ def _dense_attn(q, k, v, *, scale, causal, window, softcap, q_pos, k_pos,
     s = jnp.einsum("bkgqd,bksd->bkgqs", qf, k.astype(jnp.float32)) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    mask = (k_pos[None, :] < kv_len) & (k_pos[None, :] >= 0)
+    q_pos = jnp.asarray(q_pos)
+    k_pos = jnp.asarray(k_pos)
+    kv_len = jnp.asarray(kv_len)
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None]        # (B|1, Sq)
+    kp = k_pos if k_pos.ndim == 2 else k_pos[None]        # (B|1, Sk)
+    kv = kv_len.reshape(-1, 1, 1)                         # (B|1, 1, 1)
+    mask = (kp[:, None, :] < kv) & (kp[:, None, :] >= 0)
     if causal:
-        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        mask = mask & (kp[:, None, :] <= qp[:, :, None])
     if window is not None:
-        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
-    p = masked_softmax(s, mask[None, None, None])
+        mask = mask & (kp[:, None, :] > qp[:, :, None] - window)
+    p = masked_softmax(s, mask[:, None, None])
     out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
     return out.reshape(B, H, Sq, hd).astype(q.dtype)
 
@@ -129,11 +143,16 @@ def apply_attention(
         else cfg.head_dim ** -0.5
     if positions is None:
         positions = jnp.arange(S)
+    positions = jnp.asarray(positions)
+    # Per-row positions (B, S) — the serve engine's heterogeneous-length
+    # decode. RoPE rotates per row: lift to (B, 1, S) so the angle table
+    # broadcasts over heads; 1-D positions keep the original shapes.
+    rope_pos = positions[:, None, :] if positions.ndim == 2 else positions
 
     q, k, v = _project(params, x, cfg)
     theta = _theta(cfg, kind)
-    q = apply_rope(q.swapaxes(1, 2), positions, theta).swapaxes(1, 2)
-    k = apply_rope(k.swapaxes(1, 2), positions, theta).swapaxes(1, 2)
+    q = apply_rope(q.swapaxes(1, 2), rope_pos, theta).swapaxes(1, 2)
+    k = apply_rope(k.swapaxes(1, 2), rope_pos, theta).swapaxes(1, 2)
     q = shard(q, "batch", "seq", "heads", None)
     k = shard(k, "batch", "seq", "kv_heads", None)
     v = shard(v, "batch", "seq", "kv_heads", None)
@@ -200,19 +219,34 @@ def apply_attention(
         new_cache = {"k": kh, "v": vh}
     elif cache is not None:
         slots = cache["k"].shape[2]
-        # Ring-buffer write for windowed layers, append otherwise.
+        per_row = getattr(cache_len, "ndim", 0) == 1  # (B,) vector lengths
+        # Ring-buffer write for windowed layers, append otherwise. With
+        # per-row lengths each row writes at ITS own position (vmapped
+        # scatter) and masks against ITS own extent — pool neighbours of
+        # different lengths cannot leak into each other.
         write_at = (cache_len % slots) if window is not None else cache_len
-        kc = jax.lax.dynamic_update_slice(
-            cache["k"], kh, (0, 0, write_at, 0))
-        vc = jax.lax.dynamic_update_slice(
-            cache["v"], vh, (0, 0, write_at, 0))
+        if per_row:
+            row_update = jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(
+                    c, u, (0, p, 0)))
+            kc = row_update(cache["k"], kh, write_at)
+            vc = row_update(cache["v"], vh, write_at)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], kh, (0, 0, write_at, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], vh, (0, 0, write_at, 0))
         new_cache = {"k": kc, "v": vc}
         k_slot = jnp.arange(slots)
         if window is not None:
             # Recover absolute positions of ring slots.
             total = cache_len + S
-            wrap = (k_slot - (total % slots)) % slots
-            k_pos = total - slots + wrap
+            if per_row:
+                wrap = (k_slot[None] - (total[:, None] % slots)) % slots
+                k_pos = total[:, None] - slots + wrap       # (B, slots)
+            else:
+                wrap = (k_slot - (total % slots)) % slots
+                k_pos = total - slots + wrap
         else:
             k_pos = k_slot
 

@@ -76,7 +76,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
 
 
 def _body_fn(cfg: ModelConfig, x0, positions, cache_len, attn_impl, decode,
-             shared, attn_schedule="auto", unroll=False):
+             shared, attn_schedule="auto", ssm_impl=None, unroll=False):
     """Returns the lax.scan body over periods."""
 
     def body(carry, per_layer):
@@ -91,7 +91,7 @@ def _body_fn(cfg: ModelConfig, x0, positions, cache_len, attn_impl, decode,
                 params_sl[name], x, cfg, kind, shared=shared, x0=x0,
                 positions=positions, cache=cache, cache_len=cache_len,
                 attn_impl=attn_impl, attn_schedule=attn_schedule,
-                unroll=unroll)
+                ssm_impl=ssm_impl, unroll=unroll)
             aux = jax.tree.map(jnp.add, aux, a)
             if decode:
                 new_cache_sl[name] = new_c
@@ -111,6 +111,7 @@ def forward(
     cache_len: Optional[jax.Array] = None,
     attn_impl: Optional[str] = None,
     attn_schedule: str = "auto",
+    ssm_impl: Optional[str] = None,
     remat: bool = False,
     unroll: bool = False,
 ):
@@ -122,7 +123,11 @@ def forward(
 
     Returns final-norm hidden states — callers pick ``lm_logits`` (full) or
     the chunked loss below. With ``cache`` (decode), S is the new-token
-    count and ``cache_len`` the count of valid cache entries.
+    count and ``cache_len`` the count of valid cache entries — a scalar,
+    or a PER-ROW (B,) vector (the serve engine's heterogeneous pool:
+    each row gets its own positions and masking extent). ``ssm_impl``
+    overrides the SSM layers' scan route (``None`` keeps ``apply_ssm``'s
+    auto policy; the engine's degradation ladder forces ``"chunked"``).
     """
     x = embed_tokens(params, tokens, cfg)
     if embeds is not None:
@@ -130,14 +135,18 @@ def forward(
         x = jnp.concatenate([fe, x], axis=1)
     B, S, _ = x.shape
     if positions is None:
-        start = 0 if cache_len is None else cache_len
-        positions = start + jnp.arange(S)
+        if cache_len is not None and getattr(cache_len, "ndim", 0) == 1:
+            positions = cache_len[:, None] + jnp.arange(S)[None]  # (B, S)
+        else:
+            start = 0 if cache_len is None else cache_len
+            positions = start + jnp.arange(S)
     x = shard(x, "batch", "seq", "embed")
 
     decode = cache is not None
     shared = params.get("shared")
     body = _body_fn(cfg, x, positions, cache_len, attn_impl, decode, shared,
-                    attn_schedule=attn_schedule, unroll=unroll)
+                    attn_schedule=attn_schedule, ssm_impl=ssm_impl,
+                    unroll=unroll)
     if remat:
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.nothing_saveable)
@@ -223,12 +232,17 @@ def lm_loss(
 
 
 def decode_step(
-    params, tokens, cache, cache_len, cfg: ModelConfig, unroll: bool = False,
+    params, tokens, cache, cache_len, cfg: ModelConfig,
+    ssm_impl: Optional[str] = None, unroll: bool = False,
 ):
-    """One decode step: tokens (B, 1) + cache -> (logits (B, V), cache)."""
+    """One decode step: tokens (B, 1) + cache -> (logits (B, V), cache).
+
+    ``cache_len`` may be a scalar (homogeneous pool) or a (B,) vector of
+    per-row lengths (the serve engine's heterogeneous pool).
+    """
     hidden, _, new_cache = forward(
         params, tokens, cfg, cache=cache, cache_len=cache_len,
-        unroll=unroll)
+        ssm_impl=ssm_impl, unroll=unroll)
     logits = lm_logits(params, hidden[:, -1:], cfg)[:, 0]
     return logits, new_cache
 
@@ -236,7 +250,8 @@ def decode_step(
 def prefill(
     params, tokens, cfg: ModelConfig, max_len: int,
     embeds: Optional[jax.Array] = None, attn_impl: Optional[str] = None,
-    attn_schedule: str = "auto", unroll: bool = False,
+    attn_schedule: str = "auto", ssm_impl: Optional[str] = None,
+    unroll: bool = False,
 ):
     """Run the prompt through the model, returning (logits_last, cache).
 
@@ -248,6 +263,6 @@ def prefill(
     hidden, _, cache = forward(
         params, tokens, cfg, embeds=embeds, cache=cache,
         cache_len=jnp.zeros((), jnp.int32), attn_impl=attn_impl,
-        attn_schedule=attn_schedule, unroll=unroll)
+        attn_schedule=attn_schedule, ssm_impl=ssm_impl, unroll=unroll)
     logits = lm_logits(params, hidden[:, -1:], cfg)[:, 0]
     return logits, cache

@@ -1,6 +1,18 @@
-from repro.serve.engine import Engine, EngineConfig, Request
-from repro.serve.sampling import sample_logits
-from repro.serve.steps import make_prefill_fn, make_serve_step
+from repro.serve.engine import (AdmissionError, Engine, EngineConfig,
+                                EngineDeadlineError, EngineStepError,
+                                Request)
+from repro.serve.faults import (FaultInjector, FaultSpec, InjectedFault,
+                                StepContext)
+from repro.serve.sampling import finite_rows, sample_logits
+from repro.serve.stats import FINISH_REASONS, EngineStats
+from repro.serve.steps import (bucket_len, bucketable,
+                               make_bucketed_prefill_fn, make_prefill_fn,
+                               make_serve_step)
 
-__all__ = ["Engine", "EngineConfig", "Request", "make_prefill_fn",
-           "make_serve_step", "sample_logits"]
+__all__ = [
+    "AdmissionError", "Engine", "EngineConfig", "EngineDeadlineError",
+    "EngineStats", "EngineStepError", "FaultInjector", "FaultSpec",
+    "FINISH_REASONS", "InjectedFault", "Request", "StepContext",
+    "bucket_len", "bucketable", "finite_rows", "make_bucketed_prefill_fn",
+    "make_prefill_fn", "make_serve_step", "sample_logits",
+]

@@ -1,4 +1,4 @@
-"""Serving engine: continuous batching over a fixed slot pool.
+"""Serving engine: continuous batching over a fixed slot pool, hardened.
 
 vLLM-style scheduling reduced to its JAX-native core: a fixed decode batch
 of ``max_slots`` sequences; finished sequences free their slot; waiting
@@ -8,14 +8,53 @@ exclusive prefix sum over the free bitmap packs the free slot ids to the
 front, the paper's stream-compaction use case running the engine.
 
 The decode step is ONE jitted call for the whole pool (padded, masked);
-prefill is a second jitted call per admitted request batch. Caches are
-donated across decode steps.
+prefill is a second jitted call per admitted request batch. ``cache_len``
+is threaded as a per-row (B,) vector so each slot gets its own RoPE
+positions and masking extent — a row's output never depends on who else
+occupies the pool, which is what lets the chaos wall demand bitwise
+identity for undisturbed requests.
+
+Request lifecycle (this file's contract — see README "Serving under
+failure"): every submitted request terminates with exactly ONE
+``finish_reason`` from :data:`repro.serve.stats.FINISH_REASONS`; none is
+lost or duplicated. The hardening layers:
+
+  * admission control — bounded waiting queue with a reject-vs-block
+    policy; prompts that cannot fit (``S + budget > max_len`` under
+    ``strict_admission``) are failed fast as ``rejected`` instead of
+    silently corrupting the cache;
+  * deadlines — per-request tick TTLs finish overdue requests with
+    ``deadline``; host-side :meth:`Engine.cancel` finishes ``cancelled``;
+  * step-failure recovery — bookkeeping is only committed after a
+    successful tick; exceptions from the jitted step are retried with
+    backoff, then the active set is bisected with probe calls to
+    quarantine the poison request (finished ``error``) so one bad
+    sequence never takes down the pool;
+  * numeric degradation ladder — non-finite logits on any ACTIVE row
+    roll the tick back and re-run it once on the safe route (dense
+    attention, ``chunked`` reference scan); persistent non-finite ticks
+    are skipped (trainer NaN-guard parity) and eventually quarantined.
+
+By default the decode cache is NOT donated (``donate_cache=False``): the
+pre-tick cache stays alive so a rolled-back tick is a no-op. Donation
+(``donate_cache=True``) restores the zero-copy fast path but narrows
+recovery — when the pre-tick buffers are gone the engine adopts the
+written cache and skips the advance, which self-heals attention caches
+(next tick overwrites the same positions) but is documented lossy for
+recurrent (ssm/xlstm) state.
+
+Fault injection (``serve/faults.py``) hooks the two jitted entry points;
+the safe route is deliberately un-wrapped so the ladder escapes the
+injector the way a real fallback kernel escapes a broken primary one.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import time
+import warnings
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,10 +62,26 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.relational import compact as rel_compact
+from repro.serve.faults import StepContext
 from repro.serve.sampling import sample_logits
-from repro.serve.steps import init_cache_for, make_prefill_fn, make_serve_step
+from repro.serve.stats import FINISH_REASONS, EngineStats
+from repro.serve.steps import (bucket_len, bucketable, init_cache_for,
+                               make_bucketed_prefill_fn, make_prefill_fn,
+                               make_serve_step)
 
 Pytree = Any
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``submit(..., strict=True)`` when a request is rejected."""
+
+
+class EngineStepError(RuntimeError):
+    """A decode step failed unrecoverably (ambient / non-isolatable)."""
+
+
+class EngineDeadlineError(TimeoutError):
+    """``run_to_completion`` exhausted ``max_ticks`` under ``strict``."""
 
 
 @dataclasses.dataclass
@@ -44,26 +99,103 @@ class EngineConfig:
     # class lands on the split-KV decoupled form).
     attn_impl: Optional[str] = None
     attn_schedule: str = "auto"
+    # SSM decode route ("auto" | "chunked" | "kernel"); the degradation
+    # ladder's safe route always pins "chunked".
+    ssm_impl: str = "auto"
+
+    # -- admission ------------------------------------------------------
+    max_waiting: Optional[int] = None   # bound on the waiting queue
+    admission_policy: str = "reject"    # "reject" | "block" on full queue
+    strict_admission: bool = True       # reject S + budget > max_len
+    # -- deadlines ------------------------------------------------------
+    deadline_ticks: Optional[int] = None  # default per-request tick TTL
+    strict_deadlines: bool = False        # run_to_completion raises
+    # -- failure recovery ----------------------------------------------
+    max_step_retries: int = 2
+    retry_backoff_s: float = 0.0
+    # -- numeric ladder -------------------------------------------------
+    degrade_on_nonfinite: bool = True
+    max_consecutive_nan_ticks: int = 3
+    # -- cache / compile hygiene ----------------------------------------
+    donate_cache: bool = False          # True = fast path, narrower recovery
+    bucket_prompts: bool = True         # pad prompts to pow2 buckets
+    max_prefill_variants: int = 8       # LRU cap on jitted prefill shapes
+    slow_tick_s: Optional[float] = None  # wall-clock SLO; over -> slow_ticks
+
+    def __post_init__(self):
+        if self.admission_policy not in ("reject", "block"):
+            raise ValueError(
+                f"admission_policy must be 'reject' or 'block', "
+                f"got {self.admission_policy!r}")
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: np.ndarray             # (S,) int32
+    prompt: np.ndarray                    # (S,) int32
     max_new_tokens: Optional[int] = None
+    deadline_ticks: Optional[int] = None  # overrides EngineConfig TTL
     # filled by the engine:
     output: Optional[list] = None
-    done: bool = False
+    finish_reason: Optional[str] = None   # one of FINISH_REASONS when done
+    error: Optional[str] = None           # detail for error/rejected
+    submit_tick: int = -1
+    finish_tick: int = -1
+    degraded: bool = False                # served (partly) on the safe route
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+
+# Step fns are memoized globally: ``ModelConfig`` is a frozen (hashable)
+# dataclass, so engines sharing an architecture share ONE jitted step and
+# its traced executables instead of recompiling per Engine (the chaos
+# wall builds a dozen engines over the same tiny model).
+_STEP_JIT: Dict[tuple, Any] = {}
+
+
+def _jit_step(cfg: ModelConfig, ssm_impl: Optional[str], donate: bool):
+    key = (cfg, ssm_impl, donate)
+    if key not in _STEP_JIT:
+        fn = make_serve_step(cfg, ssm_impl=ssm_impl)
+        _STEP_JIT[key] = (jax.jit(fn, donate_argnums=(2,)) if donate
+                          else jax.jit(fn))
+    return _STEP_JIT[key]
 
 
 class Engine:
-    def __init__(self, params: Pytree, cfg: ModelConfig, ecfg: EngineConfig):
+    def __init__(self, params: Pytree, cfg: ModelConfig, ecfg: EngineConfig,
+                 injector: Any = None):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
-        self.serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
-        self._prefill_cache = {}
+        self.injector = injector
+        self.stats = EngineStats()
         self.key = jax.random.PRNGKey(ecfg.seed)
+
+        ssm_primary = None if ecfg.ssm_impl == "auto" else ecfg.ssm_impl
+        self._step = _jit_step(cfg, ssm_primary, donate=ecfg.donate_cache)
+        self._step_nodonate = _jit_step(cfg, ssm_primary, donate=False)
+        # The SAFE route: dense attention (decode is dense already) and
+        # the jnp reference scan for SSM layers; never injector-wrapped.
+        self._step_safe = _jit_step(cfg, "chunked", donate=False)
+        self._wstep = (injector.wrap_step(self._step) if injector
+                       else self._step)
+        self._wstep_probe = (injector.wrap_step(self._step_nodonate)
+                             if injector else self._step_nodonate)
+        # Whether the safe route changes numerics vs the primary one.
+        has_recurrent = any(k in ("mamba", "mlstm", "slstm")
+                            for k in cfg.layer_pattern)
+        self._prefill_safe_differs = ecfg.attn_impl is not None or (
+            has_recurrent and ecfg.ssm_impl == "kernel")
+        self._decode_safe_differs = (
+            has_recurrent and ecfg.ssm_impl == "kernel")
+
+        self._bucketed = (ecfg.bucket_prompts and bucketable(cfg))
+        self._prefill_cache: "OrderedDict[tuple, Any]" = OrderedDict()
+        self._tick = 0
+        self._nan_streak = 0
 
         B, L = ecfg.max_slots, ecfg.max_len
         self.cache = init_cache_for(cfg, B, L)
@@ -89,21 +221,102 @@ class Engine:
         ranks = np.cumsum(free) - free
         return np.asarray(slots)[: int(count)], ranks
 
+    # -- lifecycle ------------------------------------------------------
+    def _finish(self, req: Request, reason: str,
+                error: Optional[str] = None) -> None:
+        """The ONLY way a request terminates: exactly one finish reason."""
+        assert req.finish_reason is None, (
+            f"request {req.rid} finished twice: "
+            f"{req.finish_reason!r} then {reason!r}")
+        assert reason in FINISH_REASONS
+        req.finish_reason = reason
+        req.error = error
+        req.finish_tick = self._tick
+        self.stats.record_finish(reason)
+        self.finished.append(req)
+
+    def _budget_of(self, req: Request) -> int:
+        return (req.max_new_tokens if req.max_new_tokens is not None
+                else self.ecfg.max_new_tokens)
+
     # -- admission ------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, strict: bool = False) -> bool:
+        """Queue a request. Returns False (or raises under ``strict``)
+        when admission control rejects it — the request is then already
+        finished with ``finish_reason="rejected"``."""
+        self.stats.submitted += 1
         req.output = []
+        req.submit_tick = self._tick
+        reason = self._validate(req)
+        if reason is None and self.ecfg.max_waiting is not None:
+            if self.ecfg.admission_policy == "block":
+                # Drive the engine until the queue drains below the bound
+                # (single-threaded stand-in for a blocking producer).
+                guard = 0
+                while (len(self.waiting) >= self.ecfg.max_waiting
+                       and guard < 100_000):
+                    if self.step() == 0 and not self.waiting:
+                        break
+                    guard += 1
+            if len(self.waiting) >= self.ecfg.max_waiting:
+                reason = (f"waiting queue full "
+                          f"({len(self.waiting)}/{self.ecfg.max_waiting})")
+        if reason is not None:
+            self._finish(req, "rejected", error=reason)
+            if strict:
+                raise AdmissionError(f"request {req.rid}: {reason}")
+            return False
         self.waiting.append(req)
+        self.stats.observe_queue(len(self.waiting))
+        return True
+
+    def _validate(self, req: Request) -> Optional[str]:
+        S = int(np.asarray(req.prompt).shape[0])
+        budget = self._budget_of(req)
+        if S < 1:
+            return "empty prompt"
+        if budget < 1:
+            return f"max_new_tokens={budget} < 1"
+        if S + 1 > self.ecfg.max_len:
+            return (f"prompt length {S} cannot fit max_len="
+                    f"{self.ecfg.max_len}")
+        if self.ecfg.strict_admission and S + budget > self.ecfg.max_len:
+            return (f"prompt {S} + budget {budget} > max_len="
+                    f"{self.ecfg.max_len} cannot complete")
+        return None
+
+    def cancel(self, rid: int) -> bool:
+        """Host-side cancel: finishes the request with ``cancelled``."""
+        for i, req in enumerate(self.waiting):
+            if req.rid == rid:
+                self.waiting.pop(i)
+                self._finish(req, "cancelled")
+                self.stats.observe_queue(len(self.waiting))
+                return True
+        for slot, req in enumerate(self.slot_req):
+            if req is not None and req.rid == rid:
+                self._release(slot)
+                self._finish(req, "cancelled")
+                return True
+        return False
+
+    def _release(self, slot: int) -> None:
+        self.slot_req[slot] = None
+        self.lengths[slot] = 0
+        self.budgets[slot] = 0
 
     def _admit(self) -> None:
         free_idx, _ = self._free_slots()
         while self.waiting and len(free_idx):
             slot = int(free_idx[0])
-            free_idx = free_idx[1:]
             req = self.waiting.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            S = prompt.shape[1]
-            pf = self._prefill_for(S)
-            logits, cache1 = pf(self.params, prompt)
+            self.stats.observe_queue(len(self.waiting))
+            self.stats.admitted += 1
+            out = self._prefill_request(req)
+            if out is None:
+                continue                      # finished "error" inside
+            logits, cache1 = out
+            free_idx = free_idx[1:]
             # Copy the single-row prefill cache into the pool at `slot`
             # (cache leaves are (layers, batch, ...); prefill batch = 1).
             self.cache = jax.tree.map(
@@ -112,23 +325,109 @@ class Engine:
                 self.cache, cache1)
             first = self._sample(logits)[0]
             req.output.append(int(first))
-            budget = (req.max_new_tokens or self.ecfg.max_new_tokens) - 1
-            if budget <= 0 or int(first) == self.ecfg.eos_id:
-                req.done = True          # prefill token exhausted the budget
-                self.finished.append(req)
+            self.stats.tokens_generated += 1
+            S = int(np.asarray(req.prompt).shape[0])
+            budget = self._budget_of(req) - 1
+            if int(first) == self.ecfg.eos_id:
+                self._finish(req, "eos")
+                continue
+            if budget <= 0:
+                self._finish(req, "length_budget")
+                continue
+            if S + 1 >= self.ecfg.max_len:
+                self._warn_cache_full(req)
+                self._finish(req, "cache_full")
                 continue
             self.tokens = self.tokens.at[slot, 0].set(first)
             self.lengths[slot] = S
             self.budgets[slot] = budget
             self.slot_req[slot] = req
 
-    def _prefill_for(self, S: int):
-        if S not in self._prefill_cache:
-            self._prefill_cache[S] = jax.jit(
-                make_prefill_fn(self.cfg, self.ecfg.max_len,
-                                attn_impl=self.ecfg.attn_impl,
-                                attn_schedule=self.ecfg.attn_schedule))
-        return self._prefill_cache[S]
+    def _prefill_request(self, req: Request):
+        """Run prefill for one request with retry + degrade. Returns
+        ``(logits, cache)`` or None after finishing the request."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        S = prompt.shape[1]
+        fn, padded, extra = self._prefill_call(prompt, int(S))
+        last_err: Optional[BaseException] = None
+        for attempt in range(self.ecfg.max_step_retries + 1):
+            if self.injector is not None:
+                self.injector.begin(StepContext(
+                    tick=self._tick, rids=(req.rid,), op="prefill"))
+            try:
+                out = fn(self.params, padded, *extra)
+                logits = out[0]
+                if np.isfinite(np.asarray(logits)).all():
+                    return logits, out[1]
+                self.stats.nonfinite_ticks += 1
+                last_err = FloatingPointError("non-finite prefill logits")
+            except Exception as e:            # noqa: BLE001 — jitted call
+                last_err = e
+            if attempt < self.ecfg.max_step_retries:
+                self.stats.prefill_retries += 1
+                if self.ecfg.retry_backoff_s:
+                    time.sleep(self.ecfg.retry_backoff_s * (attempt + 1))
+        # Primary route exhausted -> safe route (un-wrapped, reference
+        # impls). Mark the request degraded only if the numerics differ.
+        if self.ecfg.degrade_on_nonfinite or not isinstance(
+                last_err, FloatingPointError):
+            try:
+                sfn = self._prefill_for(int(S), safe=True)
+                logits, cache1 = sfn(self.params, prompt)
+                if np.isfinite(np.asarray(logits)).all():
+                    self.stats.degradations += 1
+                    if self._prefill_safe_differs or self._bucketed:
+                        req.degraded = True
+                    return logits, cache1
+                last_err = FloatingPointError(
+                    "non-finite prefill logits on safe route")
+            except Exception as e:            # noqa: BLE001
+                last_err = e
+        self._finish(req, "error", error=f"prefill failed: {last_err!r}")
+        return None
+
+    def _prefill_call(self, prompt: jax.Array, S: int):
+        """Pick the primary prefill callable + its padded inputs."""
+        if self._bucketed:
+            Sb = bucket_len(S, self.ecfg.max_len)
+            fn = self._prefill_for(Sb, bucketed=True)
+            padded = jnp.pad(prompt, ((0, 0), (0, Sb - S)))
+            return fn, padded, (jnp.asarray(S, jnp.int32),)
+        return self._prefill_for(S), prompt, ()
+
+    def _prefill_for(self, S: int, bucketed: bool = False,
+                     safe: bool = False):
+        """LRU-capped per-shape jitted prefill. With bucketing, distinct
+        shapes grow as log2(max_len) instead of one per prompt length;
+        the LRU cap bounds live executables either way."""
+        key = (S, bucketed, safe)
+        if key in self._prefill_cache:
+            self._prefill_cache.move_to_end(key)
+            return self._prefill_cache[key]
+        if safe:
+            fn = jax.jit(make_prefill_fn(
+                self.cfg, self.ecfg.max_len, attn_impl=None,
+                ssm_impl="chunked"))
+        elif bucketed:
+            fn = jax.jit(make_bucketed_prefill_fn(
+                self.cfg, self.ecfg.max_len,
+                attn_impl=self.ecfg.attn_impl,
+                attn_schedule=self.ecfg.attn_schedule))
+        else:
+            fn = jax.jit(make_prefill_fn(
+                self.cfg, self.ecfg.max_len,
+                attn_impl=self.ecfg.attn_impl,
+                attn_schedule=self.ecfg.attn_schedule))
+        if self.injector is not None and not safe:
+            # injector.begin() is issued per-attempt in _prefill_request;
+            # wrapping here keeps one wrapper per cached variant.
+            fn = self.injector.wrap_prefill(fn)
+        self._prefill_cache[key] = fn
+        self.stats.prefill_compiles += 1
+        while len(self._prefill_cache) > self.ecfg.max_prefill_variants:
+            self._prefill_cache.popitem(last=False)
+            self.stats.prefill_cache_evictions += 1
+        return self._prefill_cache[key]
 
     def _sample(self, logits: jax.Array) -> jax.Array:
         self.key, sub = jax.random.split(self.key)
@@ -136,17 +435,76 @@ class Engine:
                              self.ecfg.top_p)
 
     # -- decode ---------------------------------------------------------
+    def _active(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _ctx(self, active: List[int], op: str = "step"):
+        rows = {self.slot_req[i].rid: i for i in active}
+        return StepContext(tick=self._tick, rids=tuple(rows), op=op,
+                           rows=rows)
+
+    def _expire_deadlines(self) -> None:
+        ttl_default = self.ecfg.deadline_ticks
+        for req in list(self.waiting):
+            ttl = (req.deadline_ticks if req.deadline_ticks is not None
+                   else ttl_default)
+            if ttl is not None and self._tick - req.submit_tick >= ttl:
+                self.waiting.remove(req)
+                self._finish(req, "deadline")
+        self.stats.observe_queue(len(self.waiting))
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            ttl = (req.deadline_ticks if req.deadline_ticks is not None
+                   else ttl_default)
+            if ttl is not None and self._tick - req.submit_tick >= ttl:
+                self._release(slot)
+                self._finish(req, "deadline")
+
     def step(self) -> int:
-        """One engine tick: admit waiting, decode one token for all active.
-        Returns the number of active slots."""
+        """One engine tick: expire deadlines, admit waiting, decode one
+        token for every active slot. Returns the number of active slots
+        the tick operated on. Bookkeeping commits only on success — a
+        failed or non-finite tick leaves the pool exactly as it was."""
+        t0 = time.perf_counter()
+        self._tick += 1
+        self.stats.ticks += 1
+        self._expire_deadlines()
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        active = self._active()
         if not active:
             return 0
-        cache_len = jnp.asarray(int(max(self.lengths[i] for i in active)),
-                                jnp.int32)
-        logits, self.cache = self.serve_step(
-            self.params, self.tokens, self.cache, cache_len)
+        result = self._robust_step(active)
+        if result is None:                     # pool emptied by quarantine
+            return 0
+        logits, new_cache, active = result
+
+        # -- numeric degradation ladder --------------------------------
+        logits_np = np.asarray(logits)
+        if not np.isfinite(logits_np[active]).all():
+            self.stats.nonfinite_ticks += 1
+            handled = False
+            if self.ecfg.degrade_on_nonfinite and not self._pre_cache_gone():
+                # One rung down: re-run THIS tick on the safe route
+                # (never injector-wrapped). For pure-attention decode the
+                # math is identical, so the rerun is bitwise lossless.
+                self.stats.degradations += 1
+                s_logits, s_cache = self._step_safe(
+                    self.params, self.tokens, self.cache,
+                    self._cache_len_vec())
+                s_np = np.asarray(s_logits)
+                if np.isfinite(s_np[active]).all():
+                    logits, new_cache, logits_np = s_logits, s_cache, s_np
+                    if self._decode_safe_differs:
+                        for i in active:
+                            self.slot_req[i].degraded = True
+                    handled = True
+            if not handled:
+                return self._skip_tick(active, logits_np, new_cache, t0)
+        self._nan_streak = 0
+
+        # -- commit ----------------------------------------------------
+        self.cache = new_cache
         nxt = self._sample(logits)
         nxt_np = np.asarray(nxt)
         new_tokens = self.tokens
@@ -154,26 +512,214 @@ class Engine:
             req = self.slot_req[i]
             tok = int(nxt_np[i])
             req.output.append(tok)
+            self.stats.tokens_generated += 1
             self.lengths[i] += 1
             self.budgets[i] -= 1
-            hit_eos = tok == self.ecfg.eos_id
-            out_of_budget = self.budgets[i] <= 0
-            out_of_cache = self.lengths[i] + 1 >= self.ecfg.max_len
-            if hit_eos or out_of_budget or out_of_cache:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[i] = None
+            if tok == self.ecfg.eos_id:
+                reason = "eos"
+            elif self.budgets[i] <= 0:
+                reason = "length_budget"
+            elif self.lengths[i] + 1 >= self.ecfg.max_len:
+                reason = "cache_full"
+                self._warn_cache_full(req)
             else:
                 new_tokens = new_tokens.at[i, 0].set(tok)
+                continue
+            self._release(i)
+            self._finish(req, reason)
         self.tokens = new_tokens
+        if (self.ecfg.slow_tick_s is not None
+                and time.perf_counter() - t0 > self.ecfg.slow_tick_s):
+            self.stats.slow_ticks += 1
         return len(active)
 
-    def run_to_completion(self, max_ticks: int = 10_000) -> list[Request]:
+    def _cache_len_vec(self) -> jax.Array:
+        """Per-row cache lengths: inactive rows are 0 (fully masked under
+        the zeroed-probability convention, so they never emit NaN)."""
+        return jnp.asarray(self.lengths, jnp.int32)
+
+    def _pre_cache_gone(self) -> bool:
+        """Under donation the pre-tick cache buffers may be consumed."""
+        if not self.ecfg.donate_cache:
+            return False
+        leaf = jax.tree.leaves(self.cache)[0]
+        return getattr(leaf, "is_deleted", lambda: False)()
+
+    def _skip_tick(self, active, logits_np, new_cache, t0) -> int:
+        """Roll the tick back (trainer NaN-guard parity): nothing
+        advances. Persistent non-finite ticks quarantine the offending
+        rows so the pool stays live."""
+        self.stats.skipped_ticks += 1
+        self._nan_streak += 1
+        if self._pre_cache_gone():
+            # Donated fast path: pre-tick cache is gone, adopt the
+            # written one. Attention caches self-heal (next tick rewrites
+            # the same positions); recurrent state is documented lossy.
+            self.cache = new_cache
+        if self._nan_streak > self.ecfg.max_consecutive_nan_ticks:
+            bad = [i for i in active
+                   if not np.isfinite(logits_np[i]).all()]
+            for i in bad:
+                req = self.slot_req[i]
+                self._release(i)
+                self._finish(req, "error",
+                             error=f"non-finite logits for "
+                                   f"{self._nan_streak} consecutive ticks")
+                self.stats.quarantined += 1
+            self._nan_streak = 0
+        if (self.ecfg.slow_tick_s is not None
+                and time.perf_counter() - t0 > self.ecfg.slow_tick_s):
+            self.stats.slow_ticks += 1
+        return len(active)
+
+    def _warn_cache_full(self, req: Request) -> None:
+        warnings.warn(
+            f"request {req.rid} ran out of KV cache (max_len="
+            f"{self.ecfg.max_len}) before its token budget; finishing "
+            f"with finish_reason='cache_full'", RuntimeWarning,
+            stacklevel=3)
+
+    # -- step-failure recovery -----------------------------------------
+    def _robust_step(self, active: List[int]):
+        """Run the wrapped decode step with retries; on persistent
+        failure bisect the active set and quarantine the poison request.
+        Returns ``(logits, new_cache, active)`` or None if the pool
+        emptied."""
+        attempts = 0
+        transient_resets = 0
+        last_err: Optional[BaseException] = None
+        for _ in range(4 * self.ecfg.max_slots + 8):
+            clv = self._cache_len_vec()   # fresh: quarantine edits lengths
+            if self.injector is not None:
+                self.injector.begin(self._ctx(active))
+            try:
+                logits, new_cache = self._wstep(
+                    self.params, self.tokens, self.cache, clv)
+                return logits, new_cache, active
+            except Exception as e:            # noqa: BLE001 — jitted call
+                last_err = e
+            attempts += 1
+            if attempts <= self.ecfg.max_step_retries:
+                self.stats.step_retries += 1
+                if self.ecfg.retry_backoff_s:
+                    time.sleep(self.ecfg.retry_backoff_s * attempts)
+                continue
+            poison = self._bisect(active, clv)
+            if poison is None:
+                raise EngineStepError(
+                    f"decode step failing with no active request "
+                    f"implicated (ambient fault): {last_err!r}"
+                ) from last_err
+            if not poison:
+                # Not reproducible in probes: transient that outlived the
+                # retry budget. Allow one fresh retry round, then give up.
+                transient_resets += 1
+                if transient_resets > 1:
+                    raise EngineStepError(
+                        f"decode step failed after retries and probes "
+                        f"could not reproduce it: {last_err!r}"
+                    ) from last_err
+                attempts = 0
+                continue
+            for slot in poison:
+                req = self.slot_req[slot]
+                self._release(slot)
+                self._finish(req, "error",
+                             error=f"quarantined by step-failure "
+                                   f"bisection: {last_err!r}")
+                self.stats.quarantined += 1
+            active = self._active()
+            if not active:
+                return None
+            attempts = 0
+        raise EngineStepError(
+            f"decode step recovery did not converge: {last_err!r}"
+        ) from last_err
+
+    def _probe(self, subset: List[int], clv) -> bool:
+        """Re-issue the step as if only ``subset`` participated (the
+        injector keys poison faults on participating rids). Non-donating,
+        results discarded: a successful probe has no side effects."""
+        self.stats.probes += 1
+        if self.injector is not None:
+            self.injector.begin(self._ctx(subset))
+        try:
+            self._wstep_probe(self.params, self.tokens, self.cache, clv)
+            return True
+        except Exception:                      # noqa: BLE001
+            return False
+
+    def _bisect(self, active: List[int], clv) -> Optional[List[int]]:
+        """Binary-search the failing subset. Returns the poison slots,
+        [] when the failure won't reproduce (transient), or None when it
+        reproduces with NO requests implicated (ambient)."""
+        if not self._probe([], clv):
+            return None
+        cands = list(active)
+        while len(cands) > 1:
+            mid = len(cands) // 2
+            lo, hi = cands[:mid], cands[mid:]
+            if not self._probe(lo, clv):
+                cands = lo
+            elif not self._probe(hi, clv):
+                cands = hi
+            else:
+                # Only the combination fails: not separable — quarantine
+                # the whole candidate set rather than deadlock the pool.
+                return cands
+        if not self._probe(cands, clv):        # confirm the singleton
+            return cands
+        return []
+
+    # -- driving --------------------------------------------------------
+    def run_to_completion(self, max_ticks: int = 10_000,
+                          strict: Optional[bool] = None) -> list[Request]:
+        """Drive ticks until every request finished. Exhausting
+        ``max_ticks`` with work still pending raises under ``strict``
+        (default ``EngineConfig.strict_deadlines``) or finishes the
+        survivors with ``finish_reason="deadline"``."""
+        strict = self.ecfg.strict_deadlines if strict is None else strict
         for _ in range(max_ticks):
             if not self.waiting and all(r is None for r in self.slot_req):
                 break
             self.step()
+        else:
+            survivors = (len(self.waiting)
+                         + sum(r is not None for r in self.slot_req))
+            if survivors:
+                if strict:
+                    raise EngineDeadlineError(
+                        f"run_to_completion exhausted max_ticks="
+                        f"{max_ticks} with {survivors} request(s) "
+                        f"unfinished")
+                for req in list(self.waiting):
+                    self.waiting.remove(req)
+                    self._finish(req, "deadline")
+                for slot, req in enumerate(self.slot_req):
+                    if req is not None:
+                        self._release(slot)
+                        self._finish(req, "deadline")
         return self.finished
+
+    # -- invariants -----------------------------------------------------
+    def audit(self) -> dict:
+        """Lifecycle invariants the chaos wall asserts. Raises
+        AssertionError on violation; returns a summary dict."""
+        fin = [r.rid for r in self.finished]
+        assert len(fin) == len(set(fin)), f"duplicate finished rids: {fin}"
+        for req in self.finished:
+            assert req.finish_reason in FINISH_REASONS, (
+                f"request {req.rid} finished with invalid reason "
+                f"{req.finish_reason!r}")
+        live = ([r.rid for r in self.waiting]
+                + [r.rid for r in self.slot_req if r is not None])
+        assert not (set(fin) & set(live)), (
+            f"rids both finished and live: {set(fin) & set(live)}")
+        for req in self.waiting:
+            assert req.finish_reason is None
+        assert self.stats.total_finished == len(self.finished)
+        return {"finished": len(fin), "live": len(live),
+                "stats": self.stats.as_dict()}
 
 
 def _scatter_row(pool: jax.Array, one: jax.Array, slot: int) -> jax.Array:

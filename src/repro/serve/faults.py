@@ -1,0 +1,186 @@
+"""Seeded, deterministic fault injection for the serve engine.
+
+The injector wraps the engine's jitted ``serve_step``/``prefill``
+callables and fires synthetic failures on a schedule:
+
+  * ``error`` — raise :class:`InjectedFault` *before* the real call (so
+    device buffers are never consumed — the shape a dispatch failure or
+    preempted host takes from the engine's point of view);
+  * ``nan``   — run the real call, then poison the returned logits with
+    NaN (all rows, or just the targeted request's row) — the shape a
+    numeric blowup takes;
+  * ``stall`` — sleep ``stall_s`` before the real call — the straggler
+    shape.
+
+Targeting is by engine tick (``tick`` = first eligible tick), by request
+(``rid`` — fires only while that request participates in the call: the
+*poison request* the engine's bisection quarantine must isolate), and by
+op (``step`` | ``prefill`` | ``any``). ``count`` bounds total firings
+(``None`` = unlimited — poison semantics); a spec with ``count=1`` is a
+transient fault the engine's retry clears.
+
+Everything is deterministic: explicit spec lists, or
+:meth:`FaultInjector.from_seed` which expands a numpy ``default_rng``
+stream into a spec list — the chaos wall replays the same schedule into
+fault-free and faulted runs and asserts bitwise-identical outputs for
+undisturbed requests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Synthetic failure raised by the injector (never by real code)."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    kind: str                    # "error" | "nan" | "stall"
+    op: str = "step"             # "step" | "prefill" | "any"
+    tick: Optional[int] = None   # first engine tick eligible (None = any)
+    rid: Optional[int] = None    # fire only while this rid participates
+    count: Optional[int] = 1     # firing budget (None = unlimited)
+    stall_s: float = 0.0         # sleep for "stall" faults
+
+    def __post_init__(self):
+        if self.kind not in ("error", "nan", "stall"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.op not in ("step", "prefill", "any"):
+            raise ValueError(f"unknown fault op {self.op!r}")
+
+
+@dataclasses.dataclass
+class StepContext:
+    """What the engine tells the injector about the call it is making."""
+
+    tick: int
+    rids: Tuple[int, ...]
+    op: str                                  # "step" | "prefill"
+    rows: Optional[Dict[int, int]] = None    # rid -> batch row (step calls)
+
+
+class FaultInjector:
+    def __init__(self, specs: Sequence[FaultSpec]):
+        self.specs = list(specs)
+        self._fired = [0] * len(self.specs)
+        #: (tick, op, rids, kind, spec_index) per firing — audit trail.
+        self.log: list[tuple] = []
+        self._ctx: Optional[StepContext] = None
+        self._calls = 0
+
+    # -- schedule construction -----------------------------------------
+    @classmethod
+    def from_seed(
+        cls,
+        seed: int,
+        ticks: int = 64,
+        p_error: float = 0.05,
+        p_nan: float = 0.05,
+        p_stall: float = 0.0,
+        stall_s: float = 0.005,
+        poison_rids: Sequence[int] = (),
+    ) -> "FaultInjector":
+        """Deterministic random plan: at most one transient fault per
+        tick, plus persistent poison specs for ``poison_rids``."""
+        rng = np.random.default_rng(seed)
+        specs: list[FaultSpec] = []
+        for t in range(ticks):
+            r = float(rng.random())
+            if r < p_error:
+                specs.append(FaultSpec("error", op="any", tick=t, count=1))
+            elif r < p_error + p_nan:
+                specs.append(FaultSpec("nan", op="step", tick=t, count=1))
+            elif r < p_error + p_nan + p_stall:
+                specs.append(FaultSpec("stall", op="any", tick=t, count=1,
+                                       stall_s=stall_s))
+        for rid in poison_rids:
+            specs.append(FaultSpec("error", op="step", rid=int(rid),
+                                   count=None))
+        return cls(specs)
+
+    # -- engine protocol ------------------------------------------------
+    def begin(self, ctx: StepContext) -> None:
+        """Set the context for the next wrapped call (engine-side)."""
+        self._ctx = ctx
+
+    def fired_count(self, kind: Optional[str] = None) -> int:
+        return sum(
+            n for n, s in zip(self._fired, self.specs)
+            if kind is None or s.kind == kind
+        )
+
+    # -- matching -------------------------------------------------------
+    def _take(self, ctx: StepContext, kind: str) -> list[FaultSpec]:
+        hits = []
+        for i, spec in enumerate(self.specs):
+            if spec.kind != kind:
+                continue
+            if spec.op != "any" and spec.op != ctx.op:
+                continue
+            if spec.tick is not None and ctx.tick < spec.tick:
+                continue
+            if spec.count is not None and self._fired[i] >= spec.count:
+                continue
+            if spec.rid is not None and spec.rid not in ctx.rids:
+                continue
+            self._fired[i] += 1
+            self.log.append((ctx.tick, ctx.op, ctx.rids, spec.kind, i))
+            hits.append(spec)
+        return hits
+
+    def _resolve_ctx(self, op: str) -> StepContext:
+        ctx = self._ctx
+        if ctx is None:  # standalone use: count wrapped calls as ticks
+            ctx = StepContext(tick=self._calls, rids=(), op=op)
+        self._ctx = None
+        self._calls += 1
+        return ctx
+
+    def _pre(self, ctx: StepContext) -> None:
+        for spec in self._take(ctx, "stall"):
+            if spec.stall_s > 0:
+                time.sleep(spec.stall_s)
+        errors = self._take(ctx, "error")
+        if errors:
+            raise InjectedFault(
+                f"injected {ctx.op} error at tick {ctx.tick} "
+                f"(rids={ctx.rids})")
+
+    def _post(self, ctx: StepContext, logits):
+        for spec in self._take(ctx, "nan"):
+            if spec.rid is not None and ctx.rows and spec.rid in ctx.rows:
+                row = ctx.rows[spec.rid]
+                logits = logits.at[row].set(jnp.nan)
+            else:
+                logits = jnp.full_like(logits, jnp.nan)
+        return logits
+
+    # -- wrappers -------------------------------------------------------
+    def wrap_step(self, fn):
+        """Wrap ``(params, tokens, cache, cache_len) -> (logits, cache)``."""
+
+        def wrapped(params, tokens, cache, cache_len):
+            ctx = self._resolve_ctx("step")
+            self._pre(ctx)
+            logits, new_cache = fn(params, tokens, cache, cache_len)
+            return self._post(ctx, logits), new_cache
+
+        return wrapped
+
+    def wrap_prefill(self, fn):
+        """Wrap ``(params, tokens, *rest) -> (logits, cache, ...)``."""
+
+        def wrapped(params, tokens, *rest):
+            ctx = self._resolve_ctx("prefill")
+            self._pre(ctx)
+            out = fn(params, tokens, *rest)
+            return (self._post(ctx, out[0]),) + tuple(out[1:])
+
+        return wrapped

@@ -10,13 +10,27 @@ import jax.numpy as jnp
 from repro.core import scan as scanlib
 
 
+def finite_rows(logits: jax.Array) -> jax.Array:
+    """(B, V) -> (B,) bool: rows safe to sample from. The engine's
+    degradation ladder gates on this before any sampling touches the
+    logits — NaN rows reaching ``jax.random.categorical`` would emit
+    valid-looking but meaningless token ids."""
+    return jnp.isfinite(logits).all(axis=-1)
+
+
 def sample_logits(
     key: jax.Array,
     logits: jax.Array,                  # (B, V) f32
     temperature: float = 1.0,
     top_p: float = 1.0,
 ) -> jax.Array:
-    """Sample token ids (B,) with temperature + nucleus (top-p)."""
+    """Sample token ids (B,) with temperature + nucleus (top-p).
+
+    NaN logits are mapped to -inf so an isolated poisoned entry cannot
+    silently win the argmax or leak probability mass into the nucleus
+    (all-NaN rows are the engine ladder's job, see :func:`finite_rows`).
+    """
+    logits = jnp.where(jnp.isnan(logits), -jnp.inf, logits)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature

@@ -1,0 +1,89 @@
+"""Engine health surface: counters for the serve request lifecycle.
+
+``EngineStats`` is the single place the hardened engine records what
+happened to traffic — admissions, rejections, finishes by reason,
+step retries, bisection probes, quarantines, numeric degradations,
+skipped (rolled-back) ticks, prefill compiles — so operators (and the
+chaos tests) can assert liveness invariants without scraping logs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+#: The request terminal states. Every submitted request ends with exactly
+#: one of these on ``Request.finish_reason`` (the chaos wall's invariant).
+FINISH_REASONS = (
+    "eos",            # sampled the eos token
+    "length_budget",  # generated its max_new_tokens budget
+    "cache_full",     # ran out of KV-cache slots before its budget (warned)
+    "deadline",       # tick TTL expired (per-request or run_to_completion)
+    "rejected",       # failed admission (cannot fit / queue full)
+    "error",          # quarantined by step-failure recovery, or prefill died
+    "cancelled",      # host-side cancel(rid)
+)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Monotonic counters plus current queue gauges."""
+
+    # -- traffic -------------------------------------------------------
+    ticks: int = 0                 # engine steps attempted
+    submitted: int = 0             # submit() calls (incl. rejected)
+    admitted: int = 0              # prefills attempted into a slot
+    tokens_generated: int = 0      # sampled tokens appended to outputs
+    finished: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    # -- queue ---------------------------------------------------------
+    queue_depth: int = 0           # waiting requests right now
+    peak_queue_depth: int = 0
+
+    # -- failure recovery ----------------------------------------------
+    step_retries: int = 0          # failed decode-step attempts retried
+    prefill_retries: int = 0       # failed prefill attempts retried
+    probes: int = 0                # bisection probe calls
+    quarantined: int = 0           # requests finished "error" by bisection
+
+    # -- numeric degradation ladder -------------------------------------
+    nonfinite_ticks: int = 0       # ticks whose logits came back non-finite
+    degradations: int = 0          # re-runs on the degraded (reference) route
+    skipped_ticks: int = 0         # ticks rolled back without advancing
+
+    # -- perf / compile hygiene -----------------------------------------
+    prefill_compiles: int = 0      # distinct prefill variants jitted
+    prefill_cache_evictions: int = 0
+    slow_ticks: int = 0            # wall time above EngineConfig.slow_tick_s
+
+    def record_finish(self, reason: str) -> None:
+        if reason not in FINISH_REASONS:
+            raise ValueError(f"unknown finish reason {reason!r}; "
+                             f"one of {FINISH_REASONS}")
+        self.finished[reason] = self.finished.get(reason, 0) + 1
+
+    def observe_queue(self, depth: int) -> None:
+        self.queue_depth = depth
+        self.peak_queue_depth = max(self.peak_queue_depth, depth)
+
+    @property
+    def total_finished(self) -> int:
+        return sum(self.finished.values())
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["total_finished"] = self.total_finished
+        return d
+
+    def summary(self) -> str:
+        fin = " ".join(f"{k}={v}" for k, v in sorted(self.finished.items()))
+        return (
+            f"ticks={self.ticks} submitted={self.submitted} "
+            f"admitted={self.admitted} tokens={self.tokens_generated} "
+            f"finished[{fin}] retries={self.step_retries} "
+            f"probes={self.probes} quarantined={self.quarantined} "
+            f"degradations={self.degradations} "
+            f"skipped={self.skipped_ticks} "
+            f"prefill_compiles={self.prefill_compiles} "
+            f"peak_queue={self.peak_queue_depth}"
+        )

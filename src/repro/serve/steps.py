@@ -25,8 +25,15 @@ from repro.models.config import ModelConfig
 Pytree = Any
 
 
-def make_serve_step(cfg: ModelConfig, unroll: bool = False):
-    """(params, tokens (B,1), cache, cache_len ()) -> (logits, new_cache)."""
+def make_serve_step(cfg: ModelConfig, unroll: bool = False,
+                    ssm_impl: Optional[str] = None):
+    """(params, tokens (B,1), cache, cache_len) -> (logits, new_cache).
+
+    ``cache_len`` may be a scalar or a per-row (B,) vector (heterogeneous
+    pool). ``ssm_impl`` pins the SSM scan route — the engine's
+    degradation ladder builds a second step with ``ssm_impl="chunked"``
+    (the jnp reference) as the safe route.
+    """
 
     if cfg.is_encdec:
         def step(params, tokens, cache, cache_len, memory):
@@ -37,14 +44,15 @@ def make_serve_step(cfg: ModelConfig, unroll: bool = False):
 
     def step(params, tokens, cache, cache_len):
         return lm_mod.decode_step(params, tokens, cache, cache_len, cfg,
-                                  unroll=unroll)
+                                  ssm_impl=ssm_impl, unroll=unroll)
 
     return step
 
 
 def make_prefill_fn(cfg: ModelConfig, max_len: int, unroll: bool = False,
                     attn_impl: Optional[str] = None,
-                    attn_schedule: str = "auto"):
+                    attn_schedule: str = "auto",
+                    ssm_impl: Optional[str] = None):
     """``attn_impl="flash"`` routes decoder-only prefill attention through
     the engine-backed flash fold (KV cache may be longer than the prompt
     — the padded-cache case); ``attn_schedule`` picks its grid
@@ -65,8 +73,64 @@ def make_prefill_fn(cfg: ModelConfig, max_len: int, unroll: bool = False,
         logits, cache = lm_mod.prefill(
             params, tokens, cfg, max_len, embeds=embeds,
             attn_impl=attn_impl, attn_schedule=attn_schedule,
-            unroll=unroll)
+            ssm_impl=ssm_impl, unroll=unroll)
         return logits, cache
+
+    return fn
+
+
+def bucketable(cfg: ModelConfig) -> bool:
+    """True when prompt padding is semantics-free for this architecture.
+
+    Bucketing pads prompts to a power-of-two length. Trailing pads are
+    harmless only for pure global-attention stacks (pad keys land past
+    the causal frontier of every real token and the logits are read at
+    the true last position). Recurrent layers (ssm/xlstm) would fold the
+    pads into their state, MoE would burn expert capacity on them, and
+    local layers would push real keys out of the ring buffer.
+    """
+    return (not cfg.is_encdec
+            and not cfg.frontend_tokens
+            and all(k == "global" for k in cfg.layer_pattern))
+
+
+def bucket_len(S: int, max_len: int, floor: int = 8) -> int:
+    """Next power-of-two prompt bucket: jit variants grow as log2(max_len)
+    rather than one per distinct prompt length."""
+    b = floor
+    while b < S:
+        b *= 2
+    return min(b, max_len)
+
+
+def make_bucketed_prefill_fn(cfg: ModelConfig, max_len: int,
+                             unroll: bool = False,
+                             attn_impl: Optional[str] = None,
+                             attn_schedule: str = "auto",
+                             ssm_impl: Optional[str] = None):
+    """``(params, tokens (B, bucket), true_len ()) -> (logits, cache)``.
+
+    Like ``make_prefill_fn`` but tokens arrive padded to a bucket length
+    and ``true_len`` (traced scalar) marks the real prompt extent: last-
+    token logits are sliced at ``true_len - 1`` and the returned
+    engine-side cache length must be ``true_len``, not the bucket. Only
+    valid when ``bucketable(cfg)`` — the caller gates on that.
+    """
+    if not bucketable(cfg):
+        raise ValueError(
+            f"bucketed prefill requires a pure global-attention decoder; "
+            f"got pattern {cfg.layer_pattern!r}")
+
+    def fn(params, tokens, true_len):
+        B, S = tokens.shape
+        cache = lm_mod.init_cache(cfg, B, max_len)
+        hidden, _, cache = lm_mod.forward(
+            params, tokens, cfg, cache=cache,
+            cache_len=jnp.zeros((), jnp.int32), attn_impl=attn_impl,
+            attn_schedule=attn_schedule, ssm_impl=ssm_impl, unroll=unroll)
+        last = jax.lax.dynamic_slice_in_dim(hidden, true_len - 1, 1, axis=1)
+        from repro.models.layers.embedding import lm_logits
+        return lm_logits(params, last, cfg)[:, 0], cache
 
     return fn
 

@@ -80,6 +80,43 @@ def test_eos_frees_slot(small_model):
     assert all(r.output[-1] == first for r in done)
 
 
+def test_out_of_cache_surfaces_as_cache_full(small_model):
+    """Regression (ISSUE 6 satellite): a sequence running out of KV cache
+    before its token budget used to finish indistinguishably from EOS —
+    it must now carry finish_reason="cache_full" and warn."""
+    cfg, params = small_model
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=1, max_len=12, max_new_tokens=20, eos_id=-1,
+        temperature=0.0, strict_admission=False))
+    eng.submit(Request(rid=0, prompt=np.arange(2, 8, dtype=np.int32)))
+    with pytest.warns(RuntimeWarning, match="cache_full"):
+        done = eng.run_to_completion()
+    assert done[0].finish_reason == "cache_full"
+    # prefill token + decode up to the cache edge, short of the budget
+    assert 0 < len(done[0].output) < 20
+    assert eng.stats.finished["cache_full"] == 1
+
+
+def test_run_to_completion_deadline_vs_strict(small_model):
+    """Regression (ISSUE 6 satellite): exhausting max_ticks used to
+    silently return with requests still waiting/active."""
+    cfg, params = small_model
+    def fresh():
+        eng = Engine(params, cfg, EngineConfig(
+            max_slots=1, max_len=48, max_new_tokens=10, eos_id=-1))
+        for rid in range(3):
+            eng.submit(Request(rid=rid, prompt=np.arange(3, dtype=np.int32)))
+        return eng
+
+    done = fresh().run_to_completion(max_ticks=2)
+    reasons = sorted(r.finish_reason for r in done)
+    assert len(done) == 3 and "deadline" in reasons  # survivors marked
+
+    from repro.serve import EngineDeadlineError
+    with pytest.raises(EngineDeadlineError):
+        fresh().run_to_completion(max_ticks=2, strict=True)
+
+
 def test_free_slot_compaction_ranks(small_model):
     cfg, params = small_model
     eng = Engine(params, cfg, EngineConfig(max_slots=4, max_len=32))

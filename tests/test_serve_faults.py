@@ -1,0 +1,457 @@
+"""Chaos wall + request-lifecycle tests for the hardened serve engine.
+
+The contract under test (ISSUE 6): under seeded injection of step
+errors, NaN logits, and stalls —
+
+  * no request is lost or duplicated,
+  * every submitted request terminates with exactly ONE finish reason,
+  * undisturbed requests' outputs are BITWISE identical to a fault-free
+    run (greedy decoding; per-row cache_len isolation makes a row's
+    output independent of its co-residents).
+
+Plus the lifecycle machinery on its own: admission control, deadlines,
+cancel, prompt bucketing/compile bounds, NaN-guard trainer parity, and
+the degradation ladder.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm as lm_mod
+from repro.serve import (AdmissionError, Engine, EngineConfig,
+                         EngineDeadlineError, FaultInjector, FaultSpec,
+                         InjectedFault, Request)
+from repro.train.step import init_params
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get_smoke_config("stablelm-12b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(n, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, 500, size=int(rng.integers(3, 9)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _run(cfg, params, prompts, ecfg, injector=None, max_ticks=200):
+    eng = Engine(params, cfg, ecfg, injector=injector)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng.run_to_completion(max_ticks=max_ticks)
+    eng.audit()
+    return eng
+
+
+def _chaos_ecfg(**kw):
+    base = dict(max_slots=2, max_len=48, max_new_tokens=5, eos_id=-1,
+                temperature=0.0)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# the chaos wall: >= 3 injection schedules x both attn schedules
+# ---------------------------------------------------------------------------
+
+_BASELINES: dict = {}
+
+
+def _baseline(cfg, params, prompts, attn_schedule):
+    key = attn_schedule
+    if key not in _BASELINES:
+        eng = _run(cfg, params, prompts, _chaos_ecfg(
+            attn_impl="flash", attn_schedule=attn_schedule))
+        assert all(r.finish_reason in ("eos", "length_budget")
+                   for r in eng.finished)
+        _BASELINES[key] = {r.rid: list(r.output) for r in eng.finished}
+    return _BASELINES[key]
+
+
+@pytest.mark.parametrize("attn_schedule", ["carry", "decoupled"])
+@pytest.mark.parametrize("fault_seed", [3, 11, 42])
+def test_chaos_wall(small_model, attn_schedule, fault_seed):
+    cfg, params = small_model
+    prompts = _prompts(6)
+    base = _baseline(cfg, params, prompts, attn_schedule)
+
+    poison = [fault_seed % len(prompts)]
+    inj = FaultInjector.from_seed(
+        fault_seed, ticks=40, p_error=0.15, p_nan=0.15, p_stall=0.05,
+        stall_s=0.002, poison_rids=poison)
+    eng = _run(cfg, params, prompts, _chaos_ecfg(
+        attn_impl="flash", attn_schedule=attn_schedule), injector=inj)
+
+    # no request lost or duplicated; exactly one terminal state each
+    rids = sorted(r.rid for r in eng.finished)
+    assert rids == list(range(len(prompts)))
+    reasons = {r.rid: r.finish_reason for r in eng.finished}
+    assert all(v is not None for v in reasons.values())
+
+    # the poison request was quarantined, not the pool
+    assert reasons[poison[0]] == "error"
+    assert eng.stats.quarantined >= 1
+
+    # undisturbed requests are bitwise identical to the fault-free run
+    for r in eng.finished:
+        if r.rid in poison or r.degraded or r.finish_reason == "error":
+            continue
+        assert r.output == base[r.rid], (
+            f"rid {r.rid} diverged under injection: "
+            f"{r.output} != {base[r.rid]}")
+
+    # the injector actually exercised the machinery
+    assert inj.fired_count() > 0
+
+
+def test_chaos_all_transient_recovers_everything(small_model):
+    """With only transient (count=1) faults every request completes
+    normally and every output matches the fault-free baseline."""
+    cfg, params = small_model
+    prompts = _prompts(6)
+    base = _baseline(cfg, params, prompts, "carry")
+    inj = FaultInjector([
+        FaultSpec("error", op="any", tick=1, count=1),
+        FaultSpec("nan", op="step", tick=3, count=1),
+        FaultSpec("error", op="step", tick=5, count=1),
+        FaultSpec("stall", op="any", tick=6, count=1, stall_s=0.002),
+    ])
+    eng = _run(cfg, params, prompts, _chaos_ecfg(
+        attn_impl="flash", attn_schedule="carry"), injector=inj)
+    reasons = {r.rid: r.finish_reason for r in eng.finished}
+    assert set(reasons.values()) <= {"eos", "length_budget"}
+    for r in eng.finished:
+        if not r.degraded:
+            assert r.output == base[r.rid]
+    assert eng.stats.step_retries + eng.stats.prefill_retries >= 1
+    assert eng.stats.degradations >= 1          # the NaN tick degraded
+
+
+# ---------------------------------------------------------------------------
+# step-failure recovery: retry + bisection quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_transient_step_error_is_retried(small_model):
+    cfg, params = small_model
+    prompts = _prompts(2)
+    base_eng = _run(cfg, params, prompts, _chaos_ecfg())
+    base = {r.rid: list(r.output) for r in base_eng.finished}
+    inj = FaultInjector([FaultSpec("error", op="step", tick=2, count=1)])
+    eng = _run(cfg, params, prompts, _chaos_ecfg(), injector=inj)
+    assert eng.stats.step_retries == 1
+    assert eng.stats.quarantined == 0
+    assert {r.rid: list(r.output) for r in eng.finished} == base
+
+
+def test_poison_request_is_bisected_out(small_model):
+    cfg, params = small_model
+    prompts = _prompts(4)
+    base_eng = _run(cfg, params, prompts, _chaos_ecfg())
+    base = {r.rid: list(r.output) for r in base_eng.finished}
+    inj = FaultInjector([FaultSpec("error", op="step", rid=1, count=None)])
+    eng = _run(cfg, params, prompts, _chaos_ecfg(), injector=inj)
+    reasons = {r.rid: r.finish_reason for r in eng.finished}
+    assert reasons[1] == "error"
+    assert eng.stats.quarantined == 1
+    assert eng.stats.probes >= 2
+    for r in eng.finished:
+        if r.rid != 1:
+            assert r.output == base[r.rid]
+
+
+def test_ambient_persistent_failure_raises():
+    """A failure that reproduces with NO requests implicated must raise
+    EngineStepError, not spin or silently drop the pool."""
+    cfg = configs.get_smoke_config("stablelm-12b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    inj = FaultInjector([FaultSpec("error", op="step", count=None)])
+    eng = Engine(params, cfg, _chaos_ecfg(), injector=inj)
+    eng.submit(Request(rid=0, prompt=np.arange(3, dtype=np.int32)))
+    from repro.serve import EngineStepError
+    with pytest.raises(EngineStepError):
+        eng.run_to_completion()
+
+
+# ---------------------------------------------------------------------------
+# numeric degradation ladder + trainer NaN-guard parity
+# ---------------------------------------------------------------------------
+
+
+def test_nan_tick_does_not_advance_lengths_or_budgets(small_model):
+    """Trainer/serve parity: like trainer.py's non-finite-loss skip, an
+    all-NaN tick must not advance lengths/budgets for ANY slot."""
+    cfg, params = small_model
+    inj = FaultInjector([FaultSpec("nan", op="step", tick=2, count=1)])
+    eng = Engine(params, cfg, _chaos_ecfg(degrade_on_nonfinite=False),
+                 injector=inj)
+    for i, p in enumerate(_prompts(2)):
+        eng.submit(Request(rid=i, prompt=p))
+    eng.step()                                   # tick 1: admit + decode
+    lengths = eng.lengths.copy()
+    budgets = eng.budgets.copy()
+    outs = [len(r.output) for r in eng.slot_req if r is not None]
+    eng.step()                                   # tick 2: injected NaN
+    assert eng.stats.nonfinite_ticks == 1
+    assert eng.stats.skipped_ticks == 1
+    np.testing.assert_array_equal(eng.lengths, lengths)
+    np.testing.assert_array_equal(eng.budgets, budgets)
+    assert [len(r.output) for r in eng.slot_req if r is not None] == outs
+    eng.step()                                   # tick 3: clean again
+    assert eng.lengths.sum() == lengths.sum() + 2
+
+
+def test_nan_tick_degrades_and_recovers_bitwise(small_model):
+    """With the ladder on, a NaN tick re-runs on the safe route; for a
+    pure-attention model the math is identical, so outputs match the
+    fault-free run bitwise and nothing is marked degraded."""
+    cfg, params = small_model
+    prompts = _prompts(3)
+    base_eng = _run(cfg, params, prompts, _chaos_ecfg())
+    base = {r.rid: list(r.output) for r in base_eng.finished}
+    inj = FaultInjector([FaultSpec("nan", op="step", tick=2, count=1)])
+    eng = _run(cfg, params, prompts, _chaos_ecfg(), injector=inj)
+    assert eng.stats.nonfinite_ticks == 1
+    assert eng.stats.degradations == 1
+    assert eng.stats.skipped_ticks == 0
+    assert {r.rid: list(r.output) for r in eng.finished} == base
+    assert not any(r.degraded for r in eng.finished)
+
+
+def test_persistent_nan_quarantines_after_streak(small_model):
+    cfg, params = small_model
+    inj = FaultInjector([FaultSpec("nan", op="step", count=None)])
+    eng = _run(cfg, params, _prompts(2), _chaos_ecfg(
+        degrade_on_nonfinite=False, max_consecutive_nan_ticks=2),
+        injector=inj)
+    assert all(r.finish_reason in ("error", "eos", "length_budget")
+               for r in eng.finished)
+    assert any(r.finish_reason == "error" for r in eng.finished)
+    assert eng.stats.skipped_ticks >= 2
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_oversized_prompt_rejected_fast(small_model):
+    cfg, params = small_model
+    eng = Engine(params, cfg, _chaos_ecfg(max_len=12, max_new_tokens=20))
+    req = Request(rid=0, prompt=np.arange(6, dtype=np.int32))
+    assert eng.submit(req) is False
+    assert req.finish_reason == "rejected"
+    assert "cannot complete" in req.error
+    with pytest.raises(AdmissionError):
+        eng.submit(Request(rid=1, prompt=np.arange(6, dtype=np.int32)),
+                   strict=True)
+    eng.audit()
+
+
+def test_bounded_queue_reject_policy(small_model):
+    cfg, params = small_model
+    eng = Engine(params, cfg, _chaos_ecfg(max_waiting=2))
+    reqs = [Request(rid=i, prompt=np.arange(3, dtype=np.int32))
+            for i in range(4)]
+    results = [eng.submit(r) for r in reqs]
+    assert results == [True, True, False, False]
+    assert reqs[2].finish_reason == "rejected"
+    assert "queue full" in reqs[2].error
+    eng.run_to_completion()
+    assert sorted(r.rid for r in eng.finished) == [0, 1, 2, 3]
+
+
+def test_bounded_queue_block_policy(small_model):
+    """policy="block" drives the engine until the queue drains instead
+    of rejecting — every request completes."""
+    cfg, params = small_model
+    eng = Engine(params, cfg, _chaos_ecfg(
+        max_waiting=1, admission_policy="block"))
+    for i in range(4):
+        assert eng.submit(Request(
+            rid=i, prompt=np.arange(3, dtype=np.int32))) is True
+    eng.run_to_completion()
+    assert sorted(r.rid for r in eng.finished) == [0, 1, 2, 3]
+    assert all(r.finish_reason == "length_budget" for r in eng.finished)
+
+
+# ---------------------------------------------------------------------------
+# deadlines + cancel
+# ---------------------------------------------------------------------------
+
+
+def test_per_request_ttl_expires_waiting_and_active(small_model):
+    cfg, params = small_model
+    eng = Engine(params, cfg, _chaos_ecfg(
+        max_slots=1, max_new_tokens=20))
+    eng.submit(Request(rid=0, prompt=np.arange(3, dtype=np.int32)))
+    # stuck behind rid 0 on the single slot; expires while waiting
+    eng.submit(Request(rid=1, prompt=np.arange(3, dtype=np.int32),
+                       deadline_ticks=2))
+    eng.run_to_completion()
+    reasons = {r.rid: r.finish_reason for r in eng.finished}
+    assert reasons[1] == "deadline"
+    assert reasons[0] == "length_budget"
+    # active-slot TTL: engine-wide deadline cuts generation short
+    eng2 = Engine(params, cfg, _chaos_ecfg(
+        max_slots=1, max_new_tokens=30, deadline_ticks=3))
+    eng2.submit(Request(rid=0, prompt=np.arange(3, dtype=np.int32)))
+    eng2.run_to_completion()
+    assert eng2.finished[0].finish_reason == "deadline"
+    assert 0 < len(eng2.finished[0].output) < 30
+
+
+def test_cancel_waiting_and_active(small_model):
+    cfg, params = small_model
+    eng = Engine(params, cfg, _chaos_ecfg(max_slots=1, max_new_tokens=10))
+    eng.submit(Request(rid=0, prompt=np.arange(3, dtype=np.int32)))
+    eng.submit(Request(rid=1, prompt=np.arange(3, dtype=np.int32)))
+    eng.step()                       # rid 0 active, rid 1 waiting
+    assert eng.cancel(1) is True     # cancel from the waiting queue
+    assert eng.cancel(0) is True     # cancel the active slot
+    assert eng.cancel(99) is False
+    reasons = {r.rid: r.finish_reason for r in eng.finished}
+    assert reasons == {0: "cancelled", 1: "cancelled"}
+    assert eng.step() == 0           # pool is empty again
+    eng.audit()
+
+
+# ---------------------------------------------------------------------------
+# prompt bucketing + prefill-variant bounds
+# ---------------------------------------------------------------------------
+
+
+def test_bucketing_bounds_prefill_compiles(small_model):
+    """Prompts of length 3/5/6/7 share ONE pow2 bucket (8): a single
+    prefill variant is jitted, and outputs match the unbucketed engine
+    bitwise."""
+    cfg, params = small_model
+    prompts = [np.arange(2, 2 + n, dtype=np.int32) for n in (3, 5, 6, 7)]
+    eng_b = _run(cfg, params, prompts, _chaos_ecfg(bucket_prompts=True))
+    assert eng_b.stats.prefill_compiles == 1
+    eng_u = _run(cfg, params, prompts, _chaos_ecfg(bucket_prompts=False))
+    assert eng_u.stats.prefill_compiles == 4     # one per distinct length
+    assert ({r.rid: list(r.output) for r in eng_b.finished}
+            == {r.rid: list(r.output) for r in eng_u.finished})
+
+
+def test_prefill_variant_cache_is_capped(small_model):
+    cfg, params = small_model
+    prompts = [np.arange(2, 2 + n, dtype=np.int32) for n in (3, 4, 5)]
+    eng = _run(cfg, params, prompts, _chaos_ecfg(
+        bucket_prompts=False, max_prefill_variants=2))
+    assert eng.stats.prefill_compiles == 3
+    assert eng.stats.prefill_cache_evictions == 1
+    assert len(eng._prefill_cache) <= 2
+
+
+def test_bucketing_gated_off_for_recurrent_models():
+    """Pad tokens would corrupt SSM recurrent state: bucketable() must
+    refuse hybrid patterns and the engine must fall back to exact-length
+    prefill."""
+    from repro.serve import bucketable
+    cfg = configs.get_smoke_config("zamba2-7b")
+    assert not bucketable(cfg)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, _chaos_ecfg(
+        max_slots=1, bucket_prompts=True))
+    assert eng._bucketed is False
+    eng.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32)))
+    eng.run_to_completion()
+    assert len(eng.finished[0].output) == 5
+
+
+# ---------------------------------------------------------------------------
+# per-row isolation (what underwrites the bitwise-identity invariant)
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_lengths_isolated_per_row(small_model):
+    """Rows with different prompt lengths sharing the pool decode exactly
+    as they would alone — per-row cache_len gives each its own positions
+    and masking extent."""
+    cfg, params = small_model
+    prompts = [np.asarray([3, 5, 7], np.int32),
+               np.asarray([11, 13, 17, 19, 23, 29], np.int32)]
+    solo = {}
+    for i, p in enumerate(prompts):
+        eng = _run(cfg, params, [p], _chaos_ecfg(max_slots=1))
+        solo[i] = list(eng.finished[0].output)
+    joint = _run(cfg, params, prompts, _chaos_ecfg(max_slots=2))
+    for r in joint.finished:
+        assert list(r.output) == solo[r.rid], (
+            f"rid {r.rid}: co-resident changed my tokens")
+
+
+# ---------------------------------------------------------------------------
+# injector unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_injector_from_seed_is_deterministic():
+    a = FaultInjector.from_seed(9, ticks=32, p_error=0.2, p_nan=0.2)
+    b = FaultInjector.from_seed(9, ticks=32, p_error=0.2, p_nan=0.2)
+    assert a.specs == b.specs
+    c = FaultInjector.from_seed(10, ticks=32, p_error=0.2, p_nan=0.2)
+    assert a.specs != c.specs
+
+
+def test_injector_count_budget_and_rid_gating():
+    from repro.serve import StepContext
+    inj = FaultInjector([
+        FaultSpec("error", op="step", rid=7, count=2),
+    ])
+
+    def fn(params, tokens, cache, cache_len):
+        return jnp.zeros((1, 4)), cache
+
+    wrapped = inj.wrap_step(fn)
+    args = (None, None, None, None)
+    inj.begin(StepContext(tick=0, rids=(1, 2), op="step"))
+    wrapped(*args)                               # rid 7 absent: no fire
+    for _ in range(2):
+        inj.begin(StepContext(tick=1, rids=(1, 7), op="step"))
+        with pytest.raises(InjectedFault):
+            wrapped(*args)
+    inj.begin(StepContext(tick=2, rids=(1, 7), op="step"))
+    wrapped(*args)                               # budget exhausted
+    assert inj.fired_count("error") == 2
+
+
+def test_injector_nan_poisons_targeted_row():
+    from repro.serve import StepContext
+    inj = FaultInjector([FaultSpec("nan", op="step", rid=5, count=1)])
+
+    def fn(params, tokens, cache, cache_len):
+        return jnp.zeros((3, 4)), cache
+
+    wrapped = inj.wrap_step(fn)
+    inj.begin(StepContext(tick=0, rids=(4, 5), op="step",
+                          rows={4: 0, 5: 2}))
+    logits, _ = wrapped(None, None, None, None)
+    assert bool(jnp.isnan(logits[2]).all())
+    assert bool(jnp.isfinite(logits[0]).all())
+
+
+def test_sampling_maps_nan_to_neg_inf():
+    from repro.serve import sample_logits
+    logits = jnp.asarray([[1.0, jnp.nan, 0.5]])
+    tok = sample_logits(jax.random.PRNGKey(0), logits, temperature=0.0)
+    assert int(tok[0]) == 0                      # NaN cannot win argmax
+    tok = sample_logits(jax.random.PRNGKey(0), logits, temperature=0.7,
+                        top_p=0.9)
+    assert int(tok[0]) != 1                      # nor enter the nucleus

@@ -174,6 +174,38 @@ python -m benchmarks.run --dry-run
 echo "== examples smoke: relational query plan =="
 python examples/table_queries.py
 
+echo "== serve-chaos smoke: no request lost under seeded injection =="
+python - <<'EOF'
+import dataclasses, warnings
+import jax, numpy as np
+from repro import configs
+from repro.serve import Engine, EngineConfig, FaultInjector, Request
+from repro.train.step import init_params
+
+cfg = dataclasses.replace(configs.get_smoke_config("stablelm-12b"),
+                          dtype="float32")
+params = init_params(jax.random.PRNGKey(0), cfg)
+inj = FaultInjector.from_seed(3, ticks=40, p_error=0.15, p_nan=0.15,
+                              p_stall=0.05, stall_s=0.002, poison_rids=[4])
+eng = Engine(params, cfg, EngineConfig(
+    max_slots=2, max_len=48, max_new_tokens=5, eos_id=-1,
+    temperature=0.0), injector=inj)
+rng = np.random.default_rng(7)
+n = 6
+for rid in range(n):
+    eng.submit(Request(rid=rid, prompt=rng.integers(
+        2, 500, size=int(rng.integers(3, 9))).astype(np.int32)))
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore")
+    done = eng.run_to_completion()
+eng.audit()  # raises on lost/duplicated rids or invalid finish reasons
+assert sorted(r.rid for r in done) == list(range(n)), "request lost"
+reasons = {r.rid: r.finish_reason for r in done}
+assert reasons[4] == "error", f"poison not quarantined: {reasons}"
+print(f"  {n} requests -> {reasons}")
+print(f"  {eng.stats.summary()}")
+EOF
+
 echo "== tier-1 tests =="
 if [[ "${1:-}" == "--fast" ]]; then
     # Exhaustive sweeps (large-shape grad walls) are marked slow; the
