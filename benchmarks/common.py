@@ -1,6 +1,13 @@
 """Shared benchmark utilities: wall-clock timing + compiled-artifact
 byte/flop counters (the CPU container measures algorithmic structure;
-TPU numbers come from the roofline analysis of the dry-run)."""
+TPU numbers come from the roofline analysis of the dry-run).
+
+Timing values are ``TimingStats`` — a float (the median, so every
+existing ``t.add(..., sec * 1e3)`` call site and the table formatter are
+unchanged) that additionally remembers the full run (p50/min/max/iters),
+which is what ``Table.to_records()`` serializes into the bench-trajectory
+JSON that ``tools/bench_gate.py`` diffs against the committed
+``BENCH_*.json`` baselines."""
 
 from __future__ import annotations
 
@@ -11,8 +18,75 @@ import jax
 import numpy as np
 
 
-def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall seconds of ``fn(*args)`` (block_until_ready)."""
+class TimingStats(float):
+    """Median wall seconds that still remembers the run.
+
+    Compares / formats / arithmetics as a plain float equal to the
+    median; scaling by a plain number (unit conversion like ``* 1e3``)
+    scales the remembered samples too, so the stats survive into the
+    table cell. Mixing with another ``TimingStats`` degrades to float —
+    there is no meaningful sample-wise pairing."""
+
+    __slots__ = ("times",)
+
+    def __new__(cls, times) -> "TimingStats":
+        ts = tuple(float(t) for t in np.ravel(times))
+        if not ts:
+            raise ValueError("TimingStats needs at least one sample")
+        self = super().__new__(cls, float(np.median(ts)))
+        self.times = ts
+        return self
+
+    @property
+    def p50(self) -> float:
+        return float(self)
+
+    @property
+    def t_min(self) -> float:
+        return min(self.times)
+
+    @property
+    def t_max(self) -> float:
+        return max(self.times)
+
+    @property
+    def iters(self) -> int:
+        return len(self.times)
+
+    def _scaled(self, k):
+        if isinstance(k, TimingStats) or not isinstance(k, (int, float)):
+            return NotImplemented
+        if k <= 0:  # median(k*x) == k*median(x) only for k > 0
+            return float(self) * k
+        return TimingStats([t * k for t in self.times])
+
+    def __mul__(self, other):
+        out = self._scaled(other)
+        if out is not NotImplemented:
+            return out
+        if isinstance(other, (int, float)):
+            return float(self) * float(other)  # both coerced: no recursion
+        return NotImplemented
+
+    __rmul__ = __mul__
+
+    def __truediv__(self, other):
+        if (isinstance(other, (int, float))
+                and not isinstance(other, TimingStats) and other > 0):
+            return self._scaled(1.0 / other)
+        if isinstance(other, (int, float)):
+            return float(self) / float(other)
+        return NotImplemented
+
+    def to_dict(self) -> dict:
+        return {"p50": self.p50, "min": self.t_min, "max": self.t_max,
+                "iters": self.iters}
+
+
+def time_fn(fn: Callable, *args, iters: int = 5,
+            warmup: int = 2) -> TimingStats:
+    """Median wall seconds of ``fn(*args)`` (block_until_ready), as a
+    ``TimingStats`` carrying the full sample set."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -20,7 +94,7 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return TimingStats(ts)
 
 
 def throughput(n_elems: int, seconds: float) -> float:
@@ -29,15 +103,25 @@ def throughput(n_elems: int, seconds: float) -> float:
 
 
 def hlo_bytes(fn: Callable, *args) -> dict:
-    """flops + bytes accessed of the compiled fn (cost_analysis)."""
+    """flops + bytes accessed of the compiled fn (cost_analysis).
+
+    Also accumulated into the obs default registry (``bench.hlo.flops``
+    / ``bench.hlo.bytes`` / ``bench.hlo.compiles``) so a ``--json`` run's
+    metrics block records the total compiled footprint it measured."""
     comp = jax.jit(fn).lower(*args).compile()
     cost = comp.cost_analysis()
     if isinstance(cost, list):
         cost = cost[0]
-    return {
+    out = {
         "flops": float(cost.get("flops", 0.0)),
         "bytes": float(cost.get("bytes accessed", 0.0)),
     }
+    from repro.obs import default_registry
+    reg = default_registry()
+    reg.counter("bench.hlo.compiles").inc()
+    reg.counter("bench.hlo.flops").inc(out["flops"])
+    reg.counter("bench.hlo.bytes").inc(out["bytes"])
+    return out
 
 
 class Table:
@@ -62,6 +146,29 @@ class Table:
                  fmt.format(*["-" * w for w in widths])]
         lines += [fmt.format(*r) for r in srows]
         return "\n".join(lines)
+
+    def to_records(self) -> dict:
+        """JSON-safe document for the bench trajectory: title + columns
+        + rows, with ``TimingStats`` cells expanded to their full stats
+        dict (everything else passes through as the scalar the table
+        shows)."""
+        def cell(v):
+            if isinstance(v, TimingStats):
+                return v.to_dict()
+            if isinstance(v, bool):
+                return v
+            if isinstance(v, (int, np.integer)):
+                return int(v)
+            if isinstance(v, (float, np.floating)):
+                return float(v)
+            if isinstance(v, str) or v is None:
+                return v
+            return str(v)
+        return {
+            "title": self.title,
+            "columns": list(self.columns),
+            "rows": [[cell(v) for v in row] for row in self.rows],
+        }
 
     def show(self):
         print(self.render(), flush=True)

@@ -87,7 +87,8 @@ for ex in ("all_gather", "hillis_permute", "ring"):
     return t
 
 
-def run_faults(fault_seed: int = 3, requests: int = 12) -> Table:
+def run_faults(fault_seed: int = 3, requests: int = 12,
+               smoke: bool = False) -> Table:
     """Serve-chaos mode (``--faults``): goodput and tick-latency tail of
     the hardened engine under seeded injection of step errors, NaN
     logits, and stalls — the 'availability under mutation' framing of
@@ -96,6 +97,9 @@ def run_faults(fault_seed: int = 3, requests: int = 12) -> Table:
     import dataclasses
     import time
     import warnings
+
+    if smoke:
+        requests = min(requests, 6)
 
     from repro import configs
     from repro.serve import Engine, EngineConfig, FaultInjector, Request

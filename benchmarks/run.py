@@ -7,11 +7,20 @@
 ``--dry-run`` resolves every registered suite (so a renamed or broken
 entry point fails loudly) and executes the figures that support a
 ``smoke=True`` shrink at toy sizes, end to end.
+
+``--json PATH`` additionally writes one schema-versioned document of
+everything that EXECUTED (suite -> table records, with full timing
+stats per ``time_fn`` cell, plus an environment block and the obs
+metrics snapshot).  The committed ``BENCH_<suite>.json`` baselines are
+such documents captured in ``--dry-run`` mode;
+``tools/bench_gate.py`` diffs a fresh run against them.
 """
 
 from __future__ import annotations
 
-import inspect
+import argparse
+import json
+import platform
 import sys
 import time
 
@@ -19,6 +28,11 @@ from benchmarks import (fig6_single_thread, fig7_traffic, fig8_inplace,
                         fig10_partition_size, fig11_dilation, fig13_policy,
                         fig_attention, fig_decoupled, fig_engine,
                         fig_relational, moe_dispatch, roofline_table)
+
+#: Bench-trajectory document version. Bump on any structural change to
+#: the --json output; tools/bench_gate.py refuses documents it does not
+#: understand.
+SCHEMA = "repro-bench/v1"
 
 SUITES = {
     "fig6": [fig6_single_thread.run],
@@ -34,29 +48,69 @@ SUITES = {
     "moe": [moe_dispatch.run],
     "relational": [fig_relational.run, fig_relational.run_sort_join],
     "roofline": [roofline_table.run],
+    "serve": [fig7_traffic.run_faults],
 }
 
 
+def _environment() -> dict:
+    import jax
+    import numpy as np
+    return {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
 def main(argv=None):
-    names = list(argv if argv is not None else sys.argv[1:])
-    dry_run = "--dry-run" in names
-    if dry_run:
-        names.remove("--dry-run")
-    names = names or list(SUITES)
+    import inspect
+
+    ap = argparse.ArgumentParser(prog="benchmarks.run", description=__doc__)
+    ap.add_argument("suites", nargs="*", metavar="SUITE",
+                    help=f"subset to run (default: all). "
+                         f"Known: {' '.join(sorted(SUITES))}")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="smoke sizes; skip suites without a smoke mode")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the bench-trajectory document here")
+    args = ap.parse_args(argv)
+
+    names = args.suites or list(SUITES)
+    doc = {"schema": SCHEMA, "dry_run": bool(args.dry_run), "suites": {}}
     t0 = time.time()
     for name in names:
         if name not in SUITES:
             print(f"unknown suite {name!r}; known: {sorted(SUITES)}")
             return 1
+        records = []
         for fn in SUITES[name]:
-            if dry_run:
+            if args.dry_run:
                 if "smoke" in inspect.signature(fn).parameters:
-                    fn(smoke=True).show()
+                    table = fn(smoke=True)
                 else:
                     print(f"[dry-run] {fn.__module__}.{fn.__name__}: ok")
+                    continue
             else:
-                fn().show()
-    print(f"[benchmarks done in {time.time() - t0:.1f}s]")
+                table = fn()
+            table.show()
+            records.append(table.to_records())
+        if records:
+            doc["suites"][name] = records
+    elapsed = time.time() - t0
+    print(f"[benchmarks done in {elapsed:.1f}s]")
+
+    if args.json is not None:
+        from repro.obs import default_registry
+        doc["environment"] = _environment()
+        doc["elapsed_s"] = elapsed
+        doc["metrics"] = default_registry().snapshot()
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[bench trajectory -> {args.json}]")
     return 0
 
 

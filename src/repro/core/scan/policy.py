@@ -54,6 +54,9 @@ by the monoid-generic engine in ``repro.kernels.scan_engine``:
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
+
+from repro.obs import trace
 
 
 # TPU v5e geometry (targets; the container CPU only validates semantics).
@@ -75,6 +78,67 @@ class Choice:
     carry_exchange: str  # distributed sums exchange
     reason: str
     schedule: str = "carry"  # grid organization: 'carry'|'decoupled'|'fused'
+    # The inputs the choice was made from (the explain surface) — filled
+    # by ``choose``; excluded from equality so cached/reconstructed
+    # Choices with the same outcome still compare equal.
+    inputs: Dict = dataclasses.field(default_factory=dict, compare=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """A policy decision plus why: the answer to "why did this run
+    split-KV?". ``inputs`` echoes every argument the rule consumed."""
+
+    what: str        # which rule decided ('schedule' | 'attention_schedule')
+    value: str       # the decision itself
+    reason: str      # human-readable rationale
+    inputs: Dict = dataclasses.field(default_factory=dict, compare=False)
+
+    def emit(self) -> "Decision":
+        """Record the decision as a trace instant event (no-op when
+        tracing is disabled) and return self."""
+        trace.instant(f"policy.{self.what}", value=self.value,
+                      reason=self.reason, **self.inputs)
+        return self
+
+
+def explain_schedule(
+    batch: int,
+    n: int,
+    cores: int = NUM_CORES,
+    block_elems: int = 2048,
+    prefer_fused: bool = True,
+) -> Decision:
+    """``choose_schedule`` with its working shown: the decision, the
+    branch of the three-way rule that fired, and the inputs — emitted as
+    a ``policy.schedule`` trace event."""
+    batch = max(int(batch), 1)
+    chunks = -(-n // max(block_elems, 1))
+    spare = cores // batch  # cores idle under the carry chain
+    inputs = dict(batch=batch, n=n, cores=cores, block_elems=block_elems,
+                  chunks=chunks, spare=spare, prefer_fused=prefer_fused)
+    if batch >= cores:
+        return Decision(
+            "schedule", "carry",
+            f"batch {batch} >= cores {cores}: rows alone fill every core; "
+            f"carry chain has the cheapest HBM traffic", inputs).emit()
+    # A parallel-sequence schedule costs extra machinery (a second read,
+    # or the semaphore chain); only worth it when the idle cores can
+    # actually be fed — at least ``spare`` chunks per row (a row inside
+    # one block has nothing to parallelize).
+    if spare >= 2 and chunks >= spare:
+        value = "fused" if prefer_fused else "decoupled"
+        return Decision(
+            "schedule", value,
+            f"batch {batch} < cores {cores} with {chunks} chunks >= "
+            f"{spare} spare cores: spread the row "
+            f"({'single-launch fused' if prefer_fused else 'two-launch decoupled'})",
+            inputs).emit()
+    return Decision(
+        "schedule", "carry",
+        f"batch {batch} < cores {cores} but only {chunks} chunk(s) for "
+        f"{spare} spare core(s): nothing to spread, keep the carry chain",
+        inputs).emit()
 
 
 def choose_schedule(
@@ -92,19 +156,9 @@ def choose_schedule(
     decoupled form over the single-launch fused one for parallel-sequence
     shapes (e.g. to sidestep the semaphore path on an unvalidated
     platform; off-TPU the engine falls back by itself).
+    ``explain_schedule`` returns the same decision with its rationale.
     """
-    batch = max(int(batch), 1)
-    if batch >= cores:
-        return "carry"  # rows alone fill every core; cheapest HBM traffic
-    chunks = -(-n // max(block_elems, 1))
-    spare = cores // batch  # cores idle under the carry chain
-    # A parallel-sequence schedule costs extra machinery (a second read,
-    # or the semaphore chain); only worth it when the idle cores can
-    # actually be fed — at least ``spare`` chunks per row (a row inside
-    # one block has nothing to parallelize).
-    if spare >= 2 and chunks >= spare:
-        return "fused" if prefer_fused else "decoupled"
-    return "carry"
+    return explain_schedule(batch, n, cores, block_elems, prefer_fused).value
 
 
 # Attention (carried-payload fold) thresholds. SPLIT_KV_CHUNKS is the KV
@@ -116,6 +170,42 @@ def choose_schedule(
 # this factor, splitting KV buys no throughput and only adds traffic.
 SPLIT_KV_CHUNKS = 256
 SPLIT_KV_ROW_CAP = 8
+
+
+def explain_attention_schedule(
+    batch_rows: int,
+    kv_len: int,
+    cores: int = NUM_CORES,
+    block_elems: int = 128,
+    split_kv_chunks: int = SPLIT_KV_CHUNKS,
+    split_kv_row_cap: int = SPLIT_KV_ROW_CAP,
+) -> Decision:
+    """``choose_attention_schedule`` with its working shown — emitted as
+    a ``policy.attention_schedule`` trace event."""
+    batch_rows = max(int(batch_rows), 1)
+    chunks = -(-kv_len // max(block_elems, 1))
+    spare = cores // batch_rows
+    inputs = dict(batch_rows=batch_rows, kv_len=kv_len, cores=cores,
+                  block_elems=block_elems, chunks=chunks, spare=spare,
+                  split_kv_chunks=split_kv_chunks,
+                  split_kv_row_cap=split_kv_row_cap)
+    if batch_rows < cores and spare >= 2 and chunks >= spare:
+        return Decision(
+            "attention_schedule", "decoupled",
+            f"{batch_rows} fold row(s) leave {spare} cores idle and the "
+            f"KV chain has {chunks} chunks to spread: split-KV "
+            f"(flash-decoding)", inputs).emit()
+    if chunks >= split_kv_chunks and batch_rows < cores * split_kv_row_cap:
+        return Decision(
+            "attention_schedule", "decoupled",
+            f"KV chain of {chunks} chunks >= {split_kv_chunks} dominates "
+            f"a row's latency and {batch_rows} rows < "
+            f"{cores * split_kv_row_cap} saturation cap: split-KV",
+            inputs).emit()
+    return Decision(
+        "attention_schedule", "carry",
+        f"{batch_rows} rows fill the machine (or the {chunks}-chunk KV "
+        f"chain is short): classic flash carry accumulate", inputs).emit()
 
 
 def choose_attention_schedule(
@@ -146,16 +236,12 @@ def choose_attention_schedule(
 
     ``batch_rows`` is the number of independent fold chains the carry
     grid already parallelizes (B·H_q·q_blocks); ``block_elems`` the KV
-    chunk length actually tiled.
+    chunk length actually tiled. ``explain_attention_schedule`` returns
+    the same decision with its rationale.
     """
-    batch_rows = max(int(batch_rows), 1)
-    chunks = -(-kv_len // max(block_elems, 1))
-    spare = cores // batch_rows
-    if batch_rows < cores and spare >= 2 and chunks >= spare:
-        return "decoupled"
-    if chunks >= split_kv_chunks and batch_rows < cores * split_kv_row_cap:
-        return "decoupled"
-    return "carry"
+    return explain_attention_schedule(
+        batch_rows, kv_len, cores, block_elems, split_kv_chunks,
+        split_kv_row_cap).value
 
 
 def choose(
@@ -172,27 +258,40 @@ def choose(
 
     ``batch`` is the number of independent rows scanned together (defaults
     to "plenty" so shape-oblivious callers keep the carry-chain default);
-    it only affects ``Choice.schedule``.
+    it only affects ``Choice.schedule``. Every call emits a
+    ``policy.choose`` trace event carrying the inputs and reason.
     """
     bytes_total = n * itemsize
     block = max(1024, min(VMEM_BLOCK_BUDGET // max(itemsize, 1), n))
     schedule = choose_schedule(batch, n, cores)
+    inputs = dict(n=n, itemsize=itemsize, n_devices=n_devices,
+                  bandwidth_abundant=bandwidth_abundant,
+                  carry_bytes=carry_bytes,
+                  kernel_available=kernel_available, batch=batch,
+                  cores=cores, bytes_total=bytes_total)
+
+    def _emit(choice: Choice) -> Choice:
+        Decision("choose", choice.algorithm, choice.reason,
+                 dict(inputs, schedule=choice.schedule,
+                      block_size=choice.block_size)).emit()
+        return choice
 
     if bytes_total <= VMEM_BLOCK_BUDGET:
         # Fits in fast memory: one horizontal pass, no partitioning (Obs 2).
-        return Choice(
+        return _emit(Choice(
             "horizontal", n, 2, "all_gather",
             "input fits in VMEM; in-register log-step scan only",
-        )
+            inputs=inputs,
+        ))
 
     if bandwidth_abundant:
         # The KNL/HBM finding: when bandwidth is abundant, partitioning's
         # overhead is pure cost (Obs 2) — plain two-pass, reduce-first.
-        return Choice(
+        return _emit(Choice(
             "two_pass", block, 2, "all_gather",
             "bandwidth abundant: skip partitioning (paper Fig 13)",
-            schedule,
-        )
+            schedule, inputs=inputs,
+        ))
 
     algo = "kernel" if kernel_available else "blocked"
     # Large carries (e.g. SSM matrix states) across many devices favor the
@@ -203,4 +302,5 @@ def choose(
     reason = "bandwidth-bound: cache/VMEM partitioning, reduce-first (SIMD2-P)"
     if schedule in ("decoupled", "fused"):
         reason += f"; {schedule} grid (batch < cores, long row)"
-    return Choice(algo, block, 2, exchange, reason, schedule)
+    return _emit(Choice(algo, block, 2, exchange, reason, schedule,
+                        inputs=inputs))

@@ -71,6 +71,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.scan import policy
 from repro.core.scan.assoc import KernelSpec
 from repro.kernels import pallas_compat
+from repro.obs import trace
 
 LANES = 128
 
@@ -636,6 +637,58 @@ def fold_decoupled(operands, spec, layout, *, interpret=False):
 # ---------------------------------------------------------------------------
 
 
+def _launch_event(operands, spec: KernelSpec, layout, schedule: str) -> None:
+    """Record a ``kernel.launch`` trace event: monoid, schedule, grid
+    shape, a VMEM working-set estimate (one grid cell's operand blocks),
+    and the schedule's slow-memory traffic estimate (read/write bytes —
+    the quantity the roofline memory term and ``benchmarks.common
+    .hlo_bytes`` measure, so trace events correlate with bench rows).
+
+    Fires at TRACE time for jitted callers — once per compilation, which
+    is exactly when the launch geometry is decided — and costs one
+    attribute check when tracing is disabled. Uses only static shape /
+    dtype metadata, so it is safe under jax tracing.
+    """
+    if not trace.enabled():
+        return
+    is_fold = spec.transform is not None
+    grid = (layout.split_grid if is_fold and schedule != "carry"
+            else layout.grid)
+
+    def nbytes(shape, dtype):
+        n = 1
+        for s in shape:
+            n *= int(s)
+        return n * jnp.dtype(dtype).itemsize
+
+    in_bytes = sum(nbytes(o.shape, o.dtype) for o in operands)
+    try:
+        specs = (layout.split_op_specs(len(operands))
+                 if is_fold and schedule != "carry"
+                 else layout.op_specs(len(operands)))
+        vmem_est = sum(
+            nbytes(bs.block_shape, o.dtype)
+            for bs, o in zip(specs, operands)
+            if getattr(bs, "block_shape", None) is not None)
+    except Exception:           # noqa: BLE001 — estimate only, never fatal
+        vmem_est = 0
+    _, out_dts = _dtypes(spec, operands)
+    if is_fold:
+        out_bytes = sum(nbytes(layout.out_shape_for(i), dt)
+                        for i, dt in enumerate(out_dts))
+    else:
+        out_bytes = sum(nbytes(layout.shape, dt) for dt in out_dts)
+    # The module-doc traffic model: decoupled's totals pass re-reads the
+    # data; carry/fused read it once.
+    reads = 2 * in_bytes if (schedule == "decoupled" and not is_fold) \
+        else in_bytes
+    trace.instant(
+        "kernel.launch", monoid=spec.name, schedule=schedule,
+        fold=is_fold, grid=list(grid),
+        vmem_block_bytes_est=vmem_est,
+        hbm_read_bytes_est=reads, hbm_write_bytes_est=out_bytes)
+
+
 def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
          exclusive: bool = False, interpret: bool = False,
          return_totals: bool = False, count_cells: bool = False):
@@ -664,6 +717,7 @@ def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
     if count_cells and (spec.transform is None or schedule != "carry"):
         raise ValueError(
             "count_cells instruments the carry fold only")
+    _launch_event(operands, spec, layout, schedule)
     if spec.transform is not None:
         if return_totals:
             raise ValueError(

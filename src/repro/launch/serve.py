@@ -8,11 +8,18 @@ the deterministic chaos injector (transient errors / NaN logits /
 stalls), ``--deadline-ticks``/``--max-waiting`` exercise admission
 control and TTLs, and the run always ends with the ``EngineStats``
 health line the chaos tests assert on.
+
+Observability knobs: ``--trace out.json`` captures the run as a Chrome
+``trace_event`` file (open in ui.perfetto.dev — tick/prefill/decode
+spans, request lifecycle instants, policy decisions); ``--stats-json``
+prints one machine-parsable line with the full ``EngineStats.as_dict()``
+plus the metrics-registry snapshot (tick-latency histogram included).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import warnings
 
@@ -20,6 +27,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.obs import Registry, trace
 from repro.serve import Engine, EngineConfig, FaultInjector, Request
 from repro.train.step import init_params
 
@@ -47,7 +55,19 @@ def main(argv=None):
                     default="reject")
     ap.add_argument("--deadline-ticks", type=int, default=None)
     ap.add_argument("--no-bucket-prompts", action="store_true")
+    ap.add_argument("--attn-impl", choices=["flash"], default=None,
+                    help="prefill attention route (default: dense)")
+    ap.add_argument("--attn-schedule",
+                    choices=["auto", "carry", "decoupled"], default="auto")
+    # -- observability knobs -------------------------------------------
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="export the run as Chrome trace_event JSON")
+    ap.add_argument("--stats-json", action="store_true",
+                    help="print stats as one machine-parsable JSON line")
     args = ap.parse_args(argv)
+
+    if args.trace is not None:
+        trace.enable()
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -65,6 +85,7 @@ def main(argv=None):
             p_error=args.fault_error_rate, p_nan=args.fault_nan_rate,
             p_stall=args.fault_stall_rate)
 
+    metrics = Registry()
     eng = Engine(params, cfg, EngineConfig(
         max_slots=args.slots, max_len=args.max_len,
         max_new_tokens=args.max_new_tokens, temperature=args.temperature,
@@ -72,7 +93,9 @@ def main(argv=None):
         max_waiting=args.max_waiting,
         admission_policy=args.admission_policy,
         deadline_ticks=args.deadline_ticks,
-        bucket_prompts=not args.no_bucket_prompts), injector=injector)
+        bucket_prompts=not args.no_bucket_prompts,
+        attn_impl=args.attn_impl, attn_schedule=args.attn_schedule),
+        injector=injector, metrics=metrics)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -89,13 +112,23 @@ def main(argv=None):
     ok = sum(r.finish_reason in ("eos", "length_budget") for r in done)
     print(f"served {len(done)} requests, {ntok} tokens in {dt:.2f}s "
           f"({ntok / dt:.1f} tok/s, goodput {ok}/{len(done)})")
+    # The human line and the machine line read the SAME counters: the
+    # summary string from the dataclass, the JSON from its registry
+    # mirror (EngineStats.attach keeps them write-through-identical).
     print(f"stats: {eng.stats.summary()}")
+    if args.stats_json:
+        print("stats-json: " + json.dumps(
+            {"stats": eng.stats.as_dict(), "metrics": metrics.snapshot()},
+            sort_keys=True))
     if injector is not None:
         print(f"faults fired: error={injector.fired_count('error')} "
               f"nan={injector.fired_count('nan')} "
               f"stall={injector.fired_count('stall')}")
     for r in done[:3]:
         print(f"  req {r.rid}: [{r.finish_reason}] {r.output[:10]}...")
+    if args.trace is not None:
+        n = len(trace.export(args.trace)["traceEvents"])
+        print(f"trace: {n} events -> {args.trace}")
     return 0
 
 

@@ -1,0 +1,23 @@
+"""Observability: tracing, metrics, and the bench trajectory's hooks.
+
+Three surfaces (ISSUE 7 — "make the stack measure itself"):
+
+  * ``obs.trace`` — host-side spans / instant events / counter tracks
+    with Chrome ``trace_event`` export (open in ``ui.perfetto.dev``).
+    Disabled by default; ``trace.enable()`` turns a serve run or
+    benchmark into a timeline. See README "Observability".
+  * ``obs.metrics`` — process-wide counters/gauges/streaming histograms;
+    ``serve.stats.EngineStats`` mirrors into it when attached.
+  * the bench trajectory — ``benchmarks/run.py --json`` +
+    ``tools/bench_gate.py`` persist and gate ``BENCH_*.json`` per PR
+    (they consume ``obs.metrics`` for the hlo-counter block).
+"""
+
+from repro.obs import trace
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry,
+                               default_registry)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "default_registry",
+    "trace",
+]

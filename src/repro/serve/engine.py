@@ -61,6 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.obs import trace
+from repro.obs.metrics import Registry
 from repro.relational import compact as rel_compact
 from repro.serve.faults import StepContext
 from repro.serve.sampling import sample_logits
@@ -166,12 +168,16 @@ def _jit_step(cfg: ModelConfig, ssm_impl: Optional[str], donate: bool):
 
 class Engine:
     def __init__(self, params: Pytree, cfg: ModelConfig, ecfg: EngineConfig,
-                 injector: Any = None):
+                 injector: Any = None,
+                 metrics: Optional[Registry] = None):
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
         self.injector = injector
-        self.stats = EngineStats()
+        # ``metrics`` mirrors EngineStats into an obs registry (one
+        # surface for dashboards + chaos invariants); None = stats only.
+        self.stats = EngineStats().attach(metrics)
+        self.metrics = metrics
         self.key = jax.random.PRNGKey(ecfg.seed)
 
         ssm_primary = None if ecfg.ssm_impl == "auto" else ecfg.ssm_impl
@@ -234,6 +240,9 @@ class Engine:
         req.finish_tick = self._tick
         self.stats.record_finish(reason)
         self.finished.append(req)
+        trace.instant("serve.request.finish", rid=req.rid, reason=reason,
+                      tick=self._tick, tokens=len(req.output or ()),
+                      degraded=req.degraded, error=error)
 
     def _budget_of(self, req: Request) -> int:
         return (req.max_new_tokens if req.max_new_tokens is not None
@@ -247,6 +256,9 @@ class Engine:
         self.stats.submitted += 1
         req.output = []
         req.submit_tick = self._tick
+        trace.instant("serve.request.submit", rid=req.rid,
+                      prompt_len=int(np.asarray(req.prompt).size),
+                      tick=self._tick)
         reason = self._validate(req)
         if reason is None and self.ecfg.max_waiting is not None:
             if self.ecfg.admission_policy == "block":
@@ -346,6 +358,11 @@ class Engine:
     def _prefill_request(self, req: Request):
         """Run prefill for one request with retry + degrade. Returns
         ``(logits, cache)`` or None after finishing the request."""
+        with trace.span("serve.prefill", rid=req.rid, tick=self._tick,
+                        prompt_len=int(np.asarray(req.prompt).size)):
+            return self._prefill_request_inner(req)
+
+    def _prefill_request_inner(self, req: Request):
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         S = prompt.shape[1]
         fn, padded, extra = self._prefill_call(prompt, int(S))
@@ -467,6 +484,16 @@ class Engine:
         the tick operated on. Bookkeeping commits only on success — a
         failed or non-finite tick leaves the pool exactly as it was."""
         t0 = time.perf_counter()
+        with trace.span("serve.tick", tick=self._tick + 1):
+            n = self._step_inner()
+        if self.metrics is not None:
+            self.metrics.histogram("serve.tick_s").record(
+                time.perf_counter() - t0)
+        trace.counter("serve.pool", waiting=len(self.waiting), active=n)
+        return n
+
+    def _step_inner(self) -> int:
+        t0 = time.perf_counter()
         self._tick += 1
         self.stats.ticks += 1
         self._expire_deadlines()
@@ -549,6 +576,9 @@ class Engine:
         """Roll the tick back (trainer NaN-guard parity): nothing
         advances. Persistent non-finite ticks quarantine the offending
         rows so the pool stays live."""
+        trace.instant("serve.rollback", tick=self._tick,
+                      rids=[self.slot_req[i].rid for i in active],
+                      nan_streak=self._nan_streak + 1)
         self.stats.skipped_ticks += 1
         self._nan_streak += 1
         if self._pre_cache_gone():
@@ -593,8 +623,11 @@ class Engine:
             if self.injector is not None:
                 self.injector.begin(self._ctx(active))
             try:
-                logits, new_cache = self._wstep(
-                    self.params, self.tokens, self.cache, clv)
+                with trace.span("serve.decode", tick=self._tick,
+                                rids=[self.slot_req[i].rid for i in active],
+                                attempt=attempts):
+                    logits, new_cache = self._wstep(
+                        self.params, self.tokens, self.cache, clv)
                 return logits, new_cache, active
             except Exception as e:            # noqa: BLE001 — jitted call
                 last_err = e
@@ -644,7 +677,9 @@ class Engine:
         if self.injector is not None:
             self.injector.begin(self._ctx(subset))
         try:
-            self._wstep_probe(self.params, self.tokens, self.cache, clv)
+            with trace.span("serve.probe", tick=self._tick,
+                            rids=[self.slot_req[i].rid for i in subset]):
+                self._wstep_probe(self.params, self.tokens, self.cache, clv)
             return True
         except Exception:                      # noqa: BLE001
             return False

@@ -10,7 +10,9 @@ chaos tests) can assert liveness invariants without scraping logs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
+
+from repro.obs.metrics import Registry
 
 #: The request terminal states. Every submitted request ends with exactly
 #: one of these on ``Request.finish_reason`` (the chaos wall's invariant).
@@ -27,7 +29,16 @@ FINISH_REASONS = (
 
 @dataclasses.dataclass
 class EngineStats:
-    """Monotonic counters plus current queue gauges."""
+    """Monotonic counters plus current queue gauges.
+
+    Optionally MIRRORED into an ``obs.metrics.Registry``
+    (:meth:`attach`): every counter write is reflected as a
+    ``serve.stats.<name>`` gauge and every finish as a
+    ``serve.finished.<reason>`` counter, so operator dashboards, the
+    ``--stats-json`` surface, and the chaos-wall invariants all read one
+    registry instead of scraping this dataclass. Mirroring is write-
+    through (not snapshot): the registry is live mid-run.
+    """
 
     # -- traffic -------------------------------------------------------
     ticks: int = 0                 # engine steps attempted
@@ -56,11 +67,40 @@ class EngineStats:
     prefill_cache_evictions: int = 0
     slow_ticks: int = 0            # wall time above EngineConfig.slow_tick_s
 
+    # -- metrics mirroring ----------------------------------------------
+    # ``_registry`` is deliberately NOT a dataclass field: asdict()/
+    # equality stay counter-only and attachment survives neither copy
+    # nor pickling (a mirror is a live wire, not state).
+    def attach(self, registry: Optional[Registry]) -> "EngineStats":
+        """Mirror counters into ``registry`` (write-through from now on;
+        current values are published immediately). ``None`` detaches."""
+        object.__setattr__(self, "_registry", registry)
+        if registry is not None:
+            for k, v in self.as_dict().items():
+                if isinstance(v, int):
+                    registry.gauge(f"serve.stats.{k}").set(v)
+            for reason, nn in self.finished.items():
+                registry.counter(f"serve.finished.{reason}").value = nn
+        return self
+
+    def __setattr__(self, name: str, value) -> None:
+        object.__setattr__(self, name, value)
+        reg = getattr(self, "_registry", None)
+        if reg is not None and isinstance(value, int):
+            reg.gauge(f"serve.stats.{name}").set(value)
+            if name != "total_finished":
+                reg.gauge("serve.stats.total_finished").set(
+                    self.total_finished)
+
     def record_finish(self, reason: str) -> None:
         if reason not in FINISH_REASONS:
             raise ValueError(f"unknown finish reason {reason!r}; "
                              f"one of {FINISH_REASONS}")
         self.finished[reason] = self.finished.get(reason, 0) + 1
+        reg = getattr(self, "_registry", None)
+        if reg is not None:
+            reg.counter(f"serve.finished.{reason}").inc()
+            reg.gauge("serve.stats.total_finished").set(self.total_finished)
 
     def observe_queue(self, depth: int) -> None:
         self.queue_depth = depth
@@ -76,14 +116,24 @@ class EngineStats:
         return d
 
     def summary(self) -> str:
+        """One operator line. Every monotonic counter appears (the
+        regression test walks ``as_dict`` and asserts nothing counted is
+        silently dropped here — ``prefill_retries`` / ``nonfinite_ticks``
+        / ``slow_ticks`` / ``prefill_cache_evictions`` were once counted
+        but never printed); ``as_dict`` stays the superset (it adds the
+        ``queue_depth`` gauge and the raw ``finished`` map)."""
         fin = " ".join(f"{k}={v}" for k, v in sorted(self.finished.items()))
         return (
             f"ticks={self.ticks} submitted={self.submitted} "
             f"admitted={self.admitted} tokens={self.tokens_generated} "
             f"finished[{fin}] retries={self.step_retries} "
+            f"prefill_retries={self.prefill_retries} "
             f"probes={self.probes} quarantined={self.quarantined} "
+            f"nonfinite={self.nonfinite_ticks} "
             f"degradations={self.degradations} "
             f"skipped={self.skipped_ticks} "
+            f"slow_ticks={self.slow_ticks} "
             f"prefill_compiles={self.prefill_compiles} "
+            f"prefill_evictions={self.prefill_cache_evictions} "
             f"peak_queue={self.peak_queue_depth}"
         )

@@ -21,6 +21,7 @@ from repro.dist import sharding as shd
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.models.config import ModelConfig
+from repro.obs import trace
 
 Pytree = Any
 
@@ -70,6 +71,13 @@ def make_prefill_fn(cfg: ModelConfig, max_len: int, unroll: bool = False,
         return fn
 
     def fn(params, tokens, embeds=None):
+        # Fires once per jit COMPILATION (this fn is traced, not run, by
+        # the engine's jit) — one event per prefill variant, mirroring
+        # the prefill_compiles counter.
+        trace.instant("serve.prefill.variant", batch=tokens.shape[0],
+                      prompt_len=tokens.shape[1], bucketed=False,
+                      attn_impl=attn_impl or "dense",
+                      attn_schedule=attn_schedule)
         logits, cache = lm_mod.prefill(
             params, tokens, cfg, max_len, embeds=embeds,
             attn_impl=attn_impl, attn_schedule=attn_schedule,
@@ -123,6 +131,10 @@ def make_bucketed_prefill_fn(cfg: ModelConfig, max_len: int,
 
     def fn(params, tokens, true_len):
         B, S = tokens.shape
+        # Once per compiled bucket variant (see make_prefill_fn).
+        trace.instant("serve.prefill.variant", batch=B, bucket=S,
+                      bucketed=True, attn_impl=attn_impl or "dense",
+                      attn_schedule=attn_schedule)
         cache = lm_mod.init_cache(cfg, B, max_len)
         hidden, _, cache = lm_mod.forward(
             params, tokens, cfg, cache=cache,

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs import default_registry, trace
 
 log = logging.getLogger("repro.train")
 
@@ -121,13 +122,20 @@ class Trainer:
             t0 = time.perf_counter()
             for attempt in range(self.cfg.max_step_retries + 1):
                 try:
-                    new_params, new_opt, metrics = self.step_fn(
-                        params, opt_state, batch, jnp.asarray(step))
-                    loss = float(jax.device_get(metrics["loss"]))
+                    # The span closes on the loss sync, so it measures the
+                    # whole step (dispatch + device) — what the straggler
+                    # tracker sees.
+                    with trace.span("train.step", step=step,
+                                    attempt=attempt):
+                        new_params, new_opt, metrics = self.step_fn(
+                            params, opt_state, batch, jnp.asarray(step))
+                        loss = float(jax.device_get(metrics["loss"]))
                     break
                 except Exception as e:  # noqa: BLE001 — retry path
                     log.warning("step %d attempt %d failed: %s",
                                 step, attempt, e)
+                    trace.instant("train.step.retry", step=step,
+                                  attempt=attempt, error=repr(e))
                     if attempt == self.cfg.max_step_retries:
                         raise
                     # Re-materialize from the last commit (simulated
@@ -137,8 +145,11 @@ class Trainer:
                     step = max(step_r, 0)
                     batch = self.dataset.batch_at(step)
             dt = time.perf_counter() - t0
+            default_registry().histogram("train.step_s").record(dt)
 
             if not math.isfinite(loss):
+                trace.instant("train.nan_skip", step=step,
+                              skips=self.nan_skips + 1)
                 self.nan_skips += 1
                 log.warning("non-finite loss at step %d (skip %d/%d)",
                             step, self.nan_skips, self.cfg.max_nan_skips)

@@ -1,0 +1,239 @@
+"""Bench-trajectory gate: diff a fresh ``benchmarks.run --json`` document
+against the committed ``BENCH_<suite>.json`` baselines.
+
+    PYTHONPATH=src python -m tools.bench_gate --check-schema BENCH_*.json
+    PYTHONPATH=src python -m tools.bench_gate \
+        --fresh /tmp/bench.json --baseline-dir . [--time-tol 3.0]
+
+Comparison rules (per table, rows matched by position):
+
+  * structure — suite present, table count, title, columns, row count,
+    row shape: any drift is a failure (the bench changed; re-baseline
+    deliberately with ``benchmarks.run <suite> --dry-run --json``).
+  * timing cells (the dicts ``TimingStats`` serializes, and plain
+    floats in columns whose name mentions ``ms``/``sec``/``tick``):
+    regression when ``fresh > base * time_tol``.  Getting FASTER never
+    fails — speedups update the baseline, they don't gate.
+  * throughput cells (column name contains ``/s``): inverted —
+    regression when ``fresh < base / time_tol``.
+  * other numeric cells: relative drift beyond ``--rel-tol`` fails in
+    either direction (bytes/elem, flops/elem, error-vs-oracle, retry
+    counters are deterministic structure, not noise).
+  * string cells: exact.
+
+Exit status 0 = gate passed, 1 = regression or structural drift,
+2 = usage/schema error.  Only suites present in BOTH documents gate;
+baselines with no fresh counterpart (and vice versa) are reported but
+do not fail, so a partial run can still be checked.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+SCHEMA = "repro-bench/v1"
+
+_TIMING_KEYS = {"p50", "min", "max", "iters"}
+_TIMING_HINTS = ("ms", "sec", "tick", "time")
+
+
+def _is_timing_dict(v) -> bool:
+    return isinstance(v, dict) and set(v) == _TIMING_KEYS
+
+
+def check_schema(doc, path="<doc>"):
+    """Return a list of schema-violation strings (empty = valid)."""
+    errs = []
+    if not isinstance(doc, dict):
+        return [f"{path}: not a JSON object"]
+    if doc.get("schema") != SCHEMA:
+        errs.append(f"{path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    suites = doc.get("suites")
+    if not isinstance(suites, dict) or not suites:
+        errs.append(f"{path}: missing/empty 'suites'")
+        return errs
+    for sname, tables in suites.items():
+        if not isinstance(tables, list) or not tables:
+            errs.append(f"{path}: suite {sname!r} is not a list of tables")
+            continue
+        for ti, t in enumerate(tables):
+            where = f"{path}: {sname}[{ti}]"
+            if not isinstance(t, dict):
+                errs.append(f"{where}: not an object")
+                continue
+            for key in ("title", "columns", "rows"):
+                if key not in t:
+                    errs.append(f"{where}: missing {key!r}")
+            cols = t.get("columns", [])
+            for ri, row in enumerate(t.get("rows", [])):
+                if not isinstance(row, list) or len(row) != len(cols):
+                    errs.append(f"{where} row {ri}: shape != columns")
+    return errs
+
+
+def _compare_cell(col, base, fresh, time_tol, rel_tol, where):
+    """One failure string, or None."""
+    if _is_timing_dict(base) != _is_timing_dict(fresh):
+        return f"{where}: cell kind changed ({base!r} -> {fresh!r})"
+    if _is_timing_dict(base):
+        b, f = base["p50"], fresh["p50"]
+        if f > b * time_tol:
+            return (f"{where} [{col}]: {f:.4g}s vs baseline {b:.4g}s "
+                    f"(> {time_tol:.2f}x)")
+        return None
+    if isinstance(base, str) or isinstance(fresh, str):
+        if base != fresh:
+            return f"{where} [{col}]: {fresh!r} != baseline {base!r}"
+        return None
+    if isinstance(base, bool) or base is None:
+        if base != fresh:
+            return f"{where} [{col}]: {fresh!r} != baseline {base!r}"
+        return None
+    # numeric
+    name = col.lower()
+    if "/s" in name:  # throughput: lower is worse
+        if fresh < base / time_tol:
+            return (f"{where} [{col}]: {fresh:.4g} vs baseline {base:.4g} "
+                    f"(< 1/{time_tol:.2f}x)")
+        return None
+    if any(h in name for h in _TIMING_HINTS):  # latency float: higher worse
+        if fresh > base * time_tol:
+            return (f"{where} [{col}]: {fresh:.4g} vs baseline {base:.4g} "
+                    f"(> {time_tol:.2f}x)")
+        return None
+    denom = max(abs(base), abs(fresh), 1e-12)
+    if abs(fresh - base) / denom > rel_tol:
+        return (f"{where} [{col}]: {fresh!r} drifted from baseline "
+                f"{base!r} (rel > {rel_tol:.2f})")
+    return None
+
+
+def compare_suite(name, base_tables, fresh_tables, time_tol, rel_tol):
+    """Return a list of failure strings for one suite."""
+    fails = []
+    if len(base_tables) != len(fresh_tables):
+        return [f"{name}: {len(fresh_tables)} tables vs baseline "
+                f"{len(base_tables)}"]
+    for ti, (bt, ft) in enumerate(zip(base_tables, fresh_tables)):
+        where = f"{name}[{ti}]"
+        if bt["title"] != ft["title"]:
+            fails.append(f"{where}: title changed "
+                         f"({bt['title']!r} -> {ft['title']!r})")
+            continue
+        if bt["columns"] != ft["columns"]:
+            fails.append(f"{where}: columns changed "
+                         f"({bt['columns']} -> {ft['columns']})")
+            continue
+        if len(bt["rows"]) != len(ft["rows"]):
+            fails.append(f"{where}: {len(ft['rows'])} rows vs baseline "
+                         f"{len(bt['rows'])}")
+            continue
+        for ri, (br, fr) in enumerate(zip(bt["rows"], ft["rows"])):
+            for col, bc, fc in zip(bt["columns"], br, fr):
+                err = _compare_cell(col, bc, fc, time_tol, rel_tol,
+                                    f"{where} row {ri}")
+                if err:
+                    fails.append(err)
+    return fails
+
+
+def gate(fresh_doc, baselines, time_tol=1.75, rel_tol=0.05, out=print):
+    """Diff ``fresh_doc`` against ``baselines`` ({suite: doc}); return
+    the list of failures (empty = gate passed)."""
+    fails = []
+    common = sorted(set(baselines) & set(fresh_doc["suites"]))
+    for name in sorted(set(baselines) - set(fresh_doc["suites"])):
+        out(f"[bench-gate] note: baseline {name!r} has no fresh run")
+    for name in sorted(set(fresh_doc["suites"]) - set(baselines)):
+        out(f"[bench-gate] note: suite {name!r} has no baseline yet")
+    for name in common:
+        base = baselines[name]["suites"][name]
+        suite_fails = compare_suite(name, base, fresh_doc["suites"][name],
+                                    time_tol, rel_tol)
+        out(f"[bench-gate] {name}: "
+            + ("OK" if not suite_fails else f"{len(suite_fails)} failure(s)"))
+        fails.extend(suite_fails)
+    if not common:
+        out("[bench-gate] warning: no suites in common — nothing gated")
+    return fails
+
+
+def load_baselines(baseline_dir):
+    """{suite: doc} from every BENCH_<suite>.json in ``baseline_dir``
+    that actually contains that suite."""
+    found = {}
+    for path in sorted(glob.glob(os.path.join(baseline_dir,
+                                              "BENCH_*.json"))):
+        suite = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        with open(path) as f:
+            doc = json.load(f)
+        errs = check_schema(doc, path)
+        if errs:
+            raise SystemExit("\n".join(errs))
+        if suite not in doc.get("suites", {}):
+            raise SystemExit(f"{path}: no suite {suite!r} inside")
+        found[suite] = doc
+    return found
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="tools.bench_gate",
+                                 description=__doc__)
+    ap.add_argument("--check-schema", nargs="+", metavar="FILE",
+                    default=None,
+                    help="validate documents and exit (no gating)")
+    ap.add_argument("--fresh", metavar="FILE",
+                    help="fresh benchmarks.run --json document")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding BENCH_<suite>.json")
+    ap.add_argument("--time-tol", type=float, default=1.75,
+                    help="timing ratio allowed before failing "
+                         "(default %(default)s)")
+    ap.add_argument("--rel-tol", type=float, default=0.05,
+                    help="relative drift allowed on plain numeric cells "
+                         "(default %(default)s)")
+    args = ap.parse_args(argv)
+
+    if args.check_schema is not None:
+        bad = 0
+        for path in args.check_schema:
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+                errs = check_schema(doc, path)
+            except (OSError, ValueError) as e:
+                errs = [f"{path}: {e}"]
+            if errs:
+                bad += 1
+                print("\n".join(errs))
+            else:
+                print(f"{path}: schema ok "
+                      f"({len(doc['suites'])} suite(s))")
+        return 2 if bad else 0
+
+    if not args.fresh:
+        ap.error("--fresh is required unless --check-schema")
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    errs = check_schema(fresh, args.fresh)
+    if errs:
+        print("\n".join(errs))
+        return 2
+    baselines = load_baselines(args.baseline_dir)
+    fails = gate(fresh, baselines, args.time_tol, args.rel_tol)
+    for msg in fails:
+        print(f"[bench-gate] FAIL {msg}")
+    if fails:
+        print(f"[bench-gate] REGRESSION: {len(fails)} failure(s) vs "
+              f"baselines in {args.baseline_dir}")
+        return 1
+    print("[bench-gate] all gated suites within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

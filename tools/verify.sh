@@ -168,8 +168,31 @@ EOF
 echo "== attention benchmark dry-run smoke =="
 python -m benchmarks.fig_attention --dry-run
 
-echo "== benchmark dry-run smoke =="
-python -m benchmarks.run --dry-run
+echo "== benchmark dry-run smoke + bench trajectory gate =="
+python -m benchmarks.run --dry-run --json /tmp/bench.json
+python -m tools.bench_gate --check-schema /tmp/bench.json BENCH_*.json
+# Smoke-sized timings gate loosely (CI wall-clock noise); structure,
+# parity strings, bytes/flops, and error-vs-oracle gate tight.
+python -m tools.bench_gate --fresh /tmp/bench.json --baseline-dir . \
+    --time-tol 3.0
+
+echo "== trace-export smoke: serve run -> Chrome trace_event JSON =="
+python -m repro.launch.serve --arch stablelm-12b --smoke --requests 3 \
+    --max-new-tokens 4 --temperature 0 --attn-impl flash \
+    --trace /tmp/serve_trace.json --stats-json > /tmp/serve_out.txt
+python - <<'EOF'
+import json
+doc = json.load(open("/tmp/serve_trace.json"))
+evs = doc["traceEvents"]
+assert any(e["name"] == "serve.tick" and e["ph"] == "X" for e in evs)
+assert any(e["name"] == "serve.request.finish" for e in evs)
+assert any(e["name"].startswith("policy.") for e in evs)
+line = [l for l in open("/tmp/serve_out.txt")
+        if l.startswith("stats-json: ")][0]
+parsed = json.loads(line[len("stats-json: "):])
+assert parsed["stats"]["total_finished"] == 3
+print(f"  {len(evs)} events ({sorted({e['name'] for e in evs})})")
+EOF
 
 echo "== examples smoke: relational query plan =="
 python examples/table_queries.py
