@@ -48,7 +48,7 @@ SUITES = {
     "moe": [moe_dispatch.run],
     "relational": [fig_relational.run, fig_relational.run_sort_join],
     "roofline": [roofline_table.run],
-    "serve": [fig7_traffic.run_faults],
+    "serve": [fig7_traffic.run_faults, fig7_traffic.run_traffic],
 }
 
 

@@ -244,6 +244,62 @@ def choose_attention_schedule(
         split_kv_row_cap).value
 
 
+def explain_cache_layout(
+    max_slots: int,
+    max_len: int,
+    page_size: int,
+    num_pages: "int | None" = None,
+    expected_len: "int | None" = None,
+) -> Decision:
+    """Serve KV-cache layout rule (``contiguous`` | ``paged``) with its
+    working shown — emitted as a ``policy.cache_layout`` trace event.
+
+    The contiguous layout reserves ``max_slots · max_len`` K/V slots up
+    front; the paged layout (serve/paging.py) reserves ``num_pages ·
+    page_size`` and assigns pages on demand, so memory follows ACTUAL
+    sequence length. Decide paged when the page budget is below the
+    worst case (contiguous could not even allocate the pool) or when the
+    expected length leaves most of a contiguous slot dead; otherwise
+    the indirection buys nothing and contiguous keeps the simpler
+    (gather-free) addressing.
+    """
+    worst = max_slots * max_len
+    budget = worst if num_pages is None else num_pages * page_size
+    inputs = dict(max_slots=max_slots, max_len=max_len,
+                  page_size=page_size, num_pages=num_pages,
+                  expected_len=expected_len, worst_tokens=worst,
+                  budget_tokens=budget)
+    if budget < worst:
+        return Decision(
+            "cache_layout", "paged",
+            f"page budget {budget} tokens < worst case {worst}: only "
+            f"on-demand pages can host {max_slots} slots; admission "
+            f"backpressure replaces up-front reservation", inputs).emit()
+    if expected_len is not None and 2 * expected_len <= max_len:
+        return Decision(
+            "cache_layout", "paged",
+            f"expected length {expected_len} <= max_len {max_len}/2: a "
+            f"contiguous slot would be mostly dead reservation",
+            inputs).emit()
+    return Decision(
+        "cache_layout", "contiguous",
+        f"budget {budget} covers the worst case {worst} and lengths run "
+        f"near max_len: page indirection buys nothing", inputs).emit()
+
+
+def choose_cache_layout(
+    max_slots: int,
+    max_len: int,
+    page_size: int,
+    num_pages: "int | None" = None,
+    expected_len: "int | None" = None,
+) -> str:
+    """Serve cache layout for ``EngineConfig.cache_layout="auto"`` —
+    see ``explain_cache_layout`` for the rule and rationale."""
+    return explain_cache_layout(
+        max_slots, max_len, page_size, num_pages, expected_len).value
+
+
 def choose(
     n: int,
     itemsize: int = 4,

@@ -90,6 +90,7 @@ def flash_attention_kernel(
     return_stats: bool = False,
     use_kv_bounds: bool = True,
     count_cells: bool = False,
+    kv_block_map: "tuple | None" = None,
     interpret: bool = False,
 ):
     """Attention over flattened (batch·heads) leading axes.
@@ -107,6 +108,13 @@ def flash_attention_kernel(
     that are provably fully masked — bitwise-identical output);
     ``count_cells=True`` (carry schedule) additionally returns the
     per-(head, q-block) executed-cell counts.
+
+    ``kv_block_map`` routes logical KV block ``j`` to physical block
+    ``kv_block_map[j]`` of the k/v arrays through the layout's index
+    maps (paged KV pools, ``serve/paging.py``): the fold consumes a
+    page-permuted pool without a materialized contiguous gather, and —
+    because masks/bounds are keyed on LOGICAL positions — the output is
+    bitwise identical to running on the contiguously-laid-out cache.
     """
     BH, Tq, d = q.shape
     BHkv, Tk, dk = k.shape
@@ -122,7 +130,9 @@ def flash_attention_kernel(
         bh=BH, bh_kv=BHkv, tq=Tq, tk=Tk, d=d, bq=block_q, bk=block_k,
         group=group, splits=splits, leaf_dims=(1, 1, d),
         out_dims=(d, 1, 1) if return_stats else (d,),
-        kv_bounds=(causal, window, kv_len) if use_kv_bounds else None)
+        kv_bounds=(causal, window, kv_len) if use_kv_bounds else None,
+        kv_block_map=(tuple(int(b) for b in kv_block_map)
+                      if kv_block_map is not None else None))
     spec = softmax_pair_kernel_spec(
         scale=scale, causal=causal, window=window, softcap=softcap,
         kv_len=kv_len, block_q=block_q, block_k=block_k,

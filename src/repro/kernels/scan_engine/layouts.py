@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -248,6 +249,26 @@ class Channels(_UniformLeaves):
         return sem.at[pl.program_id(0), pl.program_id(1), seq_index]
 
 
+def _block_map_lookup(table):
+    """Scalar lookup ``j -> table[j]`` usable inside a Pallas index map.
+
+    Index maps may not capture ARRAY constants, so the table is encoded
+    arithmetically over python-int literals (a one-hot dot product on
+    the traced block id). O(len(table)) scalar ops per grid cell — cheap
+    at block granularity; a scalar-prefetch table
+    (``PrefetchScalarGridSpec``) is the TPU-native upgrade path.
+    """
+    table = tuple(int(x) for x in table)
+
+    def look(j):
+        out = jnp.int32(0)
+        for idx, phys in enumerate(table):
+            out = out + jnp.int32(phys) * (j == idx).astype(jnp.int32)
+        return out
+
+    return look
+
+
 def block_live(qi, kj, *, bq, bk, causal, window, kv_len):
     """Whether the (q-block ``qi``, kv-block ``kj``) mask has ANY live
     entry — the per-q-block KV extent in predicate form.
@@ -309,6 +330,11 @@ class _AttnFold:
     op_kinds: tuple = ("q", "kv", "kv")
     out_dims: "tuple | None" = None    # per-output trailing dims; all d
     kv_bounds: "tuple | None" = None   # (causal, window, kv_len) extent
+    # Page indirection (serve/paging.py): logical KV block j reads
+    # physical block kv_block_map[j] — block-granular gather folded into
+    # the operand INDEX MAPS, so a paged pool feeds the fold with no
+    # materialized contiguous copy. None = identity addressing.
+    kv_block_map: "tuple | None" = None
 
     def __post_init__(self):
         name = type(self).__name__
@@ -316,6 +342,10 @@ class _AttnFold:
         if self.bh != self.bh_kv * self.group:
             raise ValueError(
                 f"bh={self.bh} != bh_kv={self.bh_kv} * group={self.group}")
+        if self.kv_block_map is not None and len(self.kv_block_map) != self.nk:
+            raise ValueError(
+                f"kv_block_map has {len(self.kv_block_map)} entries for "
+                f"{self.nk} logical KV blocks")
         if self.num_seq_blocks % self.splits:
             raise ValueError(
                 f"splits={self.splits} must divide {self.num_seq_blocks} "
@@ -460,6 +490,17 @@ class KVBlocks(_AttnFold):
                                     lambda h, i, c, s: (h, i, 0))
             return pl.BlockSpec((1, self.bq, dim),
                                 lambda h, i, j: (h, i, 0))
+        if self.kv_block_map is not None:
+            # Paged addressing: the logical fold position routes through
+            # the block map; the grid walk (and with it kv_bounds /
+            # fold_active, keyed on LOGICAL ids) is unchanged.
+            m = _block_map_lookup(self.kv_block_map)
+            if split:
+                return pl.BlockSpec((1, self.bk, self.d),
+                                    lambda h, i, c, s, g=g, bpc=bpc, m=m:
+                                    (h // g, m(c * bpc + s), 0))
+            return pl.BlockSpec((1, self.bk, self.d),
+                                lambda h, i, j, g=g, m=m: (h // g, m(j), 0))
         if split:
             return pl.BlockSpec((1, self.bk, self.d),
                                 lambda h, i, c, s, g=g, bpc=bpc:

@@ -160,6 +160,30 @@ def apply_attention(
     kh = k.swapaxes(1, 2)
     vh = v.swapaxes(1, 2)
 
+    paged_pools = None
+    if cache is not None and "k_pages" in cache:
+        # Paged KV (serve/paging.py): the layer cache is a page POOL
+        # plus a per-row page table. Gather the per-row contiguous view
+        # and run the standard append path on it — the gathered live
+        # positions hold exactly the contiguous layout's values and the
+        # dead ones are finite null-page data that the zeroed-probability
+        # mask turns into exact-zero contributions, so decode stays
+        # BITWISE identical to the contiguous cache. The written token
+        # is scattered back to its page afterwards.
+        from repro.serve import paging as _paging
+        if S != 1:
+            raise ValueError(
+                f"paged KV cache supports single-token decode only "
+                f"(chunked prefill stages contiguously); got S={S}")
+        if window is not None:
+            raise ValueError("local (windowed) layers are not paged")
+        paged_pools = (cache["k_pages"], cache["v_pages"], cache["pt"],
+                       _paging)
+        cache = {
+            "k": _paging.gather_pages(cache["k_pages"], cache["pt"]),
+            "v": _paging.gather_pages(cache["v_pages"], cache["pt"]),
+        }
+
     new_cache = cache
     import os as _os
     _baseline = bool(_os.environ.get("REPRO_BASELINE"))
@@ -276,6 +300,21 @@ def apply_attention(
                 cache_len == 0, _flash_prefill, _cached_dense, None)
         else:
             out = _cached_dense(None)
+        if paged_pools is not None:
+            # The gathered view was a scratch copy; persist only the
+            # newly-written token (kh/vh at S == 1) back into its page.
+            # Inactive rows (cache_len 0, unassigned table entries) land
+            # in the null page by construction.
+            pool_k, pool_v, pt, _paging = paged_pools
+            w = write_at if per_row else jnp.broadcast_to(
+                jnp.asarray(write_at)[None], (B,))
+            new_cache = {
+                "k_pages": _paging.scatter_token(
+                    pool_k, kh[:, :, 0, :], pt, w),
+                "v_pages": _paging.scatter_token(
+                    pool_v, vh[:, :, 0, :], pt, w),
+                "pt": pt,
+            }
     else:
         if impl is None:
             import os

@@ -3,16 +3,26 @@ from repro.serve.engine import (AdmissionError, Engine, EngineConfig,
                                 Request)
 from repro.serve.faults import (FaultInjector, FaultSpec, InjectedFault,
                                 StepContext)
+from repro.serve.paging import (PageAllocator, PageTable, gather_pages,
+                                paged_layer_names, pages_for, scatter_prefix,
+                                scatter_token)
 from repro.serve.sampling import finite_rows, sample_logits
 from repro.serve.stats import FINISH_REASONS, EngineStats
 from repro.serve.steps import (bucket_len, bucketable,
-                               make_bucketed_prefill_fn, make_prefill_fn,
+                               init_paged_cache_for,
+                               make_bucketed_prefill_fn,
+                               make_chunked_prefill_fn,
+                               make_paged_serve_step, make_prefill_fn,
                                make_serve_step)
 
 __all__ = [
     "AdmissionError", "Engine", "EngineConfig", "EngineDeadlineError",
     "EngineStats", "EngineStepError", "FaultInjector", "FaultSpec",
-    "FINISH_REASONS", "InjectedFault", "Request", "StepContext",
-    "bucket_len", "bucketable", "finite_rows", "make_bucketed_prefill_fn",
-    "make_prefill_fn", "make_serve_step", "sample_logits",
+    "FINISH_REASONS", "InjectedFault", "PageAllocator", "PageTable",
+    "Request", "StepContext",
+    "bucket_len", "bucketable", "finite_rows", "gather_pages",
+    "init_paged_cache_for", "make_bucketed_prefill_fn",
+    "make_chunked_prefill_fn", "make_paged_serve_step", "make_prefill_fn",
+    "make_serve_step", "paged_layer_names", "pages_for", "sample_logits",
+    "scatter_prefix", "scatter_token",
 ]

@@ -46,6 +46,19 @@ recurrent (ssm/xlstm) state.
 Fault injection (``serve/faults.py``) hooks the two jitted entry points;
 the safe route is deliberately un-wrapped so the ladder escapes the
 injector the way a real fallback kernel escapes a broken primary one.
+
+Cache layouts (``EngineConfig.cache_layout``): the default
+``"contiguous"`` layout reserves one padded ``max_len`` KV row per slot;
+``"paged"`` replaces the rows with a shared page pool plus per-slot page
+tables (``serve/paging.py``) so HBM scales with ACTUAL sequence length
+— the same cache-memory budget admits strictly more concurrent
+sequences. Under paging ``finish_reason="cache_full"`` means the
+ALLOCATOR is exhausted (pool empty), and admission applies backpressure
+(the request waits) instead of reserving worst-case rows up front.
+Decode under either layout is bitwise identical at equal configs.
+``prefill_chunk`` additionally stages long prompts one chunk per tick
+so resident decodes interleave instead of stalling behind a monolithic
+prefill.
 """
 
 from __future__ import annotations
@@ -60,16 +73,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.scan import policy as scan_policy
 from repro.models.config import ModelConfig
 from repro.obs import trace
 from repro.obs.metrics import Registry
 from repro.relational import compact as rel_compact
+from repro.serve import paging
 from repro.serve.faults import StepContext
 from repro.serve.sampling import sample_logits
 from repro.serve.stats import FINISH_REASONS, EngineStats
 from repro.serve.steps import (bucket_len, bucketable, init_cache_for,
-                               make_bucketed_prefill_fn, make_prefill_fn,
-                               make_serve_step)
+                               init_paged_cache_for,
+                               make_bucketed_prefill_fn,
+                               make_chunked_prefill_fn, make_paged_serve_step,
+                               make_prefill_fn, make_serve_step)
 
 Pytree = Any
 
@@ -123,12 +140,25 @@ class EngineConfig:
     bucket_prompts: bool = True         # pad prompts to pow2 buckets
     max_prefill_variants: int = 8       # LRU cap on jitted prefill shapes
     slow_tick_s: Optional[float] = None  # wall-clock SLO; over -> slow_ticks
+    # -- paged KV cache (serve/paging.py) -------------------------------
+    cache_layout: str = "contiguous"    # "contiguous" | "paged" | "auto"
+    page_size: int = 16                 # tokens per KV page
+    num_pages: Optional[int] = None     # pool size; None = worst case + null
+    prefill_chunk: Optional[int] = None  # stage long prompts N tokens/tick
 
     def __post_init__(self):
         if self.admission_policy not in ("reject", "block"):
             raise ValueError(
                 f"admission_policy must be 'reject' or 'block', "
                 f"got {self.admission_policy!r}")
+        if self.cache_layout not in ("contiguous", "paged", "auto"):
+            raise ValueError(
+                f"cache_layout must be 'contiguous', 'paged' or 'auto', "
+                f"got {self.cache_layout!r}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size={self.page_size} < 1")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk={self.prefill_chunk} < 1")
 
 
 @dataclasses.dataclass
@@ -157,10 +187,12 @@ class Request:
 _STEP_JIT: Dict[tuple, Any] = {}
 
 
-def _jit_step(cfg: ModelConfig, ssm_impl: Optional[str], donate: bool):
-    key = (cfg, ssm_impl, donate)
+def _jit_step(cfg: ModelConfig, ssm_impl: Optional[str], donate: bool,
+              paged: bool = False):
+    key = (cfg, ssm_impl, donate, paged)
     if key not in _STEP_JIT:
-        fn = make_serve_step(cfg, ssm_impl=ssm_impl)
+        fn = (make_paged_serve_step(cfg, ssm_impl=ssm_impl) if paged
+              else make_serve_step(cfg, ssm_impl=ssm_impl))
         _STEP_JIT[key] = (jax.jit(fn, donate_argnums=(2,)) if donate
                           else jax.jit(fn))
     return _STEP_JIT[key]
@@ -180,12 +212,25 @@ class Engine:
         self.metrics = metrics
         self.key = jax.random.PRNGKey(ecfg.seed)
 
+        # Cache layout: "auto" asks the policy layer (budget below the
+        # worst case, or typical lengths far under max_len -> paged).
+        layout = ecfg.cache_layout
+        if layout == "auto":
+            layout = scan_policy.choose_cache_layout(
+                ecfg.max_slots, ecfg.max_len, ecfg.page_size,
+                num_pages=ecfg.num_pages)
+        self.cache_layout = layout
+        self._paged = layout == "paged"
+
         ssm_primary = None if ecfg.ssm_impl == "auto" else ecfg.ssm_impl
-        self._step = _jit_step(cfg, ssm_primary, donate=ecfg.donate_cache)
-        self._step_nodonate = _jit_step(cfg, ssm_primary, donate=False)
+        self._step = _jit_step(cfg, ssm_primary, donate=ecfg.donate_cache,
+                               paged=self._paged)
+        self._step_nodonate = _jit_step(cfg, ssm_primary, donate=False,
+                                        paged=self._paged)
         # The SAFE route: dense attention (decode is dense already) and
         # the jnp reference scan for SSM layers; never injector-wrapped.
-        self._step_safe = _jit_step(cfg, "chunked", donate=False)
+        self._step_safe = _jit_step(cfg, "chunked", donate=False,
+                                    paged=self._paged)
         self._wstep = (injector.wrap_step(self._step) if injector
                        else self._step)
         self._wstep_probe = (injector.wrap_step(self._step_nodonate)
@@ -203,8 +248,32 @@ class Engine:
         self._tick = 0
         self._nan_streak = 0
 
+        # Chunked prefill shares bucketing's gate (pads in the staging
+        # cache must be inert: pure global-attention stacks only).
+        self._chunk_ok = ecfg.prefill_chunk is not None and bucketable(cfg)
+        self._chunk_job: Optional[dict] = None
+
         B, L = ecfg.max_slots, ecfg.max_len
-        self.cache = init_cache_for(cfg, B, L)
+        if self._paged:
+            if L % ecfg.page_size:
+                raise ValueError(
+                    f"max_len={L} must be a multiple of page_size="
+                    f"{ecfg.page_size}")
+            self._paged_names = paging.paged_layer_names(cfg)
+            n_pages = (ecfg.num_pages if ecfg.num_pages is not None
+                       else B * (L // ecfg.page_size) + 1)
+            self.allocator: Optional[paging.PageAllocator] = \
+                paging.PageAllocator(n_pages, ecfg.page_size,
+                                     stats=self.stats, metrics=metrics)
+            self.ptable: Optional[paging.PageTable] = \
+                paging.PageTable(B, L // ecfg.page_size)
+            self.cache = init_paged_cache_for(cfg, B, L, ecfg.page_size,
+                                              n_pages)
+        else:
+            self._paged_names = ()
+            self.allocator = None
+            self.ptable = None
+            self.cache = init_cache_for(cfg, B, L)
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.lengths = np.zeros(B, np.int64)          # per-slot position
         self.budgets = np.zeros(B, np.int64)          # remaining new tokens
@@ -214,7 +283,11 @@ class Engine:
 
     # -- slot bookkeeping (scan-based compaction) -----------------------
     def _free_slots(self) -> np.ndarray:
-        free = np.array([r is None for r in self.slot_req], np.int32)
+        # A staging chunked-prefill job holds its destination slot so
+        # admission cannot hand it out before the job finalizes.
+        held = self._chunk_job["slot"] if self._chunk_job is not None else -1
+        free = np.array([r is None and i != held
+                         for i, r in enumerate(self.slot_req)], np.int32)
         # Stream compaction over the free bitmap (paper §1: "new offsets
         # during a partitioning step"): ONE mask scan inside
         # filter_compact packs the free slot ids to the front. The
@@ -305,6 +378,12 @@ class Engine:
                 self._finish(req, "cancelled")
                 self.stats.observe_queue(len(self.waiting))
                 return True
+        if (self._chunk_job is not None
+                and self._chunk_job["req"].rid == rid):
+            req = self._chunk_job["req"]
+            self._chunk_job = None
+            self._finish(req, "cancelled")
+            return True
         for slot, req in enumerate(self.slot_req):
             if req is not None and req.rid == rid:
                 self._release(slot)
@@ -313,47 +392,251 @@ class Engine:
         return False
 
     def _release(self, slot: int) -> None:
+        if self._paged and int(self.ptable.counts[slot]):
+            # Host bookkeeping only; the device page table is refreshed
+            # once per tick (in _ensure_pages) before the decode step
+            # reads it, so a freed-then-reallocated page is never
+            # reachable through a stale table row.
+            self.allocator.release(self.ptable.release(slot))
         self.slot_req[slot] = None
         self.lengths[slot] = 0
         self.budgets[slot] = 0
 
     def _admit(self) -> None:
+        self._advance_chunk_job()
         free_idx, _ = self._free_slots()
-        while self.waiting and len(free_idx):
-            slot = int(free_idx[0])
-            req = self.waiting.pop(0)
+        free_list = [int(i) for i in free_idx]
+        while self.waiting and free_list:
+            req = self.waiting[0]
+            S = int(np.asarray(req.prompt).shape[0])
+            if self._paged:
+                need = paging.pages_for(S, self.ecfg.page_size)
+                if need > self.allocator.free_count:
+                    # Allocator exhausted: admission BACKPRESSURE. The
+                    # request stays queued (FIFO order preserved) until
+                    # decode finishes free pages — the paged analogue of
+                    # waiting for a free slot, replacing the contiguous
+                    # layout's up-front worst-case reservation.
+                    trace.instant("serve.admit.backpressure", rid=req.rid,
+                                  want=need,
+                                  free=self.allocator.free_count)
+                    break
+            self.waiting.pop(0)
             self.stats.observe_queue(len(self.waiting))
             self.stats.admitted += 1
+            if self._chunkable(req, S):
+                self._chunk_job = {
+                    "req": req, "slot": free_list.pop(0), "pos": 0,
+                    "cache": init_cache_for(self.cfg, 1, self.ecfg.max_len),
+                }
+                trace.instant("serve.prefill.chunk_start", rid=req.rid,
+                              prompt_len=S, chunk=self.ecfg.prefill_chunk)
+                continue
             out = self._prefill_request(req)
             if out is None:
                 continue                      # finished "error" inside
             logits, cache1 = out
-            free_idx = free_idx[1:]
+            self._install(free_list.pop(0), req, logits, cache1)
+
+    def _install(self, slot: int, req: Request, logits, cache1) -> None:
+        """Commit a completed prefill into ``slot``: copy/page its cache
+        row into the pool, sample the first token, and apply the
+        admission-time finish checks. Shared by one-shot admission and
+        chunked-prefill finalize."""
+        S = int(np.asarray(req.prompt).shape[0])
+        if self._paged:
+            got = self.allocator.alloc(
+                [paging.pages_for(S, self.ecfg.page_size)])
+            if got is None:
+                # Pages vanished between precheck and install (decode
+                # growth during a chunked prefill): backpressure — back
+                # to the head of the queue with the staging work
+                # discarded.
+                self.waiting.insert(0, req)
+                self.stats.observe_queue(len(self.waiting))
+                return
+            pages = got[0]
+            self.ptable.assign(slot, pages)
+            layers = {}
+            for name, leaf in self.cache["layers"].items():
+                if name in self._paged_names:
+                    kv, one = leaf["kv"], cache1[name]["kv"]
+                    layers[name] = {"kv": {
+                        "k_pages": paging.scatter_prefix(
+                            kv["k_pages"], one["k"], pages),
+                        "v_pages": paging.scatter_prefix(
+                            kv["v_pages"], one["v"], pages),
+                    }}
+                else:
+                    layers[name] = jax.tree.map(
+                        lambda pool, one_: _scatter_row(
+                            pool, one_.astype(pool.dtype), slot),
+                        leaf, cache1[name])
+            self.cache = {"layers": layers,
+                          "page_table": self.cache["page_table"]}
+        else:
             # Copy the single-row prefill cache into the pool at `slot`
             # (cache leaves are (layers, batch, ...); prefill batch = 1).
             self.cache = jax.tree.map(
                 lambda pool, one: _scatter_row(pool, one.astype(pool.dtype),
                                                slot),
                 self.cache, cache1)
-            first = self._sample(logits)[0]
-            req.output.append(int(first))
-            self.stats.tokens_generated += 1
-            S = int(np.asarray(req.prompt).shape[0])
-            budget = self._budget_of(req) - 1
-            if int(first) == self.ecfg.eos_id:
-                self._finish(req, "eos")
-                continue
-            if budget <= 0:
-                self._finish(req, "length_budget")
-                continue
-            if S + 1 >= self.ecfg.max_len:
-                self._warn_cache_full(req)
-                self._finish(req, "cache_full")
-                continue
+        first = self._sample(logits)[0]
+        req.output.append(int(first))
+        self.stats.tokens_generated += 1
+        budget = self._budget_of(req) - 1
+        if int(first) == self.ecfg.eos_id:
+            reason = "eos"
+        elif budget <= 0:
+            reason = "length_budget"
+        elif S + 1 >= self.ecfg.max_len:
+            self._warn_cache_full(req)
+            reason = "cache_full"
+        else:
             self.tokens = self.tokens.at[slot, 0].set(first)
             self.lengths[slot] = S
             self.budgets[slot] = budget
             self.slot_req[slot] = req
+            return
+        if self._paged:
+            self._release(slot)               # returns the fresh pages
+        self._finish(req, reason)
+
+    # -- chunked prefill (one chunk per tick) ---------------------------
+    def _chunkable(self, req: Request, S: int) -> bool:
+        C = self.ecfg.prefill_chunk
+        return (self._chunk_ok and self._chunk_job is None
+                and C is not None and S > C
+                and not getattr(req, "_no_chunk", False))
+
+    def _advance_chunk_job(self) -> None:
+        """Run ONE chunk of the staged long-prompt prefill, so decode
+        ticks for resident slots interleave with the long prompt instead
+        of stalling behind a monolithic prefill. The staging cache is
+        contiguous (single row); pages are only claimed at finalize."""
+        job = self._chunk_job
+        if job is None:
+            return
+        req = job["req"]
+        C = int(self.ecfg.prefill_chunk)
+        prompt = np.asarray(req.prompt)
+        S = int(prompt.size)
+        lo = int(job["pos"])
+        hi = min(lo + C, S)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, : hi - lo] = prompt[lo:hi]
+        fn = self._chunk_prefill_fn()
+        if self.injector is not None:
+            self.injector.begin(StepContext(
+                tick=self._tick, rids=(req.rid,), op="prefill"))
+        try:
+            with trace.span("serve.prefill.chunk", rid=req.rid,
+                            lo=lo, hi=hi, tick=self._tick):
+                logits, cache = fn(self.params, jnp.asarray(chunk),
+                                   job["cache"], jnp.asarray(lo, jnp.int32),
+                                   jnp.asarray(hi - lo, jnp.int32))
+            self.stats.prefill_chunks += 1
+        except Exception as e:                # noqa: BLE001 — jitted call
+            # The chunk route carries no retry ladder of its own: fall
+            # back to the one-shot path, which has retry + degrade.
+            self.stats.prefill_retries += 1
+            req._no_chunk = True
+            self._chunk_job = None
+            self.waiting.insert(0, req)
+            self.stats.observe_queue(len(self.waiting))
+            trace.instant("serve.prefill.chunk_abort", rid=req.rid,
+                          error=repr(e))
+            return
+        job["cache"], job["pos"] = cache, hi
+        if hi < S:
+            return
+        self._chunk_job = None
+        if not np.isfinite(np.asarray(logits)).all():
+            self.stats.nonfinite_ticks += 1
+            req._no_chunk = True
+            self.waiting.insert(0, req)
+            self.stats.observe_queue(len(self.waiting))
+            trace.instant("serve.prefill.chunk_abort", rid=req.rid,
+                          error="non-finite logits")
+            return
+        self._install(job["slot"], req, logits, cache)
+
+    def _chunk_prefill_fn(self):
+        key = ("chunk", int(self.ecfg.prefill_chunk))
+        if key in self._prefill_cache:
+            self._prefill_cache.move_to_end(key)
+            return self._prefill_cache[key]
+        fn = jax.jit(make_chunked_prefill_fn(
+            self.cfg, self.ecfg.max_len,
+            attn_impl=self.ecfg.attn_impl,
+            attn_schedule=self.ecfg.attn_schedule))
+        if self.injector is not None:
+            fn = self.injector.wrap_prefill(fn)
+        self._prefill_cache[key] = fn
+        self.stats.prefill_compiles += 1
+        while len(self._prefill_cache) > self.ecfg.max_prefill_variants:
+            self._prefill_cache.popitem(last=False)
+            self.stats.prefill_cache_evictions += 1
+        return self._prefill_cache[key]
+
+    # -- paged bookkeeping ----------------------------------------------
+    def _sync_page_table(self) -> None:
+        self.cache = {"layers": self.cache["layers"],
+                      "page_table": self.ptable.device()}
+
+    def _ensure_pages(self) -> None:
+        """Grow each active slot's page list to cover its next decode
+        write; allocator exhaustion MID-decode finishes the victim with
+        ``cache_full`` (the paged meaning: pool empty, not row full).
+        Ends by refreshing the device page table — the single sync point
+        per tick, before the decode step reads it."""
+        if not self._paged:
+            return
+        ps = self.ecfg.page_size
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            need = paging.pages_for(int(self.lengths[slot]), ps)
+            have = int(self.ptable.counts[slot])
+            if need <= have:
+                continue
+            got = self.allocator.alloc([need - have])
+            if got is None:
+                self._warn_cache_full(req)
+                self._release(slot)
+                self._finish(req, "cache_full")
+                continue
+            self.ptable.assign(slot, got[0])
+        self._sync_page_table()
+
+    def defrag(self) -> int:
+        """Compact live pages to the front of the pool: one stable
+        partition-by-liveness permutation (``PageAllocator.defrag_plan``)
+        applied to the pools, the page table, and the free bitmap.
+        Decode output is unchanged — the gathered view is invariant
+        under page renaming. Returns the number of live pages moved."""
+        if not self._paged:
+            raise ValueError("defrag() requires cache_layout='paged'")
+        dest = self.allocator.defrag_plan()
+        d = jnp.asarray(dest, jnp.int32)
+        layers = {}
+        for name, leaf in self.cache["layers"].items():
+            if name in self._paged_names:
+                kv = leaf["kv"]
+                layers[name] = {"kv": {
+                    "k_pages": jnp.zeros_like(kv["k_pages"])
+                               .at[:, d].set(kv["k_pages"]),
+                    "v_pages": jnp.zeros_like(kv["v_pages"])
+                               .at[:, d].set(kv["v_pages"]),
+                }}
+            else:
+                layers[name] = leaf
+        self.cache = {"layers": layers,
+                      "page_table": self.cache["page_table"]}
+        self.ptable.remap(dest)
+        moved = self.allocator.apply_defrag(dest)
+        self._sync_page_table()
+        return moved
 
     def _prefill_request(self, req: Request):
         """Run prefill for one request with retry + degrade. Returns
@@ -469,6 +752,14 @@ class Engine:
                 self.waiting.remove(req)
                 self._finish(req, "deadline")
         self.stats.observe_queue(len(self.waiting))
+        job = self._chunk_job
+        if job is not None:
+            req = job["req"]
+            ttl = (req.deadline_ticks if req.deadline_ticks is not None
+                   else ttl_default)
+            if ttl is not None and self._tick - req.submit_tick >= ttl:
+                self._chunk_job = None
+                self._finish(req, "deadline")
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -498,6 +789,7 @@ class Engine:
         self.stats.ticks += 1
         self._expire_deadlines()
         self._admit()
+        self._ensure_pages()
         active = self._active()
         if not active:
             return 0
@@ -715,11 +1007,13 @@ class Engine:
         survivors with ``finish_reason="deadline"``."""
         strict = self.ecfg.strict_deadlines if strict is None else strict
         for _ in range(max_ticks):
-            if not self.waiting and all(r is None for r in self.slot_req):
+            if (not self.waiting and self._chunk_job is None
+                    and all(r is None for r in self.slot_req)):
                 break
             self.step()
         else:
             survivors = (len(self.waiting)
+                         + (self._chunk_job is not None)
                          + sum(r is not None for r in self.slot_req))
             if survivors:
                 if strict:
@@ -729,6 +1023,10 @@ class Engine:
                         f"unfinished")
                 for req in list(self.waiting):
                     self.waiting.remove(req)
+                    self._finish(req, "deadline")
+                if self._chunk_job is not None:
+                    req = self._chunk_job["req"]
+                    self._chunk_job = None
                     self._finish(req, "deadline")
                 for slot, req in enumerate(self.slot_req):
                     if req is not None:
@@ -747,6 +1045,7 @@ class Engine:
                 f"request {req.rid} finished with invalid reason "
                 f"{req.finish_reason!r}")
         live = ([r.rid for r in self.waiting]
+                + ([self._chunk_job["req"].rid] if self._chunk_job else [])
                 + [r.rid for r in self.slot_req if r is not None])
         assert not (set(fin) & set(live)), (
             f"rids both finished and live: {set(fin) & set(live)}")

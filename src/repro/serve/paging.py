@@ -1,0 +1,280 @@
+"""Paged KV cache: page table + prefix-sum page allocator.
+
+The serve engine's contiguous layout reserves one padded ``max_len`` K/V
+buffer per slot, so HBM scales with worst-case length and concurrency
+dies long before memory does. This module replaces the slot buffer with
+a POOL of fixed-size pages and a per-sequence page-index vector — the
+vLLM organization — with every allocator decision running as a
+relational plan on the scan substrate (the paper's DB framing):
+
+  * free-page discovery is stream compaction over the free bitmap
+    (``relational.compact.filter_compact`` — one mask scan packs the
+    free page ids to the front);
+  * batched multi-sequence allocation slices that packed free list at
+    offsets from an EXCLUSIVE prefix sum of the per-sequence page
+    counts (``core.scan.cumsum(exclusive=True)``);
+  * ``defrag`` is a stable ``relational.partition`` of the physical
+    pages by liveness — live pages compact to the front, the table is
+    remapped through the permutation, and decode output is unchanged
+    (the gathered view is invariant under page renaming).
+
+Physical page 0 is the NULL page: never allocated, and every
+unassigned page-table entry points at it. Decode writes for inactive
+pool rows (``cache_len == 0``) and gathers past a sequence's allocated
+extent land there harmlessly — the zeroed-probability masking
+convention turns those positions into exact-zero softmax contributions,
+which is what keeps paged decode BITWISE identical to the contiguous
+layout (see ``models/layers/attention.py``).
+
+Observability: the allocator publishes ``serve.pages.in_use`` /
+``serve.pages.free`` / ``serve.pages.fragmentation`` gauges plus
+``serve.pages.alloc`` / ``serve.pages.free_op`` / ``serve.pages.defrag``
+trace instants, and bumps the engine's ``EngineStats`` page counters.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scan as scanlib
+from repro.obs import trace
+from repro.obs.metrics import Registry
+from repro.relational import compact as rel_compact
+from repro.relational import partition as rel_partition
+
+#: Block kinds whose KV cache is paged. Local (sliding-window) layers
+#: keep their O(window) ring buffers — paging a ring that is already
+#: small would only add indirection — and recurrent kinds (mamba/xlstm)
+#: carry O(1) state per slot, nothing to page.
+PAGED_KINDS = ("global", "moe", "shared_attn")
+
+
+def paged_layer_names(cfg) -> tuple:
+    """Stacked-block names (``p{pos}_{kind}``) whose KV leaves page."""
+    return tuple(f"p{pos}_{kind}"
+                 for pos, kind in enumerate(cfg.layer_pattern)
+                 if kind in PAGED_KINDS)
+
+
+def pages_for(length: int, page_size: int) -> int:
+    """Pages needed to hold positions ``[0, length)`` plus the slot the
+    NEXT decode write lands in (position ``length``)."""
+    return length // page_size + 1
+
+
+class PageTable:
+    """Per-slot page-index vectors (host bookkeeping + device view).
+
+    ``table[slot, j]`` is the physical page backing logical page ``j``
+    of the sequence in ``slot``; unassigned entries are 0 (the null
+    page). ``device()`` returns the (slots, pages_per_seq) int32 array
+    the jitted paged step gathers through.
+    """
+
+    def __init__(self, num_slots: int, pages_per_seq: int):
+        self.table = np.zeros((num_slots, pages_per_seq), np.int32)
+        self.counts = np.zeros(num_slots, np.int64)
+
+    def assign(self, slot: int, pages: np.ndarray) -> None:
+        n = int(self.counts[slot])
+        pages = np.asarray(pages, np.int32)
+        if n + pages.size > self.table.shape[1]:
+            raise ValueError(
+                f"slot {slot}: {n} + {pages.size} pages exceed "
+                f"pages_per_seq={self.table.shape[1]}")
+        self.table[slot, n:n + pages.size] = pages
+        self.counts[slot] = n + pages.size
+
+    def pages_of(self, slot: int) -> np.ndarray:
+        return self.table[slot, : int(self.counts[slot])].copy()
+
+    def release(self, slot: int) -> np.ndarray:
+        pages = self.pages_of(slot)
+        self.table[slot] = 0
+        self.counts[slot] = 0
+        return pages
+
+    def remap(self, new_of_old: np.ndarray) -> None:
+        """Rewrite every live entry through an old->new page permutation
+        (defrag). Null entries stay null (``new_of_old[0] == 0``)."""
+        self.table = np.asarray(new_of_old, np.int32)[self.table]
+
+    def device(self) -> jnp.ndarray:
+        return jnp.asarray(self.table)
+
+
+class PageAllocator:
+    """Free-page bookkeeping whose alloc/free paths are relational plans.
+
+    Page 0 is reserved as the null page at construction and never
+    handed out. ``stats`` (an ``EngineStats``) and ``metrics`` (an obs
+    ``Registry``) are both optional write-through mirrors.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 stats=None, metrics: Optional[Registry] = None):
+        if num_pages < 2:
+            raise ValueError(f"num_pages={num_pages} leaves no allocatable "
+                             f"page after the null page")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.free = np.ones(num_pages, bool)
+        self.free[0] = False                     # null page: pinned live
+        self.stats = stats
+        self.metrics = metrics
+        self._publish()
+
+    # -- introspection ---------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return int(self.free.sum())
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - 1 - self.free_count   # excl. null page
+
+    def fragmentation(self) -> float:
+        """1 - (largest contiguous free run / free pages): 0 when all
+        free memory is one extent, approaching 1 as it shatters."""
+        idx = np.flatnonzero(self.free)
+        if idx.size == 0:
+            return 0.0
+        runs = np.split(idx, np.flatnonzero(np.diff(idx) > 1) + 1)
+        return 1.0 - max(len(r) for r in runs) / idx.size
+
+    def _publish(self) -> None:
+        if self.metrics is not None:
+            self.metrics.gauge("serve.pages.in_use").set(self.in_use)
+            self.metrics.gauge("serve.pages.free").set(self.free_count)
+            self.metrics.gauge("serve.pages.fragmentation").set(
+                self.fragmentation())
+
+    # -- alloc / free (the relational plans) -----------------------------
+    def alloc(self, counts: Sequence[int]) -> "list[np.ndarray] | None":
+        """Batched multi-sequence allocation: ``counts[i]`` pages for
+        sequence ``i``. Returns per-sequence physical page-id vectors,
+        or None (and counts a failure) when the pool cannot satisfy the
+        whole batch — allocation is all-or-nothing."""
+        counts = [int(c) for c in counts]
+        total = sum(counts)
+        if any(c < 0 for c in counts) or total == 0:
+            raise ValueError(f"bad page counts {counts}")
+        if total > self.free_count:
+            if self.stats is not None:
+                self.stats.page_alloc_failures += 1
+            trace.instant("serve.pages.alloc", ok=False, want=total,
+                          free=self.free_count)
+            return None
+        # Free-page discovery: stream compaction over the free bitmap —
+        # one mask scan packs the free page ids to the front.
+        ids, n = rel_compact.filter_compact(
+            jnp.arange(self.num_pages, dtype=jnp.int32),
+            jnp.asarray(self.free))
+        ids = np.asarray(ids)[: int(n)]
+        # Batched gather offsets: the exclusive prefix sum of the
+        # per-sequence counts slices the packed free list (paper §1 —
+        # "new index values" from a histogram scan).
+        offs = np.asarray(scanlib.cumsum(
+            jnp.asarray(counts, jnp.int32), exclusive=True))
+        out = [ids[int(o): int(o) + c] for o, c in zip(offs, counts)]
+        for pages in out:
+            assert self.free[pages].all(), "double allocation"
+            self.free[pages] = False
+        if self.stats is not None:
+            self.stats.page_allocs += total
+        self._publish()
+        trace.instant("serve.pages.alloc", ok=True, pages=total,
+                      seqs=len(counts), free=self.free_count)
+        return out
+
+    def release(self, pages: np.ndarray) -> None:
+        pages = np.asarray(pages, np.int64)
+        if pages.size == 0:
+            return
+        if (pages == 0).any():
+            raise ValueError("cannot free the null page")
+        if self.free[pages].any():
+            raise ValueError(f"double free: {pages[self.free[pages]]}")
+        self.free[pages] = True
+        if self.stats is not None:
+            self.stats.page_frees += int(pages.size)
+        self._publish()
+        trace.instant("serve.pages.free_op", pages=int(pages.size),
+                      free=self.free_count)
+
+    # -- defrag (partition by liveness) ----------------------------------
+    def defrag_plan(self) -> np.ndarray:
+        """Old->new physical page permutation compacting live pages to
+        the front: a stable ``relational.partition`` of the page ids by
+        liveness (bucket 0 = live, bucket 1 = free). Stability keeps the
+        null page at index 0 and preserves live-page relative order."""
+        bucket = jnp.asarray(self.free, jnp.int32)      # live=0, free=1
+        plan = rel_partition.partition_plan(bucket, 2)
+        return np.asarray(plan.dest)
+
+    def apply_defrag(self, new_of_old: np.ndarray) -> int:
+        """Commit a defrag plan to the bitmap. Returns live pages moved.
+        (The caller is responsible for permuting the pools and remapping
+        its page tables through the same plan.)"""
+        new_of_old = np.asarray(new_of_old)
+        moved = int(((new_of_old != np.arange(self.num_pages))
+                     & ~self.free).sum())
+        live = self.in_use + 1                          # + null page
+        self.free[:] = True
+        self.free[:live] = False
+        if self.stats is not None:
+            self.stats.defrags += 1
+        self._publish()
+        trace.instant("serve.pages.defrag", moved=moved,
+                      live=live - 1, free=self.free_count)
+        return moved
+
+
+# ---------------------------------------------------------------------------
+# device-side pool views (used by the paged step / engine admission)
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(P, Hkv, ps, hd) pool × (B, n_log) table -> (B, Hkv, n_log·ps, hd)
+    contiguous per-row view — the shape the existing cached attention
+    path consumes, so paged decode reuses it bit-for-bit."""
+    P, Hkv, ps, hd = pool.shape
+    B, n_log = page_table.shape
+    g = jnp.moveaxis(pool[page_table], 2, 1)       # (B, Hkv, n_log, ps, hd)
+    return g.reshape(B, Hkv, n_log * ps, hd)
+
+
+def scatter_token(pool: jnp.ndarray, values: jnp.ndarray,
+                  page_table: jnp.ndarray, write_at: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Write one token row per sequence back into the pool.
+
+    pool (P, Hkv, ps, hd); values (B, Hkv, hd) — the K or V vector each
+    row just appended; write_at (B,) absolute positions. Rows whose
+    logical page is unassigned (inactive slots at position 0) hit the
+    null page.
+    """
+    ps = pool.shape[2]
+    phys = jnp.take_along_axis(page_table, (write_at // ps)[:, None],
+                               axis=1)[:, 0]                     # (B,)
+    off = write_at % ps
+    # Advanced indices (phys, off) straddle the Hkv slice, so they
+    # broadcast to the front: target view is (B, Hkv, hd).
+    return pool.at[phys, :, off, :].set(values.astype(pool.dtype))
+
+
+def scatter_prefix(pool: jnp.ndarray, row: jnp.ndarray,
+                   pages: np.ndarray) -> jnp.ndarray:
+    """Copy a prefilled contiguous cache row into freshly-allocated
+    pages. pool (per, P, Hkv, ps, hd); row (per, 1, Hkv, L, hd) with
+    L >= len(pages)·ps; pages (n,) physical ids."""
+    per, P, Hkv, ps, hd = pool.shape
+    n = int(np.asarray(pages).size)
+    seg = row[:, 0, :, : n * ps].reshape(per, Hkv, n, ps, hd)
+    seg = jnp.moveaxis(seg, 2, 1)                  # (per, n, Hkv, ps, hd)
+    return pool.at[:, jnp.asarray(np.asarray(pages, np.int32))].set(
+        seg.astype(pool.dtype))

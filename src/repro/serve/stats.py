@@ -67,6 +67,13 @@ class EngineStats:
     prefill_cache_evictions: int = 0
     slow_ticks: int = 0            # wall time above EngineConfig.slow_tick_s
 
+    # -- paged KV cache (serve/paging.py) --------------------------------
+    page_allocs: int = 0           # pages handed out by the allocator
+    page_frees: int = 0            # pages returned to the free pool
+    page_alloc_failures: int = 0   # allocation attempts the pool refused
+    prefill_chunks: int = 0        # chunked-prefill chunks executed
+    defrags: int = 0               # pool compactions (partition by liveness)
+
     # -- metrics mirroring ----------------------------------------------
     # ``_registry`` is deliberately NOT a dataclass field: asdict()/
     # equality stay counter-only and attachment survives neither copy
@@ -135,5 +142,8 @@ class EngineStats:
             f"slow_ticks={self.slow_ticks} "
             f"prefill_compiles={self.prefill_compiles} "
             f"prefill_evictions={self.prefill_cache_evictions} "
+            f"pages[allocs={self.page_allocs} frees={self.page_frees} "
+            f"failures={self.page_alloc_failures} defrags={self.defrags}] "
+            f"prefill_chunks={self.prefill_chunks} "
             f"peak_queue={self.peak_queue_depth}"
         )

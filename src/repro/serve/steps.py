@@ -153,6 +153,123 @@ def init_cache_for(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
     return lm_mod.init_cache(cfg, batch, max_len)
 
 
+# ---------------------------------------------------------------------------
+# paged layout (serve/paging.py): pools + page table instead of slot rows
+# ---------------------------------------------------------------------------
+
+
+def init_paged_cache_for(cfg: ModelConfig, batch: int, max_len: int,
+                         page_size: int, num_pages: int) -> Pytree:
+    """Paged decode cache: ``{"layers": ..., "page_table": ...}``.
+
+    Global-attention KV leaves become page POOLS of shape
+    ``(periods, num_pages, Hkv, page_size, hd)`` shared by all slots;
+    local ring buffers and recurrent (ssm/xlstm) state keep their
+    slot-indexed layout unchanged. The page table is one
+    ``(batch, max_len // page_size)`` int32 array shared across layers
+    (vLLM-style); entry 0 is the null page.
+    """
+    from repro.serve.paging import paged_layer_names
+    if cfg.is_encdec:
+        raise ValueError("paged cache layout is decoder-only")
+    if max_len % page_size:
+        raise ValueError(
+            f"page_size={page_size} must divide max_len={max_len} so the "
+            f"gathered page view matches the contiguous cache bitwise")
+    layers = lm_mod.init_cache(cfg, batch, max_len)
+    dt = None
+    for name in paged_layer_names(cfg):
+        kv = layers[name]["kv"]
+        per = kv["k"].shape[0]
+        dt = kv["k"].dtype
+        shape = (per, num_pages, cfg.num_kv_heads, page_size, cfg.head_dim)
+        layers[name] = {"kv": {"k_pages": jnp.zeros(shape, dt),
+                               "v_pages": jnp.zeros(shape, dt)}}
+    if dt is None:
+        raise ValueError(
+            f"paged layout needs at least one non-local attention layer; "
+            f"pattern {cfg.layer_pattern!r} has none")
+    return {"layers": layers,
+            "page_table": jnp.zeros((batch, max_len // page_size),
+                                    jnp.int32)}
+
+
+def make_paged_serve_step(cfg: ModelConfig, unroll: bool = False,
+                          ssm_impl: Optional[str] = None):
+    """(params, tokens (B,1), paged_cache, cache_len) -> (logits, cache).
+
+    The paged cache bundles the page table INTO the pytree so the step
+    signature matches ``make_serve_step`` exactly — retries, probes,
+    donation and the degradation ladder all work unchanged. Inside the
+    jit the table is broadcast to each paged layer; the attention cached
+    path gathers/scatters through it (see ``models/layers/attention``).
+    """
+    if cfg.is_encdec:
+        raise ValueError("paged cache layout is decoder-only")
+    from repro.serve.paging import paged_layer_names
+    names = paged_layer_names(cfg)
+
+    def step(params, tokens, cache, cache_len):
+        pt = cache["page_table"]
+        layers = dict(cache["layers"])
+        for name in names:
+            kv = dict(layers[name]["kv"])
+            per = kv["k_pages"].shape[0]
+            kv["pt"] = jnp.broadcast_to(pt[None], (per,) + pt.shape)
+            layers[name] = {"kv": kv}
+        logits, new_layers = lm_mod.decode_step(
+            params, tokens, layers, cache_len, cfg, ssm_impl=ssm_impl,
+            unroll=unroll)
+        out_layers = {}
+        for name, c in new_layers.items():
+            if name in names:
+                c = {"kv": {k: v for k, v in c["kv"].items() if k != "pt"}}
+            out_layers[name] = c
+        return logits, {"layers": out_layers, "page_table": pt}
+
+    return step
+
+
+def make_chunked_prefill_fn(cfg: ModelConfig, max_len: int,
+                            unroll: bool = False,
+                            attn_impl: Optional[str] = None,
+                            attn_schedule: str = "auto"):
+    """``(params, tokens (1, C), cache, cache_len (), true_len ()) ->
+    (logits (1, V), cache)`` — ONE prompt chunk against a staging cache.
+
+    The engine advances a long prompt one chunk per tick so decode for
+    resident sequences interleaves instead of stalling behind a
+    monolithic prefill. The cached attention path already handles
+    mid-stream writes (``cache_len > 0`` keeps the dense cached route;
+    its ``lax.cond`` guard was built for exactly this call), and with
+    trailing pads in the LAST chunk masked off by ``true_len`` the
+    causal mask makes chunked prefill bit-identical to one-shot dense
+    prefill. Same gate as bucketing: pure global-attention stacks only
+    (recurrent layers would fold pads into state).
+    """
+    if not bucketable(cfg):
+        raise ValueError(
+            f"chunked prefill requires a pure global-attention decoder; "
+            f"got pattern {cfg.layer_pattern!r}")
+
+    def fn(params, tokens, cache, cache_len, true_len):
+        B, C = tokens.shape
+        # Once per compiled chunk variant (see make_prefill_fn).
+        trace.instant("serve.prefill.variant", batch=B, chunk=C,
+                      bucketed=False, chunked=True,
+                      attn_impl=attn_impl or "dense",
+                      attn_schedule=attn_schedule)
+        hidden, _, cache = lm_mod.forward(
+            params, tokens, cfg, cache=cache, cache_len=cache_len,
+            attn_impl=attn_impl, attn_schedule=attn_schedule,
+            unroll=unroll)
+        last = jax.lax.dynamic_slice_in_dim(hidden, true_len - 1, 1, axis=1)
+        from repro.models.layers.embedding import lm_logits
+        return lm_logits(params, last, cfg)[:, 0], cache
+
+    return fn
+
+
 _CACHE_AXES = {
     # leaf name fragment -> logical axes (cache leaves, by convention).
     # KV caches shard the SEQUENCE over 'model' (seq_shard) — kv_heads are

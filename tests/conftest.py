@@ -35,3 +35,17 @@ def pytest_configure(config):
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_live_executables():
+    # The full suite JITs thousands of programs into one process; past
+    # ~500 tests the accumulated live executables can segfault XLA's CPU
+    # client inside a later (tiny, unrelated) backend_compile. Dropping
+    # the compilation caches at module teardown bounds that population;
+    # each module recompiles its own programs, which it would on a
+    # standalone run anyway.
+    yield
+    import jax
+
+    jax.clear_caches()

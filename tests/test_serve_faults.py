@@ -81,10 +81,14 @@ def _baseline(cfg, params, prompts, attn_schedule):
 
 
 @pytest.mark.parametrize("attn_schedule", ["carry", "decoupled"])
+@pytest.mark.parametrize("cache_layout", ["contiguous", "paged"])
 @pytest.mark.parametrize("fault_seed", [3, 11, 42])
-def test_chaos_wall(small_model, attn_schedule, fault_seed):
+def test_chaos_wall(small_model, attn_schedule, cache_layout, fault_seed):
     cfg, params = small_model
     prompts = _prompts(6)
+    # The baseline is always the CONTIGUOUS fault-free run: paged decode
+    # is bitwise identical at equal configs (ISSUE 8), so the paged axis
+    # asserts cross-layout identity under injection for free.
     base = _baseline(cfg, params, prompts, attn_schedule)
 
     poison = [fault_seed % len(prompts)]
@@ -92,7 +96,8 @@ def test_chaos_wall(small_model, attn_schedule, fault_seed):
         fault_seed, ticks=40, p_error=0.15, p_nan=0.15, p_stall=0.05,
         stall_s=0.002, poison_rids=poison)
     eng = _run(cfg, params, prompts, _chaos_ecfg(
-        attn_impl="flash", attn_schedule=attn_schedule), injector=inj)
+        attn_impl="flash", attn_schedule=attn_schedule,
+        cache_layout=cache_layout), injector=inj)
 
     # no request lost or duplicated; exactly one terminal state each
     rids = sorted(r.rid for r in eng.finished)

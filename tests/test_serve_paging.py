@@ -1,0 +1,394 @@
+"""Paged KV cache tests (ISSUE 8).
+
+Three walls:
+
+  * allocator/page-table properties — the prefix-sum allocator never
+    double-allocates, free -> alloc roundtrips, exhaustion is explicit
+    (None + counter), defrag plans are stable partitions;
+  * engine parity — decode on the paged layout is BITWISE identical to
+    the contiguous layout at equal configs (token streams), chunked
+    prefill is bitwise identical to one-shot on the dense route, and
+    defrag mid-run does not change a single token;
+  * paged semantics — admission backpressure (requests wait, none are
+    lost), mid-decode allocator exhaustion surfaces as ``cache_full``,
+    and the observability gauges/counters fire.
+
+Plus the scan-engine page-indirection map: ``KVBlocks.kv_block_map``
+feeds a block-permuted KV pool through the flash fold bitwise.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.obs.metrics import Registry
+from repro.serve import (Engine, EngineConfig, PageAllocator, PageTable,
+                         Request, pages_for)
+from repro.train.step import init_params
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get_smoke_config("stablelm-12b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(n, seed=7, lo=3, hi=9):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, 500, size=int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _ecfg(**kw):
+    base = dict(max_slots=2, max_len=48, max_new_tokens=5, eos_id=-1,
+                temperature=0.0)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _run(cfg, params, prompts, ecfg, max_ticks=300):
+    eng = Engine(params, cfg, ecfg)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng.run_to_completion(max_ticks=max_ticks)
+    eng.audit()
+    return eng
+
+
+def _outputs(eng):
+    return {r.rid: list(r.output) for r in eng.finished}
+
+
+# ---------------------------------------------------------------------------
+# allocator / page-table properties
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_never_double_allocates():
+    rng = np.random.default_rng(0)
+    alloc = PageAllocator(33, 8)
+    held = []
+    seen = set()
+    for _ in range(200):
+        if held and rng.random() < 0.45:
+            pages = held.pop(int(rng.integers(len(held))))
+            alloc.release(pages)
+            seen.difference_update(pages.tolist())
+            continue
+        got = alloc.alloc([int(rng.integers(1, 4))])
+        if got is None:
+            assert alloc.free_count < 3    # only refuses when short
+            continue
+        (pages,) = got
+        assert 0 not in pages.tolist()     # null page never handed out
+        assert not (seen & set(pages.tolist())), "double allocation"
+        seen.update(pages.tolist())
+        held.append(pages)
+    assert alloc.in_use == len(seen)
+
+
+def test_allocator_roundtrip_and_batch_offsets():
+    alloc = PageAllocator(10, 4)           # 9 allocatable
+    got = alloc.alloc([2, 3, 1])           # batched: one prefix-sum plan
+    assert got is not None and [len(g) for g in got] == [2, 3, 1]
+    flat = np.concatenate(got)
+    assert len(set(flat.tolist())) == 6    # disjoint across the batch
+    assert alloc.free_count == 3
+    alloc.release(got[1])
+    assert alloc.free_count == 6
+    again = alloc.alloc([6])
+    assert again is not None and alloc.free_count == 0
+
+
+def test_allocator_exhaustion_is_explicit_and_all_or_nothing():
+    alloc = PageAllocator(6, 4)            # 5 allocatable
+    assert alloc.alloc([3]) is not None
+    before = alloc.free_count
+    assert alloc.alloc([1, 2]) is None     # 3 > 2 free: refuse the BATCH
+    assert alloc.free_count == before      # nothing partially handed out
+    assert alloc.stats is None             # counter path is engine-side
+
+
+def test_allocator_rejects_null_free_and_double_free():
+    alloc = PageAllocator(8, 4)
+    (pages,) = alloc.alloc([2])
+    alloc.release(pages)
+    with pytest.raises(ValueError):
+        alloc.release(pages)               # double free
+    with pytest.raises(ValueError):
+        alloc.release(np.array([0]))       # null page is pinned
+    with pytest.raises(ValueError):
+        PageAllocator(1, 4)                # nothing left after null page
+
+
+def test_defrag_plan_is_stable_partition():
+    alloc = PageAllocator(9, 4)
+    a = alloc.alloc([3])[0]
+    b = alloc.alloc([3])[0]
+    alloc.release(a)                       # holes at a's positions
+    dest = alloc.defrag_plan()
+    assert dest[0] == 0                    # null page pinned by stability
+    # live pages keep their relative order, compacted to the front
+    live_new = sorted(int(dest[p]) for p in b.tolist())
+    assert live_new == list(range(1, 4))
+    moved = alloc.apply_defrag(dest)
+    assert moved == int((dest[b] != b).sum())
+    assert alloc.free_count == 5
+    assert alloc.fragmentation() == 0.0    # one contiguous free extent
+
+
+def test_page_table_assign_release_remap():
+    pt = PageTable(2, 4)
+    pt.assign(0, np.array([5, 7]))
+    pt.assign(0, np.array([2]))
+    assert pt.pages_of(0).tolist() == [5, 7, 2]
+    perm = np.arange(10)
+    perm[[5, 7, 2]] = [1, 2, 3]
+    pt.remap(perm)
+    assert pt.pages_of(0).tolist() == [1, 2, 3]
+    assert pt.release(0).tolist() == [1, 2, 3]
+    assert pt.pages_of(0).size == 0 and int(pt.table[0].sum()) == 0
+    with pytest.raises(ValueError):
+        pt.assign(1, np.arange(1, 6))      # 5 > pages_per_seq
+
+
+def test_pages_for_covers_next_write():
+    assert pages_for(0, 8) == 1            # the first decode write
+    assert pages_for(7, 8) == 1
+    assert pages_for(8, 8) == 2            # position 8 needs page 1
+    assert pages_for(17, 8) == 3
+
+
+# ---------------------------------------------------------------------------
+# engine parity: paged == contiguous, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_paged_decode_bitwise_identical(small_model):
+    cfg, params = small_model
+    prompts = _prompts(5)
+    ref = _run(cfg, params, prompts, _ecfg())
+    got = _run(cfg, params, prompts, _ecfg(cache_layout="paged",
+                                           page_size=16))
+    assert _outputs(ref) == _outputs(got)
+    assert ({r.rid: r.finish_reason for r in ref.finished}
+            == {r.rid: r.finish_reason for r in got.finished})
+    assert got.stats.page_allocs > 0
+    assert got.stats.page_frees == got.stats.page_allocs  # all returned
+
+
+def test_paged_small_pages_many_rounds(small_model):
+    """Multi-page sequences (page growth mid-decode) stay bitwise."""
+    cfg, params = small_model
+    prompts = _prompts(6, seed=11)
+    ref = _run(cfg, params, prompts, _ecfg(max_new_tokens=9))
+    got = _run(cfg, params, prompts, _ecfg(max_new_tokens=9,
+                                           cache_layout="paged",
+                                           page_size=8))
+    assert _outputs(ref) == _outputs(got)
+
+
+def test_chunked_prefill_bitwise_vs_one_shot(small_model):
+    cfg, params = small_model
+    rng = np.random.default_rng(5)
+    prompts = ([rng.integers(2, 500, size=21).astype(np.int32)]
+               + _prompts(3, seed=13))
+    base = dict(bucket_prompts=False, max_new_tokens=4)
+    ref = _run(cfg, params, prompts, _ecfg(**base))
+    got = _run(cfg, params, prompts, _ecfg(prefill_chunk=6, **base))
+    assert _outputs(ref) == _outputs(got)
+    assert got.stats.prefill_chunks == 4   # ceil(21 / 6)
+    both = _run(cfg, params, prompts, _ecfg(prefill_chunk=6,
+                                            cache_layout="paged",
+                                            page_size=8, **base))
+    assert _outputs(ref) == _outputs(both)
+
+
+def test_chunked_prefill_flash_route_runs(small_model):
+    """Flash prefill + chunked staging: the lax.cond guard keeps chunk
+    boundaries on the cached-dense path; the run must complete clean."""
+    cfg, params = small_model
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(2, 500, size=19).astype(np.int32)]
+    eng = _run(cfg, params, prompts, _ecfg(prefill_chunk=8,
+                                           attn_impl="flash",
+                                           bucket_prompts=False,
+                                           max_new_tokens=4))
+    assert [r.finish_reason for r in eng.finished] == ["length_budget"]
+    assert eng.stats.prefill_chunks == 3
+
+
+def test_defrag_mid_run_does_not_change_tokens(small_model):
+    cfg, params = small_model
+    prompts = _prompts(3, seed=3, lo=5, hi=10)
+    ref = _run(cfg, params, prompts, _ecfg(max_slots=3, max_new_tokens=8,
+                                           cache_layout="paged",
+                                           page_size=8))
+    eng = Engine(params, cfg, _ecfg(max_slots=3, max_new_tokens=8,
+                                    cache_layout="paged", page_size=8))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for _ in range(2):
+            eng.step()
+        eng.cancel(1)                      # punch a hole in the pool
+        moved = eng.defrag()
+        eng.run_to_completion(max_ticks=300)
+    eng.audit()
+    assert moved > 0 and eng.stats.defrags == 1
+    assert eng.allocator.fragmentation() == 0.0
+    ref_out = _outputs(ref)
+    for rid, out in _outputs(eng).items():
+        if rid != 1:
+            assert out == ref_out[rid]
+
+
+# ---------------------------------------------------------------------------
+# paged semantics: backpressure, cache_full, config validation
+# ---------------------------------------------------------------------------
+
+
+def test_admission_backpressure_loses_nothing(small_model):
+    """More demand than pages: admission waits instead of rejecting;
+    every request still terminates normally, and concurrency never
+    exceeds what the pool can host."""
+    cfg, params = small_model
+    # sizes 3-4 + 3 new tokens: every sequence stays within ONE page,
+    # so the only limiter is the pool (4 usable pages for 6 requests).
+    prompts = _prompts(6, seed=2, lo=3, hi=5)
+    eng = Engine(params, cfg, _ecfg(max_slots=4, cache_layout="paged",
+                                    page_size=8, num_pages=5,
+                                    max_new_tokens=3))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p))
+    peak = 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        while eng.waiting or any(r is not None for r in eng.slot_req):
+            eng.step()
+            peak = max(peak, sum(r is not None for r in eng.slot_req))
+            assert eng.stats.ticks < 300
+    eng.audit()
+    assert sorted(r.rid for r in eng.finished) == list(range(len(prompts)))
+    assert all(r.finish_reason in ("eos", "length_budget")
+               for r in eng.finished)
+    assert peak <= 4                       # 4 usable pages, >=1 page each
+
+
+def test_mid_decode_exhaustion_finishes_cache_full(small_model):
+    """A pool too small for the requests' full extents: growth hits the
+    empty allocator mid-decode and the victim finishes ``cache_full``
+    (the paged meaning: allocator exhausted, not row full)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(2, 500, size=7).astype(np.int32)
+               for _ in range(2)]
+    eng = Engine(params, cfg, _ecfg(max_new_tokens=24, max_len=48,
+                                    cache_layout="paged", page_size=8,
+                                    num_pages=4))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng.run_to_completion(max_ticks=300)
+    eng.audit()
+    reasons = [r.finish_reason for r in eng.finished]
+    assert "cache_full" in reasons
+    assert eng.stats.page_alloc_failures >= 1
+
+
+def test_paged_config_validation(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        EngineConfig(cache_layout="banana")
+    with pytest.raises(ValueError):
+        # page_size must divide max_len (gathered view == contiguous)
+        Engine(params, cfg, _ecfg(cache_layout="paged", page_size=10,
+                                  max_len=48))
+
+
+def test_policy_explains_cache_layout():
+    from repro.core.scan.policy import (choose_cache_layout,
+                                        explain_cache_layout)
+    d = explain_cache_layout(8, 512, 16, num_pages=64)
+    assert d.value == "paged"              # budget below worst case
+    assert "page" in d.reason.lower()
+    assert choose_cache_layout(8, 512, 16, expected_len=64) == "paged"
+    assert choose_cache_layout(2, 64, 16) == "contiguous"
+
+
+# ---------------------------------------------------------------------------
+# observability: gauges + counters
+# ---------------------------------------------------------------------------
+
+
+def test_paged_gauges_and_counters_fire(small_model):
+    cfg, params = small_model
+    reg = Registry()
+    eng = Engine(params, cfg, _ecfg(cache_layout="paged", page_size=16),
+                 metrics=reg)
+    for i, p in enumerate(_prompts(3)):
+        eng.submit(Request(rid=i, prompt=p))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        eng.run_to_completion(max_ticks=200)
+    gauges = reg.snapshot()["gauges"]
+    for name in ("serve.pages.in_use", "serve.pages.free",
+                 "serve.pages.fragmentation"):
+        assert name in gauges
+    assert gauges["serve.pages.in_use"] == 0          # all returned
+    assert gauges["serve.stats.page_allocs"] == eng.stats.page_allocs > 0
+    assert gauges["serve.stats.page_frees"] == eng.stats.page_frees
+    s = eng.stats.summary()
+    assert "pages[" in s and "prefill_chunks=" in s
+
+
+# ---------------------------------------------------------------------------
+# scan-engine page indirection: KVBlocks.kv_block_map
+# ---------------------------------------------------------------------------
+
+
+def test_kv_block_map_validation():
+    from repro.kernels.scan_engine.layouts import KVBlocks
+    with pytest.raises(ValueError):
+        KVBlocks(bh=2, bh_kv=2, tq=64, tk=128, d=32, bq=32, bk=32,
+                 kv_block_map=(0, 1))      # 2 entries, 4 logical blocks
+
+
+@pytest.mark.parametrize("schedule", ["carry", "decoupled"])
+def test_kv_block_map_bitwise_on_permuted_pool(schedule):
+    """A block-permuted physical KV pool + the inverse map through the
+    index maps == the contiguous layout, bitwise (masks and bounds are
+    keyed on logical positions)."""
+    from repro.kernels.flash_attention.flash_attention import (
+        flash_attention_kernel)
+    rng = np.random.default_rng(0)
+    BH, BHkv, Tq, Tk, d, bq, bk = 4, 2, 64, 128, 32, 32, 32
+    q = jnp.asarray(rng.standard_normal((BH, Tq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BHkv, Tk, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BHkv, Tk, d)), jnp.float32)
+    nk = Tk // bk
+    perm = rng.permutation(nk)             # logical block j lives at perm[j]
+    inv = np.empty(nk, np.int64)
+    inv[perm] = np.arange(nk)
+    kp = k.reshape(BHkv, nk, bk, d)[:, inv].reshape(BHkv, Tk, d)
+    vp = v.reshape(BHkv, nk, bk, d)[:, inv].reshape(BHkv, Tk, d)
+    for causal, kv_len in ((True, None), (False, 100)):
+        ref = flash_attention_kernel(
+            q, k, v, group=2, scale=0.125, causal=causal, kv_len=kv_len,
+            block_q=bq, block_k=bk, schedule=schedule, interpret=True)
+        got = flash_attention_kernel(
+            q, kp, vp, group=2, scale=0.125, causal=causal, kv_len=kv_len,
+            block_q=bq, block_k=bk, schedule=schedule, interpret=True,
+            kv_block_map=tuple(perm.tolist()))
+        assert np.array_equal(np.asarray(ref), np.asarray(got))
