@@ -152,17 +152,24 @@ def run_faults(fault_seed: int = 3, requests: int = 12,
 
 def run_traffic(seed: int = 0, requests: int = 16,
                 smoke: bool = False) -> Table:
-    """Traffic mode (``--traffic``): Poisson arrivals against a FIXED
-    cache-memory budget, contiguous vs paged KV layout (ISSUE 8).
+    """Traffic mode (``--traffic``): bursty arrivals against a FIXED
+    cache-memory budget — contiguous vs paged vs paged+COW prefix
+    sharing (ISSUE 8 / ISSUE 9).
 
-    Both engines get the same 256-cache-token budget: contiguous spends
-    it on 4 worst-case rows (4 slots x max_len 64); paged spends it on
-    32 allocatable 8-token pages shared by 8 slots, admitting by ACTUAL
-    length. Same arrival trace, greedy sampling, eos disabled — token
-    streams are deterministic, so the tick-counted latency columns gate
-    tightly in CI while tok/s (wall-clock) gates loosely. The paged row
-    must sustain strictly higher peak concurrency and finish the trace
-    in fewer ticks.
+    Every engine gets the same 256-cache-token budget: contiguous
+    spends it on 4 worst-case rows (4 slots x max_len 64); the paged
+    rows spend it on 32 allocatable 8-token pages, admitting by ACTUAL
+    length. All requests share a 24-token (3-page) system prompt and
+    differ only in a 1-4 token tail, sized so no request ever grows
+    past its 4th page: unshared, each costs 4 pages (peak 32/4 = 8
+    concurrent); with ``share_prefixes`` the 3 prefix pages are mapped
+    from the registry and each admission allocates ONE page, so the
+    same pool sustains the full 14-slot burst — the ~1.75x peak-
+    concurrency win the table pins. Same arrival trace, greedy
+    sampling, eos disabled: all three token streams are asserted
+    bitwise identical, so the deterministic columns (peak, ticks,
+    page_allocs, tick-counted latency) gate tightly in CI while tok/s
+    (wall-clock) gates loosely.
     """
     import dataclasses
     import time
@@ -172,16 +179,19 @@ def run_traffic(seed: int = 0, requests: int = 16,
     from repro.serve import Engine, EngineConfig, Request
     from repro.train.step import init_params
 
-    if smoke:
-        requests = min(requests, 10)
+    requests = min(requests, 16) if smoke else requests
     cfg = dataclasses.replace(configs.get_smoke_config("stablelm-12b"),
                               dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(seed)
-    prompts = [rng.integers(2, cfg.vocab_size, size=int(rng.integers(3, 9)))
-               .astype(np.int32) for _ in range(requests)]
-    # Arrival trace: an initial burst (saturates both pools) + Poisson.
-    burst = min(8, requests)
+    prefix = rng.integers(2, cfg.vocab_size, size=24).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(2, cfg.vocab_size,
+                                            size=int(rng.integers(1, 5)))
+                               .astype(np.int32)])
+               for _ in range(requests)]
+    # Arrival trace: an initial burst (saturates every pool) + Poisson.
+    burst = min(14, requests)
     arrivals = [0] * burst
     tick = 0
     while len(arrivals) < requests:
@@ -190,19 +200,21 @@ def run_traffic(seed: int = 0, requests: int = 16,
             if len(arrivals) < requests:
                 arrivals.append(tick)
 
-    base = dict(max_len=64, max_new_tokens=16, eos_id=-1, temperature=0.0)
+    base = dict(max_len=64, max_new_tokens=4, eos_id=-1, temperature=0.0)
+    paged = dict(max_slots=14, cache_layout="paged", page_size=8,
+                 num_pages=33, **base)
     layouts = {
         "contiguous (4 slots)": EngineConfig(max_slots=4, **base),
-        "paged (8 slots, 32 pages)": EngineConfig(
-            max_slots=8, cache_layout="paged", page_size=8, num_pages=33,
-            **base),
+        "paged (14 slots, 32 pages)": EngineConfig(**paged),
+        "paged + COW shared prefix": EngineConfig(share_prefixes=True,
+                                                  **paged),
     }
 
-    t = Table("Fig 7d — traffic: paged vs contiguous KV cache at an "
-              "equal 256-token cache budget",
+    t = Table("Fig 7d — traffic: contiguous vs paged vs COW-shared KV "
+              "at an equal 256-token cache budget",
               ["layout", "finished", "peak_active", "ticks",
-               "p50 lat ticks", "p99 lat ticks", "tok/s"])
-    outputs = {}
+               "p50 lat ticks", "p99 lat ticks", "page_allocs", "tok/s"])
+    outputs, peaks = {}, {}
     for name, ecfg in layouts.items():
         eng = Engine(params, cfg, ecfg)
         nxt = peak = ticks = 0
@@ -225,11 +237,19 @@ def run_traffic(seed: int = 0, requests: int = 16,
         lat = np.asarray([r.finish_tick - r.submit_tick
                           for r in eng.finished], float)
         outputs[name] = {r.rid: list(r.output) for r in eng.finished}
+        peaks[name] = peak
         t.add(name, len(eng.finished), peak, ticks,
               float(np.percentile(lat, 50)), float(np.percentile(lat, 99)),
+              eng.stats.page_allocs,
               round(toks / max(wall, 1e-9), 1))
-    a, b = outputs.values()
-    assert a == b, "paged and contiguous token streams diverged"
+    ref = outputs["contiguous (4 slots)"]
+    for name, out in outputs.items():
+        assert out == ref, f"{name} token streams diverged from contiguous"
+    ratio = peaks["paged + COW shared prefix"] / peaks[
+        "paged (14 slots, 32 pages)"]
+    assert ratio >= 1.5, (
+        f"COW sharing should lift peak concurrency >=1.5x at an equal "
+        f"page budget (got {ratio:.2f}x)")
     return t
 
 

@@ -300,6 +300,62 @@ def choose_cache_layout(
         max_slots, max_len, page_size, num_pages, expected_len).value
 
 
+def explain_defrag(
+    fragmentation: float,
+    free_pages: int,
+    longest_free_run: int,
+    *,
+    threshold: float = 0.5,
+) -> Decision:
+    """Auto-defrag rule (``defrag`` | ``skip``) with its working shown —
+    emitted as a ``policy.defrag`` trace event.
+
+    Driven by the ``serve.pages.fragmentation`` gauge (1 - largest free
+    run / free pages) and the free-run length. Page-granular allocation
+    never NEEDS contiguity, so this is a locality/observability policy:
+    compacting live pages to the front keeps pool writes clustered and
+    the gauge honest, and it is free of correctness risk (the gathered
+    view is invariant under page renaming). Skip when the pool is full
+    (fragmentation pins to 1.0 but compaction cannot create space —
+    only request completion can) and when the free space is already one
+    healthy extent.
+    """
+    inputs = dict(fragmentation=round(float(fragmentation), 4),
+                  free_pages=int(free_pages),
+                  longest_free_run=int(longest_free_run),
+                  threshold=threshold)
+    if free_pages == 0:
+        return Decision(
+            "defrag", "skip",
+            "no free pages: compaction cannot create space, only "
+            "request completion can", inputs).emit()
+    if fragmentation < threshold:
+        return Decision(
+            "defrag", "skip",
+            f"fragmentation {fragmentation:.2f} < threshold {threshold}: "
+            f"largest free run {longest_free_run}/{free_pages} pages is "
+            f"healthy", inputs).emit()
+    return Decision(
+        "defrag", "defrag",
+        f"fragmentation {fragmentation:.2f} >= threshold {threshold}: "
+        f"free space shattered into runs <= {longest_free_run} of "
+        f"{free_pages} pages — compact live pages to the front",
+        inputs).emit()
+
+
+def choose_defrag(
+    fragmentation: float,
+    free_pages: int,
+    longest_free_run: int,
+    *,
+    threshold: float = 0.5,
+) -> bool:
+    """True when the engine tick should run ``Engine.defrag()`` — see
+    ``explain_defrag`` for the rule and rationale."""
+    return explain_defrag(fragmentation, free_pages, longest_free_run,
+                          threshold=threshold).value == "defrag"
+
+
 def choose(
     n: int,
     itemsize: int = 4,

@@ -55,6 +55,18 @@ def main(argv=None):
                     default="reject")
     ap.add_argument("--deadline-ticks", type=int, default=None)
     ap.add_argument("--no-bucket-prompts", action="store_true")
+    # -- paged KV cache knobs ------------------------------------------
+    ap.add_argument("--cache-layout",
+                    choices=["contiguous", "paged", "auto"],
+                    default="contiguous")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool size (default: worst case + null)")
+    ap.add_argument("--share-prefixes", action="store_true",
+                    help="COW prefix sharing across requests (paged only)")
+    ap.add_argument("--system-prompt-len", type=int, default=0,
+                    help="tokens of common prefix prepended to every "
+                         "prompt (makes --share-prefixes observable)")
     ap.add_argument("--attn-impl", choices=["flash"], default=None,
                     help="prefill attention route (default: dense)")
     ap.add_argument("--attn-schedule",
@@ -94,16 +106,20 @@ def main(argv=None):
         admission_policy=args.admission_policy,
         deadline_ticks=args.deadline_ticks,
         bucket_prompts=not args.no_bucket_prompts,
-        attn_impl=args.attn_impl, attn_schedule=args.attn_schedule),
+        attn_impl=args.attn_impl, attn_schedule=args.attn_schedule,
+        cache_layout=args.cache_layout, page_size=args.page_size,
+        num_pages=args.num_pages, share_prefixes=args.share_prefixes),
         injector=injector, metrics=metrics)
 
     rng = np.random.default_rng(args.seed)
+    system = rng.integers(2, cfg.vocab_size,
+                          size=args.system_prompt_len).astype(np.int32)
     t0 = time.perf_counter()
     with warnings.catch_warnings():
         warnings.simplefilter("default")
         for rid in range(args.requests):
-            prompt = rng.integers(
-                2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)
+            prompt = np.concatenate([system, rng.integers(
+                2, cfg.vocab_size, size=args.prompt_len).astype(np.int32)])
             eng.submit(Request(rid=rid, prompt=prompt))
         done = eng.run_to_completion()
     dt = time.perf_counter() - t0

@@ -172,16 +172,33 @@ def apply_attention(
         # is scattered back to its page afterwards.
         from repro.serve import paging as _paging
         if S != 1:
+            # Genuinely impossible from the engine (prefill and chunked
+            # prefill both stage through a contiguous cache; the paged
+            # step only ever decodes one token). Geometry/layer-support
+            # errors are raised with layer context at construction time
+            # by ``paging.validate_paged_support``.
             raise ValueError(
                 f"paged KV cache supports single-token decode only "
-                f"(chunked prefill stages contiguously); got S={S}")
+                f"(prefill stages contiguously); got S={S}")
+        pt_full = cache["pt"]
+        ps = cache["k_pages"].shape[2]
+        pt = pt_full
         if window is not None:
-            raise ValueError("local (windowed) layers are not paged")
-        paged_pools = (cache["k_pages"], cache["v_pages"], cache["pt"],
+            # Windowed layer on pages: the ring rides the FIRST
+            # ``ring // ps`` entries of the shared page-table row
+            # (ring slot s lives in logical page s // ps), so clamping
+            # the gather to those entries reproduces the contiguous
+            # layout's ring buffer exactly — same slot count, same
+            # ``write_at = cache_len % slots`` arithmetic below, bitwise
+            # identical outputs. Dead ring slots read null-page data
+            # instead of zeros; the mask makes both exact-zero.
+            ring = min(int(window), pt_full.shape[1] * ps)
+            pt = pt_full[:, : ring // ps]
+        paged_pools = (cache["k_pages"], cache["v_pages"], pt_full, pt,
                        _paging)
         cache = {
-            "k": _paging.gather_pages(cache["k_pages"], cache["pt"]),
-            "v": _paging.gather_pages(cache["v_pages"], cache["pt"]),
+            "k": _paging.gather_pages(cache["k_pages"], pt),
+            "v": _paging.gather_pages(cache["v_pages"], pt),
         }
 
     new_cache = cache
@@ -305,7 +322,10 @@ def apply_attention(
             # newly-written token (kh/vh at S == 1) back into its page.
             # Inactive rows (cache_len 0, unassigned table entries) land
             # in the null page by construction.
-            pool_k, pool_v, pt, _paging = paged_pools
+            # ``pt`` is the (possibly ring-clamped) gather view;
+            # ``write_at`` is already ring-modded for windowed layers,
+            # so the scatter goes through the same clamped table.
+            pool_k, pool_v, pt_full, pt, _paging = paged_pools
             w = write_at if per_row else jnp.broadcast_to(
                 jnp.asarray(write_at)[None], (B,))
             new_cache = {
@@ -313,7 +333,7 @@ def apply_attention(
                     pool_k, kh[:, :, 0, :], pt, w),
                 "v_pages": _paging.scatter_token(
                     pool_v, vh[:, :, 0, :], pt, w),
-                "pt": pt,
+                "pt": pt_full,
             }
     else:
         if impl is None:

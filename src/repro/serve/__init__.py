@@ -3,9 +3,10 @@ from repro.serve.engine import (AdmissionError, Engine, EngineConfig,
                                 Request)
 from repro.serve.faults import (FaultInjector, FaultSpec, InjectedFault,
                                 StepContext)
-from repro.serve.paging import (PageAllocator, PageTable, gather_pages,
+from repro.serve.paging import (PageAllocator, PageTable, PrefixRegistry,
+                                gather_pages, gather_prefix,
                                 paged_layer_names, pages_for, scatter_prefix,
-                                scatter_token)
+                                scatter_token, validate_paged_support)
 from repro.serve.sampling import finite_rows, sample_logits
 from repro.serve.stats import FINISH_REASONS, EngineStats
 from repro.serve.steps import (bucket_len, bucketable,
@@ -19,10 +20,10 @@ __all__ = [
     "AdmissionError", "Engine", "EngineConfig", "EngineDeadlineError",
     "EngineStats", "EngineStepError", "FaultInjector", "FaultSpec",
     "FINISH_REASONS", "InjectedFault", "PageAllocator", "PageTable",
-    "Request", "StepContext",
+    "PrefixRegistry", "Request", "StepContext",
     "bucket_len", "bucketable", "finite_rows", "gather_pages",
-    "init_paged_cache_for", "make_bucketed_prefill_fn",
+    "gather_prefix", "init_paged_cache_for", "make_bucketed_prefill_fn",
     "make_chunked_prefill_fn", "make_paged_serve_step", "make_prefill_fn",
     "make_serve_step", "paged_layer_names", "pages_for", "sample_logits",
-    "scatter_prefix", "scatter_token",
+    "scatter_prefix", "scatter_token", "validate_paged_support",
 ]

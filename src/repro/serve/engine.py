@@ -145,6 +145,13 @@ class EngineConfig:
     page_size: int = 16                 # tokens per KV page
     num_pages: Optional[int] = None     # pool size; None = worst case + null
     prefill_chunk: Optional[int] = None  # stage long prompts N tokens/tick
+    # -- copy-on-write prefix sharing (paged only) ----------------------
+    share_prefixes: bool = False        # map common prompt prefixes via COW
+    prefix_cache_pages: int = 32        # LRU entry cap on the registry
+    # -- auto-defrag policy (paged only) --------------------------------
+    auto_defrag: bool = True            # policy.choose_defrag on the tick
+    defrag_threshold: float = 0.5       # fragmentation gauge trigger
+    defrag_cooldown: int = 8            # min ticks between auto defrags
 
     def __post_init__(self):
         if self.admission_policy not in ("reject", "block"):
@@ -159,6 +166,11 @@ class EngineConfig:
             raise ValueError(f"page_size={self.page_size} < 1")
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
             raise ValueError(f"prefill_chunk={self.prefill_chunk} < 1")
+        if self.prefix_cache_pages < 1:
+            raise ValueError(
+                f"prefix_cache_pages={self.prefix_cache_pages} < 1")
+        if self.defrag_cooldown < 1:
+            raise ValueError(f"defrag_cooldown={self.defrag_cooldown} < 1")
 
 
 @dataclasses.dataclass
@@ -255,11 +267,16 @@ class Engine:
 
         B, L = ecfg.max_slots, ecfg.max_len
         if self._paged:
-            if L % ecfg.page_size:
-                raise ValueError(
-                    f"max_len={L} must be a multiple of page_size="
-                    f"{ecfg.page_size}")
+            # Geometry/layer-support problems (incl. sliding-window ring
+            # extents vs page_size) fail HERE with the offending layer
+            # named, not mid-jit-trace.
+            paging.validate_paged_support(cfg, L, ecfg.page_size)
             self._paged_names = paging.paged_layer_names(cfg)
+            self._local_names = frozenset(
+                n for n in self._paged_names if n.endswith("_local"))
+            self._ring_pages = (
+                min(int(cfg.sliding_window), L) // ecfg.page_size
+                if self._local_names else 0)
             n_pages = (ecfg.num_pages if ecfg.num_pages is not None
                        else B * (L // ecfg.page_size) + 1)
             self.allocator: Optional[paging.PageAllocator] = \
@@ -271,9 +288,27 @@ class Engine:
                                               n_pages)
         else:
             self._paged_names = ()
+            self._local_names = frozenset()
             self.allocator = None
             self.ptable = None
             self.cache = init_cache_for(cfg, B, L)
+        # Copy-on-write prefix sharing: the registry maps prompt-prefix
+        # chunks to live physical pages. Gated on ``bucketable`` (pure
+        # global-attention stacks) for the same reason bucketing and
+        # chunked prefill are: the suffix-only prefill stages through a
+        # contiguous cache whose pads must be inert, and a local ring
+        # that has wrapped is no longer prefix-pristine.
+        self.registry: Optional[paging.PrefixRegistry] = None
+        if self._paged and ecfg.share_prefixes:
+            if not bucketable(cfg):
+                raise ValueError(
+                    "share_prefixes requires a pure global-attention "
+                    f"decoder (bucketable); pattern {cfg.layer_pattern!r} "
+                    "is not")
+            self.registry = paging.PrefixRegistry(
+                self.allocator, ecfg.page_size,
+                capacity=ecfg.prefix_cache_pages)
+        self._last_defrag = -(10 ** 9)
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.lengths = np.zeros(B, np.int64)          # per-slot position
         self.budgets = np.zeros(B, np.int64)          # remaining new tokens
@@ -409,8 +444,10 @@ class Engine:
         while self.waiting and free_list:
             req = self.waiting[0]
             S = int(np.asarray(req.prompt).shape[0])
+            shared = (self.registry.match(np.asarray(req.prompt))
+                      if self.registry is not None else [])
             if self._paged:
-                need = paging.pages_for(S, self.ecfg.page_size)
+                need = paging.pages_for(S, self.ecfg.page_size) - len(shared)
                 if need > self.allocator.free_count:
                     # Allocator exhausted: admission BACKPRESSURE. The
                     # request stays queued (FIFO order preserved) until
@@ -424,7 +461,12 @@ class Engine:
             self.waiting.pop(0)
             self.stats.observe_queue(len(self.waiting))
             self.stats.admitted += 1
-            if self._chunkable(req, S):
+            out = None
+            if shared:
+                out = self._prefill_shared(req, shared)
+                if out is None:
+                    shared = []               # fall back to a full prefill
+            if out is None and self._chunkable(req, S):
                 self._chunk_job = {
                     "req": req, "slot": free_list.pop(0), "pos": 0,
                     "cache": init_cache_for(self.cfg, 1, self.ecfg.max_len),
@@ -432,40 +474,64 @@ class Engine:
                 trace.instant("serve.prefill.chunk_start", rid=req.rid,
                               prompt_len=S, chunk=self.ecfg.prefill_chunk)
                 continue
-            out = self._prefill_request(req)
+            if out is None:
+                out = self._prefill_request(req)
             if out is None:
                 continue                      # finished "error" inside
             logits, cache1 = out
-            self._install(free_list.pop(0), req, logits, cache1)
+            self._install(free_list.pop(0), req, logits, cache1,
+                          shared=shared)
 
-    def _install(self, slot: int, req: Request, logits, cache1) -> None:
+    def _install(self, slot: int, req: Request, logits, cache1,
+                 shared=()) -> None:
         """Commit a completed prefill into ``slot``: copy/page its cache
         row into the pool, sample the first token, and apply the
-        admission-time finish checks. Shared by one-shot admission and
-        chunked-prefill finalize."""
+        admission-time finish checks. Shared by one-shot admission,
+        chunked-prefill finalize and the prefix-sharing path (``shared``
+        = registry pages already holding the matched prompt prefix; only
+        the remainder is freshly allocated and scattered)."""
         S = int(np.asarray(req.prompt).shape[0])
         if self._paged:
-            got = self.allocator.alloc(
-                [paging.pages_for(S, self.ecfg.page_size)])
+            shared_arr = np.asarray(shared, np.int64)
+            m = int(shared_arr.size)
+            total = paging.pages_for(S, self.ecfg.page_size)
+            got = self.allocator.alloc([total - m])
             if got is None:
                 # Pages vanished between precheck and install (decode
                 # growth during a chunked prefill): backpressure — back
                 # to the head of the queue with the staging work
-                # discarded.
+                # discarded. Nothing was retained yet.
                 self.waiting.insert(0, req)
                 self.stats.observe_queue(len(self.waiting))
                 return
-            pages = got[0]
+            fresh = got[0]
+            if m:
+                self.allocator.retain(shared_arr)
+                self.stats.prefix_hits += 1
+                self.stats.shared_page_maps += m
+                trace.instant("serve.pages.prefix_hit", rid=req.rid,
+                              shared=m, fresh=int(fresh.size))
+            pages = np.concatenate([shared_arr, fresh])
             self.ptable.assign(slot, pages)
             layers = {}
             for name, leaf in self.cache["layers"].items():
                 if name in self._paged_names:
                     kv, one = leaf["kv"], cache1[name]["kv"]
+                    if name in self._local_names:
+                        # Local (sliding-window) layer: the staging row
+                        # is the ring buffer itself; ring slot s lives
+                        # in logical page s // ps, so the ring maps onto
+                        # the row's first ring_pages entries. (Sharing
+                        # is gated off for hybrid patterns: m == 0.)
+                        lp = pages[: min(self._ring_pages, pages.size)]
+                        start = 0
+                    else:
+                        lp, start = fresh, m
                     layers[name] = {"kv": {
                         "k_pages": paging.scatter_prefix(
-                            kv["k_pages"], one["k"], pages),
+                            kv["k_pages"], one["k"], lp, start),
                         "v_pages": paging.scatter_prefix(
-                            kv["v_pages"], one["v"], pages),
+                            kv["v_pages"], one["v"], lp, start),
                     }}
                 else:
                     layers[name] = jax.tree.map(
@@ -474,6 +540,8 @@ class Engine:
                         leaf, cache1[name])
             self.cache = {"layers": layers,
                           "page_table": self.cache["page_table"]}
+            if self.registry is not None:
+                self.registry.register(np.asarray(req.prompt), pages)
         else:
             # Copy the single-row prefill cache into the pool at `slot`
             # (cache leaves are (layers, batch, ...); prefill batch = 1).
@@ -561,8 +629,13 @@ class Engine:
             return
         self._install(job["slot"], req, logits, cache)
 
-    def _chunk_prefill_fn(self):
-        key = ("chunk", int(self.ecfg.prefill_chunk))
+    def _chunk_prefill_fn(self, width: Optional[int] = None):
+        """Jitted mid-stream prefill at chunk ``width`` (default: the
+        configured ``prefill_chunk``). One LRU-cached variant per width
+        — the prefix-sharing suffix path reuses the same cache, so a
+        suffix whose bucket matches the chunk width shares the
+        executable."""
+        key = ("chunk", int(width or self.ecfg.prefill_chunk))
         if key in self._prefill_cache:
             self._prefill_cache.move_to_end(key)
             return self._prefill_cache[key]
@@ -578,6 +651,112 @@ class Engine:
             self._prefill_cache.popitem(last=False)
             self.stats.prefill_cache_evictions += 1
         return self._prefill_cache[key]
+
+    # -- copy-on-write prefix sharing ------------------------------------
+    def _prefill_shared(self, req: Request, shared):
+        """Prefill only the UNMATCHED suffix of a prompt whose prefix
+        already lives in registry pages.
+
+        The matched pages are gathered into a single-row contiguous
+        staging cache (positions [0, T) hold the donor's KV bitwise),
+        then the suffix runs through the chunked-prefill fn with
+        ``cache_len = start`` — the same machinery whose chunked-vs-one-
+        shot bitwise parity landed in PR 8, sharing its jit LRU cache.
+        At least one token is always recomputed (sampling needs the
+        last-token logits), and ``_install`` scatters only the fresh
+        pages back — recomputed KV inside matched pages is bitwise equal
+        and discarded. Returns ``(logits, staging_cache)`` or None to
+        fall back to a full prefill.
+        """
+        ps = self.ecfg.page_size
+        L = self.ecfg.max_len
+        prompt = np.asarray(req.prompt)
+        S = int(prompt.size)
+        T = min(len(shared) * ps, S)       # prompt tokens the pages cover
+        start = min(T, S - 1)              # always recompute >= 1 token
+        n_suf = S - start
+        C = min(bucket_len(n_suf, L) if self._bucketed else n_suf,
+                L - start)                  # keep the cache write in-bounds
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n_suf] = prompt[start:]
+        pt_row = np.zeros((1, L // ps), np.int32)
+        pt_row[0, : len(shared)] = shared
+        pt_dev = jnp.asarray(pt_row)
+        staged = init_cache_for(self.cfg, 1, L)
+        for name in self._paged_names:
+            pool = self.cache["layers"][name]["kv"]
+            staged[name] = {"kv": {
+                "k": paging.gather_prefix(pool["k_pages"], pt_dev),
+                "v": paging.gather_prefix(pool["v_pages"], pt_dev),
+            }}
+        fn = self._chunk_prefill_fn(C)
+        if self.injector is not None:
+            self.injector.begin(StepContext(
+                tick=self._tick, rids=(req.rid,), op="prefill"))
+        try:
+            with trace.span("serve.prefill.shared", rid=req.rid,
+                            matched=T, suffix=n_suf, tick=self._tick):
+                logits, cache1 = fn(
+                    self.params, jnp.asarray(chunk), staged,
+                    jnp.asarray(start, jnp.int32),
+                    jnp.asarray(n_suf, jnp.int32))
+            if not np.isfinite(np.asarray(logits)).all():
+                raise FloatingPointError("non-finite shared-prefill logits")
+        except Exception as e:            # noqa: BLE001 — jitted call
+            # No retry ladder of its own: drop the sharing attempt and
+            # let the one-shot path (retry + degrade) take over.
+            self.stats.prefill_retries += 1
+            trace.instant("serve.prefill.shared_abort", rid=req.rid,
+                          error=repr(e))
+            return None
+        return logits, cache1
+
+    def _cow_writes(self) -> None:
+        """Copy-on-write, the host half: BEFORE the decode step, any
+        active row whose next write lands in a page with refcount > 1
+        gets a private copy of that page (device copy, table repoint,
+        reference drop on the original). Sequential per slot, so two
+        sharers hitting the same page in one tick each get their own
+        copy. Refcounts only exceed 1 via the prefix registry, so this
+        scan is skipped entirely when sharing is off."""
+        if self.registry is None:
+            return
+        ps = self.ecfg.page_size
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            entry = int(self.lengths[slot]) // ps
+            page = int(self.ptable.table[slot, entry])
+            if page == 0 or int(self.allocator.refcount[page]) <= 1:
+                continue
+            got = self.allocator.alloc([1])
+            if got is None:
+                # Pool exhausted at the copy point: same terminal state
+                # as growth exhaustion.
+                self._warn_cache_full(req)
+                self._release(slot)
+                self._finish(req, "cache_full")
+                continue
+            new = int(got[0][0])
+            layers = {}
+            for name, leaf in self.cache["layers"].items():
+                if name in self._paged_names:
+                    kv = leaf["kv"]
+                    layers[name] = {"kv": {
+                        "k_pages": kv["k_pages"].at[:, new].set(
+                            kv["k_pages"][:, page]),
+                        "v_pages": kv["v_pages"].at[:, new].set(
+                            kv["v_pages"][:, page]),
+                    }}
+                else:
+                    layers[name] = leaf
+            self.cache = {"layers": layers,
+                          "page_table": self.cache["page_table"]}
+            self.ptable.table[slot, entry] = new
+            self.allocator.release(np.array([page]))   # drop our reference
+            self.stats.refcount_copies += 1
+            trace.instant("serve.pages.cow_copy", rid=req.rid, slot=slot,
+                          src=page, dst=new)
 
     # -- paged bookkeeping ----------------------------------------------
     def _sync_page_table(self) -> None:
@@ -607,6 +786,7 @@ class Engine:
                 self._finish(req, "cache_full")
                 continue
             self.ptable.assign(slot, got[0])
+        self._cow_writes()
         self._sync_page_table()
 
     def defrag(self) -> int:
@@ -634,9 +814,31 @@ class Engine:
         self.cache = {"layers": layers,
                       "page_table": self.cache["page_table"]}
         self.ptable.remap(dest)
+        if self.registry is not None:
+            self.registry.remap(dest)
         moved = self.allocator.apply_defrag(dest)
         self._sync_page_table()
         return moved
+
+    def _maybe_defrag(self) -> None:
+        """Auto-defrag: ask ``policy.choose_defrag`` (fragmentation
+        gauge + free-run length) once per cooldown window and compact
+        when it says so — fragmentation self-heals instead of waiting
+        for a host call to ``defrag()``. Bitwise-free: the gathered view
+        is invariant under page renaming."""
+        if (not self._paged or not self.ecfg.auto_defrag
+                or self._tick - self._last_defrag
+                < self.ecfg.defrag_cooldown):
+            return
+        if not scan_policy.choose_defrag(
+                self.allocator.fragmentation(),
+                self.allocator.free_count,
+                self.allocator.longest_free_run(),
+                threshold=self.ecfg.defrag_threshold):
+            return
+        self._last_defrag = self._tick
+        self.stats.auto_defrags += 1
+        self.defrag()
 
     def _prefill_request(self, req: Request):
         """Run prefill for one request with retry + degrade. Returns
@@ -788,6 +990,7 @@ class Engine:
         self._tick += 1
         self.stats.ticks += 1
         self._expire_deadlines()
+        self._maybe_defrag()
         self._admit()
         self._ensure_pages()
         active = self._active()
@@ -1052,6 +1255,28 @@ class Engine:
         for req in self.waiting:
             assert req.finish_reason is None
         assert self.stats.total_finished == len(self.finished)
+        if self._paged:
+            # Refcount invariant: every page's count equals its live
+            # table references plus the prefix registry's strong pins
+            # (weak partial entries hold no reference), and the free
+            # bitmap is exactly refcount == 0.
+            refs = np.zeros(self.allocator.num_pages, np.int64)
+            for slot in range(len(self.slot_req)):
+                pages = self.ptable.pages_of(slot)
+                if pages.size:
+                    np.add.at(refs, pages, 1)
+            if self.registry is not None:
+                strong = self.registry.strong_pages()
+                if strong:
+                    np.add.at(refs, np.asarray(strong, np.int64), 1)
+            refs[0] = 1                        # null page pin
+            assert (refs == self.allocator.refcount).all(), (
+                f"refcount drift: expected {refs.tolist()}, "
+                f"allocator has {self.allocator.refcount.tolist()}")
+            free_expect = self.allocator.refcount == 0
+            free_expect[0] = False
+            assert (free_expect == self.allocator.free).all(), (
+                "free bitmap out of sync with refcounts")
         return {"finished": len(fin), "live": len(live),
                 "stats": self.stats.as_dict()}
 

@@ -26,6 +26,14 @@ convention turns those positions into exact-zero softmax contributions,
 which is what keeps paged decode BITWISE identical to the contiguous
 layout (see ``models/layers/attention.py``).
 
+Copy-on-write sharing rides on a per-page REFCOUNT: ``alloc`` hands a
+page out at refcount 1, ``retain`` adds table references (a new slot
+mapping a shared prefix page), and ``release`` decrements and returns
+the page to the free pool only at zero. A decode write into a page with
+refcount > 1 is preceded by copy-one-page-then-write in the engine, so
+sharers never observe each other. The ``PrefixRegistry`` below is the
+engine-level index from prompt-prefix chunks to physical pages.
+
 Observability: the allocator publishes ``serve.pages.in_use`` /
 ``serve.pages.free`` / ``serve.pages.fragmentation`` gauges plus
 ``serve.pages.alloc`` / ``serve.pages.free_op`` / ``serve.pages.defrag``
@@ -34,8 +42,10 @@ trace instants, and bumps the engine's ``EngineStats`` page counters.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,10 +56,11 @@ from repro.relational import compact as rel_compact
 from repro.relational import partition as rel_partition
 
 #: Block kinds whose KV cache is paged. Local (sliding-window) layers
-#: keep their O(window) ring buffers — paging a ring that is already
-#: small would only add indirection — and recurrent kinds (mamba/xlstm)
-#: carry O(1) state per slot, nothing to page.
-PAGED_KINDS = ("global", "moe", "shared_attn")
+#: page their O(window) ring: the ring rides the first
+#: ``window // page_size`` entries of the (shared) page-table row, so
+#: gemma2/gemma3-style hybrids page every attention layer. Recurrent
+#: kinds (mamba/xlstm) carry O(1) state per slot — nothing to page.
+PAGED_KINDS = ("global", "local", "moe", "shared_attn")
 
 
 def paged_layer_names(cfg) -> tuple:
@@ -63,6 +74,42 @@ def pages_for(length: int, page_size: int) -> int:
     """Pages needed to hold positions ``[0, length)`` plus the slot the
     NEXT decode write lands in (position ``length``)."""
     return length // page_size + 1
+
+
+def validate_paged_support(cfg, max_len: int, page_size: int) -> None:
+    """Construction-time guard for the paged layout.
+
+    Unsupported layer/geometry combinations fail HERE — with the
+    offending ``p{pos}_{kind}`` layer name in the message — instead of
+    raising mid-jit-trace from ``attention.py`` with no context. The
+    trace-time raises that remain in the attention path guard genuinely
+    impossible states (e.g. a multi-token paged decode step, which the
+    engine never emits).
+    """
+    if getattr(cfg, "is_encdec", False):
+        raise ValueError("paged cache layout supports decoder-only models")
+    if max_len % page_size:
+        raise ValueError(
+            f"max_len={max_len} not a multiple of page_size={page_size}")
+    bad = []
+    for pos, kind in enumerate(cfg.layer_pattern):
+        if kind != "local":
+            continue
+        w = getattr(cfg, "sliding_window", None)
+        if not w:
+            bad.append(f"p{pos}_local (sliding_window unset)")
+        elif min(int(w), int(max_len)) % page_size:
+            bad.append(
+                f"p{pos}_local (ring extent min(window={w}, "
+                f"max_len={max_len}) not a multiple of "
+                f"page_size={page_size})")
+    if bad:
+        raise ValueError(
+            "paged cache layout cannot host: " + "; ".join(bad))
+    if not paged_layer_names(cfg):
+        raise ValueError(
+            f"paged cache layout needs at least one attention layer; "
+            f"pattern {cfg.layer_pattern} has none")
 
 
 class PageTable:
@@ -110,8 +157,15 @@ class PageAllocator:
     """Free-page bookkeeping whose alloc/free paths are relational plans.
 
     Page 0 is reserved as the null page at construction and never
-    handed out. ``stats`` (an ``EngineStats``) and ``metrics`` (an obs
-    ``Registry``) are both optional write-through mirrors.
+    handed out. Every live page carries a refcount (the Pibiri–Venturini
+    auxiliary-summary regime: incremental bookkeeping maintained under
+    mixed query/update traffic): ``alloc`` hands pages out at refcount
+    1, ``retain`` adds copy-on-write sharers, ``release`` decrements and
+    frees only at zero. ``epoch[p]`` counts free->live transitions of
+    page ``p`` so weak references (the prefix registry's partial-page
+    entries) can detect reuse. ``stats`` (an ``EngineStats``) and
+    ``metrics`` (an obs ``Registry``) are both optional write-through
+    mirrors.
     """
 
     def __init__(self, num_pages: int, page_size: int, *,
@@ -123,6 +177,9 @@ class PageAllocator:
         self.page_size = int(page_size)
         self.free = np.ones(num_pages, bool)
         self.free[0] = False                     # null page: pinned live
+        self.refcount = np.zeros(num_pages, np.int64)
+        self.refcount[0] = 1                     # null page: pinned ref
+        self.epoch = np.zeros(num_pages, np.int64)
         self.stats = stats
         self.metrics = metrics
         self._publish()
@@ -136,14 +193,25 @@ class PageAllocator:
     def in_use(self) -> int:
         return self.num_pages - 1 - self.free_count   # excl. null page
 
-    def fragmentation(self) -> float:
-        """1 - (largest contiguous free run / free pages): 0 when all
-        free memory is one extent, approaching 1 as it shatters."""
+    def longest_free_run(self) -> int:
+        """Length of the largest contiguous free extent (0 when full)."""
         idx = np.flatnonzero(self.free)
         if idx.size == 0:
-            return 0.0
+            return 0
         runs = np.split(idx, np.flatnonzero(np.diff(idx) > 1) + 1)
-        return 1.0 - max(len(r) for r in runs) / idx.size
+        return max(len(r) for r in runs)
+
+    def fragmentation(self) -> float:
+        """1 - (largest contiguous free run / free pages): 0 when all
+        free memory is one extent, approaching 1 as it shatters. At full
+        occupancy there is NO free extent at all, so the gauge pins to
+        1.0 — the pool is maximally tight exactly then, and the old 0.0
+        ("perfectly compact") reading would suppress the auto-defrag
+        trigger at the worst possible moment."""
+        n_free = self.free_count
+        if n_free == 0:
+            return 1.0
+        return 1.0 - self.longest_free_run() / n_free
 
     def _publish(self) -> None:
         if self.metrics is not None:
@@ -160,8 +228,12 @@ class PageAllocator:
         whole batch — allocation is all-or-nothing."""
         counts = [int(c) for c in counts]
         total = sum(counts)
-        if any(c < 0 for c in counts) or total == 0:
+        if any(c < 0 for c in counts):
             raise ValueError(f"bad page counts {counts}")
+        if total == 0:
+            # A growth tick where no live row crosses a page boundary is
+            # a legal no-op, not an error.
+            return [np.empty(0, np.int64) for _ in counts]
         if total > self.free_count:
             if self.stats is not None:
                 self.stats.page_alloc_failures += 1
@@ -179,10 +251,20 @@ class PageAllocator:
         # "new index values" from a histogram scan).
         offs = np.asarray(scanlib.cumsum(
             jnp.asarray(counts, jnp.int32), exclusive=True))
-        out = [ids[int(o): int(o) + c] for o, c in zip(offs, counts)]
-        for pages in out:
-            assert self.free[pages].all(), "double allocation"
-            self.free[pages] = False
+        out = [ids[int(o): int(o) + c].astype(np.int64)
+               for o, c in zip(offs, counts)]
+        flat = np.concatenate(out)
+        # A real exception, not an assert: asserts vanish under
+        # ``python -O`` and handing out a live page corrupts every
+        # sharer of it.
+        if not self.free[flat].all() or (self.refcount[flat] != 0).any():
+            raise RuntimeError(
+                f"double allocation: pages "
+                f"{flat[~self.free[flat] | (self.refcount[flat] != 0)]} "
+                f"are already live")
+        self.free[flat] = False
+        self.refcount[flat] = 1
+        self.epoch[flat] += 1
         if self.stats is not None:
             self.stats.page_allocs += total
         self._publish()
@@ -190,20 +272,41 @@ class PageAllocator:
                       seqs=len(counts), free=self.free_count)
         return out
 
+    def retain(self, pages: np.ndarray) -> None:
+        """Add one reference per page — a new slot mapping shared
+        (copy-on-write) pages, or the prefix registry pinning a prompt
+        page beyond its donor's lifetime."""
+        pages = np.asarray(pages, np.int64)
+        if pages.size == 0:
+            return
+        if (pages == 0).any():
+            raise ValueError("cannot retain the null page")
+        if (self.refcount[pages] <= 0).any():
+            raise ValueError(
+                f"retain of free pages {pages[self.refcount[pages] <= 0]}")
+        np.add.at(self.refcount, pages, 1)
+
     def release(self, pages: np.ndarray) -> None:
+        """Drop one reference per page; pages reaching refcount 0 return
+        to the free pool (``stats.page_frees`` counts only those)."""
         pages = np.asarray(pages, np.int64)
         if pages.size == 0:
             return
         if (pages == 0).any():
             raise ValueError("cannot free the null page")
-        if self.free[pages].any():
-            raise ValueError(f"double free: {pages[self.free[pages]]}")
-        self.free[pages] = True
+        dec = np.bincount(pages, minlength=self.num_pages)
+        over = dec > self.refcount
+        if over.any():
+            raise ValueError(f"double free: {np.flatnonzero(over)}")
+        self.refcount -= dec
+        freed = (self.refcount == 0) & (dec > 0)
+        n_freed = int(freed.sum())
+        self.free |= freed
         if self.stats is not None:
-            self.stats.page_frees += int(pages.size)
+            self.stats.page_frees += n_freed
         self._publish()
         trace.instant("serve.pages.free_op", pages=int(pages.size),
-                      free=self.free_count)
+                      freed=n_freed, free=self.free_count)
 
     # -- defrag (partition by liveness) ----------------------------------
     def defrag_plan(self) -> np.ndarray:
@@ -216,21 +319,143 @@ class PageAllocator:
         return np.asarray(plan.dest)
 
     def apply_defrag(self, new_of_old: np.ndarray) -> int:
-        """Commit a defrag plan to the bitmap. Returns live pages moved.
-        (The caller is responsible for permuting the pools and remapping
-        its page tables through the same plan.)"""
+        """Commit a defrag plan: permute refcounts/epochs through the
+        old->new mapping and rebuild the free bitmap as refcount == 0.
+        Returns live pages moved. (The caller is responsible for
+        permuting the pools and remapping its page tables and prefix
+        registry through the same plan.)"""
         new_of_old = np.asarray(new_of_old)
         moved = int(((new_of_old != np.arange(self.num_pages))
                      & ~self.free).sum())
-        live = self.in_use + 1                          # + null page
-        self.free[:] = True
-        self.free[:live] = False
+        rc = np.zeros_like(self.refcount)
+        rc[new_of_old] = self.refcount
+        self.refcount = rc
+        ep = np.zeros_like(self.epoch)
+        ep[new_of_old] = self.epoch
+        self.epoch = ep
+        self.free = self.refcount == 0
+        self.free[0] = False                            # null page pinned
         if self.stats is not None:
             self.stats.defrags += 1
         self._publish()
         trace.instant("serve.pages.defrag", moved=moved,
-                      live=live - 1, free=self.free_count)
+                      live=self.in_use, free=self.free_count)
         return moved
+
+
+class PrefixRegistry:
+    """Engine-level prompt-prefix -> physical-page cache (COW sharing).
+
+    Keys are the raw prompt-token bytes up to each page boundary — a
+    CHAIN key: matching page ``j`` implies pages ``[0, j)`` matched the
+    same prompt too, so prefix-chain consistency is structural, not
+    checked. Two entry strengths:
+
+      * FULL prompt pages register STRONG — the registry holds one
+        allocator reference, so a common system prompt's pages survive
+        their donor request and keep serving hits. Their content is
+        immutable: every position in a full prompt page is below every
+        holder's length, and decode only ever writes at the length.
+      * The PARTIAL tail page (prompt ends mid-page) registers WEAK —
+        no reference, validated against the allocator's page ``epoch``
+        at match time so a freed-and-reused page can never leak into a
+        new request. Weak entries are what make copy-on-write live: a
+        consumer mapping one retains it, and the first decode write by
+        either sharer into the now-refcount>1 page copies first.
+
+    ``capacity`` is an LRU entry cap; evicting a strong entry releases
+    its reference. ``remap`` follows a defrag permutation.
+    """
+
+    def __init__(self, allocator: PageAllocator, page_size: int,
+                 capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity={capacity} must be >= 1")
+        self.allocator = allocator
+        self.page_size = int(page_size)
+        self.capacity = int(capacity)
+        # key bytes -> (physical page, strong, epoch at registration)
+        self._entries: "OrderedDict[bytes, tuple]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _lookup(self, key: bytes):
+        ent = self._entries.get(key)
+        if ent is None:
+            return None
+        page, strong, epoch = ent
+        if not strong and (self.allocator.refcount[page] <= 0
+                           or self.allocator.epoch[page] != epoch):
+            del self._entries[key]              # stale weak entry
+            return None
+        self._entries.move_to_end(key)
+        return page
+
+    def match(self, prompt: np.ndarray) -> "list[int]":
+        """Longest chain of registered pages covering ``prompt``: full
+        page-sized chunks first, then (only on a complete full-page
+        match) the exact partial tail. Returns physical page ids; the
+        caller retains them when it maps them into a table row."""
+        ps = self.page_size
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        pages = []
+        full = int(prompt.size) // ps
+        for j in range(full):
+            page = self._lookup(prompt[: (j + 1) * ps].tobytes())
+            if page is None:
+                return pages
+            pages.append(int(page))
+        if prompt.size % ps:
+            page = self._lookup(prompt.tobytes())
+            if page is not None:
+                pages.append(int(page))
+        return pages
+
+    def register(self, prompt: np.ndarray, pages: np.ndarray) -> int:
+        """Register a just-installed prompt's prefix chunks against the
+        physical pages now holding them. Returns new entries added."""
+        ps = self.page_size
+        prompt = np.ascontiguousarray(prompt, np.int32)
+        S = int(prompt.size)
+        chunks = [((j + 1) * ps, int(pages[j]), True)
+                  for j in range(S // ps)]
+        if S % ps:
+            chunks.append((S, int(pages[S // ps]), False))
+        added = 0
+        for extent, page, strong in chunks:
+            key = prompt[:extent].tobytes()
+            if self._lookup(key) is not None:
+                continue                         # live entry already serves
+            if strong:
+                self.allocator.retain(np.array([page]))
+            self._entries[key] = (page, strong,
+                                  int(self.allocator.epoch[page]))
+            added += 1
+            while len(self._entries) > self.capacity:
+                _, (p0, s0, _) = self._entries.popitem(last=False)
+                if s0:
+                    self.allocator.release(np.array([p0]))
+        return added
+
+    def remap(self, new_of_old: np.ndarray) -> None:
+        """Rewrite entry page ids through a defrag permutation (epochs
+        ride along inside the allocator's own permuted array)."""
+        new_of_old = np.asarray(new_of_old)
+        self._entries = OrderedDict(
+            (k, (int(new_of_old[p]), s, e))
+            for k, (p, s, e) in self._entries.items())
+
+    def strong_pages(self) -> "list[int]":
+        """Pages the registry itself holds a reference on (audit)."""
+        return [p for p, s, _ in self._entries.values() if s]
+
+    def clear(self) -> None:
+        """Drop every entry, releasing strong references."""
+        strong = self.strong_pages()
+        self._entries.clear()
+        if strong:
+            self.allocator.release(np.asarray(strong, np.int64))
 
 
 # ---------------------------------------------------------------------------
@@ -268,13 +493,27 @@ def scatter_token(pool: jnp.ndarray, values: jnp.ndarray,
 
 
 def scatter_prefix(pool: jnp.ndarray, row: jnp.ndarray,
-                   pages: np.ndarray) -> jnp.ndarray:
+                   pages: np.ndarray, start_page: int = 0) -> jnp.ndarray:
     """Copy a prefilled contiguous cache row into freshly-allocated
     pages. pool (per, P, Hkv, ps, hd); row (per, 1, Hkv, L, hd) with
-    L >= len(pages)·ps; pages (n,) physical ids."""
+    L >= (start_page + len(pages))·ps; pages (n,) physical ids backing
+    logical pages [start_page, start_page + n) — a nonzero start skips
+    the logical pages a prefix-sharing install mapped from the registry
+    instead of recomputing."""
     per, P, Hkv, ps, hd = pool.shape
     n = int(np.asarray(pages).size)
-    seg = row[:, 0, :, : n * ps].reshape(per, Hkv, n, ps, hd)
+    if n == 0:
+        return pool
+    lo = int(start_page) * ps
+    seg = row[:, 0, :, lo: lo + n * ps].reshape(per, Hkv, n, ps, hd)
     seg = jnp.moveaxis(seg, 2, 1)                  # (per, n, Hkv, ps, hd)
     return pool.at[:, jnp.asarray(np.asarray(pages, np.int32))].set(
         seg.astype(pool.dtype))
+
+
+def gather_prefix(pool: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """(per, P, Hkv, ps, hd) pool × (B, n_log) table ->
+    (per, B, Hkv, n_log·ps, hd): the contiguous staging-cache view of a
+    table row (inverse of ``scatter_prefix``), used to seed a shared
+    prefix before the suffix-only prefill."""
+    return jax.vmap(gather_pages, in_axes=(0, None))(pool, page_table)

@@ -73,6 +73,12 @@ class EngineStats:
     page_alloc_failures: int = 0   # allocation attempts the pool refused
     prefill_chunks: int = 0        # chunked-prefill chunks executed
     defrags: int = 0               # pool compactions (partition by liveness)
+    auto_defrags: int = 0          # defrags triggered by policy.choose_defrag
+
+    # -- copy-on-write prefix sharing ------------------------------------
+    prefix_hits: int = 0           # admissions that mapped registry pages
+    shared_page_maps: int = 0      # pages mapped from the registry (not alloc'd)
+    refcount_copies: int = 0       # COW copies (write into a refcount>1 page)
 
     # -- metrics mirroring ----------------------------------------------
     # ``_registry`` is deliberately NOT a dataclass field: asdict()/
@@ -143,7 +149,11 @@ class EngineStats:
             f"prefill_compiles={self.prefill_compiles} "
             f"prefill_evictions={self.prefill_cache_evictions} "
             f"pages[allocs={self.page_allocs} frees={self.page_frees} "
-            f"failures={self.page_alloc_failures} defrags={self.defrags}] "
+            f"failures={self.page_alloc_failures} defrags={self.defrags} "
+            f"auto_defrags={self.auto_defrags}] "
+            f"sharing[prefix_hits={self.prefix_hits} "
+            f"shared_page_maps={self.shared_page_maps} "
+            f"refcount_copies={self.refcount_copies}] "
             f"prefill_chunks={self.prefill_chunks} "
             f"peak_queue={self.peak_queue_depth}"
         )

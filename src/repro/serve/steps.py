@@ -162,22 +162,18 @@ def init_paged_cache_for(cfg: ModelConfig, batch: int, max_len: int,
                          page_size: int, num_pages: int) -> Pytree:
     """Paged decode cache: ``{"layers": ..., "page_table": ...}``.
 
-    Global-attention KV leaves become page POOLS of shape
-    ``(periods, num_pages, Hkv, page_size, hd)`` shared by all slots;
-    local ring buffers and recurrent (ssm/xlstm) state keep their
+    Attention KV leaves — global AND local (sliding-window) — become
+    page POOLS of shape ``(periods, num_pages, Hkv, page_size, hd)``
+    shared by all slots; a local layer's O(window) ring rides the first
+    ``window // page_size`` entries of its table row (the attention path
+    clamps its gather there). Recurrent (ssm/xlstm) state keeps its
     slot-indexed layout unchanged. The page table is one
     ``(batch, max_len // page_size)`` int32 array shared across layers
     (vLLM-style); entry 0 is the null page.
     """
-    from repro.serve.paging import paged_layer_names
-    if cfg.is_encdec:
-        raise ValueError("paged cache layout is decoder-only")
-    if max_len % page_size:
-        raise ValueError(
-            f"page_size={page_size} must divide max_len={max_len} so the "
-            f"gathered page view matches the contiguous cache bitwise")
+    from repro.serve.paging import paged_layer_names, validate_paged_support
+    validate_paged_support(cfg, max_len, page_size)
     layers = lm_mod.init_cache(cfg, batch, max_len)
-    dt = None
     for name in paged_layer_names(cfg):
         kv = layers[name]["kv"]
         per = kv["k"].shape[0]
@@ -185,10 +181,6 @@ def init_paged_cache_for(cfg: ModelConfig, batch: int, max_len: int,
         shape = (per, num_pages, cfg.num_kv_heads, page_size, cfg.head_dim)
         layers[name] = {"kv": {"k_pages": jnp.zeros(shape, dt),
                                "v_pages": jnp.zeros(shape, dt)}}
-    if dt is None:
-        raise ValueError(
-            f"paged layout needs at least one non-local attention layer; "
-            f"pattern {cfg.layer_pattern!r} has none")
     return {"layers": layers,
             "page_table": jnp.zeros((batch, max_len // page_size),
                                     jnp.int32)}

@@ -121,6 +121,45 @@ def test_chaos_wall(small_model, attn_schedule, cache_layout, fault_seed):
     assert inj.fired_count() > 0
 
 
+def test_chaos_wall_windowed_hybrid():
+    """The chaos wall's windowed-paged axis (ISSUE 9): a gemma3-style
+    local/global hybrid decodes entirely on pages — local rings riding
+    the first window//page_size table entries, wrapping past the window
+    — under fault injection. Undisturbed streams stay bitwise identical
+    to the contiguous fault-free baseline."""
+    cfg = configs.get_smoke_config("gemma3-12b")   # 5:1 local:global, w=32
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    prompts = _prompts(4, seed=5)
+    ecfg = dict(max_slots=2, max_len=48, max_new_tokens=30, eos_id=-1,
+                temperature=0.0)                   # lengths pass window 32
+    base_eng = _run(cfg, params, prompts, EngineConfig(**ecfg))
+    assert all(r.finish_reason in ("eos", "length_budget")
+               for r in base_eng.finished)
+    base = {r.rid: list(r.output) for r in base_eng.finished}
+
+    poison = [1]
+    inj = FaultInjector.from_seed(11, ticks=60, p_error=0.1, p_nan=0.1,
+                                  p_stall=0.05, stall_s=0.002,
+                                  poison_rids=poison)
+    eng = _run(cfg, params, prompts,
+               EngineConfig(cache_layout="paged", page_size=8, **ecfg),
+               injector=inj, max_ticks=400)
+
+    rids = sorted(r.rid for r in eng.finished)
+    assert rids == list(range(len(prompts)))
+    reasons = {r.rid: r.finish_reason for r in eng.finished}
+    assert reasons[poison[0]] == "error"
+    assert eng.stats.quarantined >= 1
+    for r in eng.finished:
+        if r.rid in poison or r.degraded or r.finish_reason == "error":
+            continue
+        assert r.output == base[r.rid], (
+            f"rid {r.rid} diverged under injection on the hybrid: "
+            f"{r.output} != {base[r.rid]}")
+    assert inj.fired_count() > 0
+
+
 def test_chaos_all_transient_recovers_everything(small_model):
     """With only transient (count=1) faults every request completes
     normally and every output matches the fault-free baseline."""

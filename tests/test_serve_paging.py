@@ -233,8 +233,10 @@ def test_defrag_mid_run_does_not_change_tokens(small_model):
     ref = _run(cfg, params, prompts, _ecfg(max_slots=3, max_new_tokens=8,
                                            cache_layout="paged",
                                            page_size=8))
+    # auto_defrag off: this test pins the MANUAL defrag call count.
     eng = Engine(params, cfg, _ecfg(max_slots=3, max_new_tokens=8,
-                                    cache_layout="paged", page_size=8))
+                                    cache_layout="paged", page_size=8,
+                                    auto_defrag=False))
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p))
     with warnings.catch_warnings():
@@ -392,3 +394,307 @@ def test_kv_block_map_bitwise_on_permuted_pool(schedule):
             block_q=bq, block_k=bk, schedule=schedule, interpret=True,
             kv_block_map=tuple(perm.tolist()))
         assert np.array_equal(np.asarray(ref), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# allocator refcounts + the ISSUE 9 bugfixes
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_zero_total_is_noop():
+    """An all-zero batch (growth tick where no row crosses a page
+    boundary) is a legal no-op, not a ValueError."""
+    a = PageAllocator(8, 4)
+    out = a.alloc([0, 0, 0])
+    assert [v.size for v in out] == [0, 0, 0]
+    assert a.free_count == 7 and a.in_use == 0
+    # mixed zero/nonzero batches slice correctly around the zeros
+    out = a.alloc([0, 2, 0, 1])
+    assert [v.size for v in out] == [0, 2, 0, 1]
+    # negative counts still raise
+    with pytest.raises(ValueError):
+        a.alloc([-1, 1])
+
+
+def test_double_allocation_raises_runtime_error():
+    """The double-allocation guard is a real exception (asserts vanish
+    under ``python -O``): corrupt the free bitmap so a live page looks
+    free and the next alloc must refuse to hand it out."""
+    a = PageAllocator(6, 4)
+    (pages,) = a.alloc([2])
+    a.free[pages] = True                  # simulated bookkeeping corruption
+    with pytest.raises(RuntimeError, match="double allocation"):
+        a.alloc([4])
+
+
+def test_fragmentation_pinned_at_occupancy_extremes():
+    """Gauge regression (ISSUE 9): 0 free pages -> 1.0 (the pool is
+    maximally tight, NOT 'perfectly compact'), 1 free page -> 0.0, N
+    contiguous free pages -> 0.0, shattered free space -> in between."""
+    a = PageAllocator(10, 4)
+    assert a.fragmentation() == 0.0       # 9 contiguous free pages
+    (pages,) = a.alloc([9])
+    assert a.free_count == 0 and a.fragmentation() == 1.0
+    a.release(pages[4:5])
+    assert a.free_count == 1 and a.fragmentation() == 0.0
+    a.release(pages[6:8])
+    # free = {5, 7, 8}: largest run 2 of 3
+    assert a.fragmentation() == pytest.approx(1.0 - 2.0 / 3.0)
+    a.release(np.concatenate([pages[:4], pages[5:6], pages[8:]]))
+    assert a.free_count == 9 and a.fragmentation() == 0.0
+    assert a.longest_free_run() == 9
+
+
+def test_retain_release_refcount_lifecycle():
+    a = PageAllocator(8, 4)
+    (pages,) = a.alloc([2])
+    assert (a.refcount[pages] == 1).all()
+    a.retain(pages)                        # a second table row maps them
+    assert (a.refcount[pages] == 2).all()
+    a.release(pages)                       # first sharer drops out
+    assert (a.refcount[pages] == 1).all() and a.in_use == 2
+    a.release(pages)                       # last reference frees
+    assert a.in_use == 0 and a.free[pages].all()
+    with pytest.raises(ValueError, match="double free"):
+        a.release(pages)
+    with pytest.raises(ValueError, match="retain of free"):
+        a.retain(pages)
+    with pytest.raises(ValueError, match="null page"):
+        a.retain(np.array([0]))
+    # epochs advance on reuse so weak registry entries can detect it
+    before = a.epoch[int(pages[0])]
+    a.alloc([2])
+    assert a.epoch[int(pages[0])] == before + 1
+
+
+def test_prefix_registry_lru_and_weak_staleness():
+    from repro.serve import PrefixRegistry
+    a = PageAllocator(16, 4)
+    prompt = np.arange(10, dtype=np.int32)         # 2 full pages + partial
+    (pages,) = a.alloc([pages_for(10, 4)])
+
+    # Capacity pressure: inserting the 3rd chunk evicts the OLDEST entry
+    # (the first full page, strong) and releases its registry pin.
+    small = PrefixRegistry(a, page_size=4, capacity=2)
+    small.register(prompt, pages)
+    assert len(small) == 2 and len(small.strong_pages()) == 1
+    assert a.refcount[pages[0]] == 1               # evicted -> released
+    assert a.refcount[pages[1]] == 2               # surviving strong pin
+    assert a.refcount[pages[2]] == 1               # partial is weak: no ref
+    assert small.match(prompt) == []               # chain broken at page 0
+    small.clear()
+    assert a.refcount[pages[1]] == 1
+
+    # Ample capacity: full chain matches, weak tail validated via epoch.
+    reg = PrefixRegistry(a, page_size=4, capacity=8)
+    reg.register(prompt, pages)
+    assert (a.refcount[pages[:2]] == 2).all()
+    assert reg.match(prompt) == list(pages[:3])
+    a.release(pages)                               # drop the table refs
+    # Full pages survive on the registry pin; the weak page is freed...
+    assert a.free[pages[2]] and not a.free[pages[:2]].any()
+    a.alloc([1])                                   # ...and reused (epoch bump)
+    assert reg.match(prompt) == list(pages[:2])    # stale weak tail dropped
+    reg.clear()
+    assert a.in_use == 1                           # just the realloc'd page
+
+
+def test_policy_explains_defrag():
+    from repro.core.scan import policy
+    d = policy.explain_defrag(0.0, 9, 9)
+    assert d.what == "defrag" and d.value == "skip"
+    d = policy.explain_defrag(1.0, 0, 0)
+    assert d.value == "skip" and "cannot create space" in d.reason
+    d = policy.explain_defrag(0.75, 4, 1)
+    assert d.value == "defrag" and d.inputs["free_pages"] == 4
+    assert policy.choose_defrag(0.75, 4, 1) is True
+    assert policy.choose_defrag(0.75, 4, 1, threshold=0.9) is False
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def _shared_prompts(seed=0, tails=(4, 5)):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(2, 500, 16).astype(np.int32)
+    return [np.concatenate([prefix,
+                            rng.integers(2, 500, t).astype(np.int32)])
+            for t in tails]
+
+
+def test_shared_prefix_bitwise_and_page_savings(small_model):
+    """Two requests with a common 16-token system prefix: sharing maps
+    the prefix pages instead of re-allocating them, token streams stay
+    bitwise identical to the unshared paged run, and the counters
+    attribute the savings."""
+    cfg, params = small_model
+    prompts = _shared_prompts()
+    base = dict(max_slots=2, cache_layout="paged", page_size=8)
+    ref = _run(cfg, params, prompts, _ecfg(**base))
+    eng = _run(cfg, params, prompts, _ecfg(**base, share_prefixes=True))
+    assert _outputs(eng) == _outputs(ref)
+    # consumer skipped allocating the two matched prefix pages
+    assert eng.stats.page_allocs == ref.stats.page_allocs - 2
+    assert eng.stats.prefix_hits == 1
+    assert eng.stats.shared_page_maps == 2
+    # the registry outlives its donors: strong pins keep in_use > 0
+    assert eng.allocator.in_use == len(eng.registry.strong_pages()) > 0
+    assert "refcount_copies=0" in eng.stats.summary()
+
+
+def test_cow_fires_on_duplicate_prompts(small_model):
+    """An exact-duplicate prompt matches the donor's PARTIAL tail page;
+    the first decode write into the now-shared page must copy first, and
+    both streams stay bitwise identical to the unshared run."""
+    cfg, params = small_model
+    prompts = _shared_prompts(seed=3, tails=(5,))
+    prompts = [prompts[0], prompts[0].copy()]
+    base = dict(max_slots=2, cache_layout="paged", page_size=8)
+    ref = _run(cfg, params, prompts, _ecfg(**base))
+    eng = _run(cfg, params, prompts, _ecfg(**base, share_prefixes=True))
+    assert _outputs(eng) == _outputs(ref)
+    assert eng.stats.prefix_hits == 1
+    assert eng.stats.shared_page_maps == 3     # 2 full + the partial page
+    assert eng.stats.refcount_copies >= 1
+    assert f"refcount_copies={eng.stats.refcount_copies}" \
+        in eng.stats.summary()
+
+
+def test_cow_fuzzer_refcounts_no_double_free_bitwise(small_model):
+    """Seeded rounds of submit (incl. forks of earlier prompts), step,
+    and defrag under a tight pool with sharing on. After every round the
+    audit asserts refcount == live table references + registry pins and
+    free == (refcount == 0); any double-free raises inside the
+    allocator. Every finished stream is bitwise identical to an
+    unshared paged run of the same prompts."""
+    cfg, params = small_model
+    rng = np.random.default_rng(11)
+    prefixes = [rng.integers(2, 500, 16).astype(np.int32),
+                rng.integers(2, 500, 21).astype(np.int32)]
+    prompts = []
+    for i in range(10):
+        if i == 1 or i % 3 == 2:
+            prompts.append(prompts[i - 1].copy())         # immediate fork
+        else:
+            tail = rng.integers(2, 500,
+                                int(rng.integers(1, 6))).astype(np.int32)
+            prompts.append(np.concatenate([prefixes[i % 2], tail]))
+    eng = Engine(params, cfg, _ecfg(
+        max_slots=3, max_new_tokens=6, cache_layout="paged", page_size=8,
+        num_pages=25, share_prefixes=True, prefix_cache_pages=8))
+    nxt = 0
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for rnd in range(60):
+            # round 0 submits the donor+fork pair together so both share
+            # the donor's partial tail page while the donor is live (the
+            # only schedule that deterministically exercises real COW).
+            for _ in range(2 if rnd == 0 else int(rng.integers(0, 3))):
+                if nxt < len(prompts):
+                    eng.submit(Request(rid=nxt, prompt=prompts[nxt]))
+                    nxt += 1
+            for _ in range(int(rng.integers(1, 4))):
+                eng.step()
+            if rng.random() < 0.25:
+                eng.defrag()
+            eng.audit()
+            if (nxt == len(prompts) and not eng.waiting
+                    and all(r is None for r in eng.slot_req)):
+                break
+        eng.run_to_completion(max_ticks=200)
+    eng.audit()
+    assert eng.stats.prefix_hits > 0
+    assert eng.stats.refcount_copies > 0       # forks forced real COW
+    assert {r.rid for r in eng.finished} == set(range(len(prompts)))
+    ref = _run(cfg, params, prompts, _ecfg(
+        max_slots=3, max_new_tokens=6, cache_layout="paged", page_size=8))
+    ref_out = _outputs(ref)
+    for rid, out in _outputs(eng).items():
+        assert out == ref_out[rid], f"rid {rid} diverged under sharing"
+
+
+def test_share_prefixes_requires_bucketable():
+    cfg = configs.get_smoke_config("gemma3-12b")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="share_prefixes"):
+        Engine(params, cfg, _ecfg(cache_layout="paged", page_size=8,
+                                  share_prefixes=True))
+
+
+# ---------------------------------------------------------------------------
+# windowed paged decode (gemma2/gemma3-style hybrids)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def hybrid_model():
+    cfg = configs.get_smoke_config("gemma3-12b")   # 5:1 local:global, w=32
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_windowed_paged_bitwise_vs_contiguous(hybrid_model):
+    """A local/global hybrid decodes paged end-to-end — every attention
+    layer on pages, the local rings riding the first window//page_size
+    table entries — bitwise identical to the contiguous layout, past the
+    point where the rings wrap (lengths > window)."""
+    cfg, params = hybrid_model
+    prompts = _prompts(3, seed=1, lo=4, hi=9)
+    outs = {}
+    for layout in ("contiguous", "paged"):
+        eng = _run(cfg, params, prompts, _ecfg(
+            max_slots=3, max_new_tokens=30, cache_layout=layout,
+            page_size=8))
+        assert all(r.finish_reason == "length_budget" for r in eng.finished)
+        outs[layout] = _outputs(eng)
+    # budget 30 on 4-8 token prompts: lengths reach ~38 > window 32
+    assert outs["paged"] == outs["contiguous"]
+
+
+def test_windowed_paged_construction_errors(hybrid_model):
+    """Unsupported geometry fails at construction with the offending
+    layer named — not mid-jit-trace (ISSUE 9 satellite)."""
+    cfg, params = hybrid_model
+    # ring extent min(32, 48) not a multiple of page_size=12
+    with pytest.raises(ValueError, match=r"p0_local"):
+        Engine(params, cfg, _ecfg(max_len=48, cache_layout="paged",
+                                  page_size=12))
+    from repro.serve import validate_paged_support
+    with pytest.raises(ValueError, match=r"p0_local.*sliding_window"):
+        validate_paged_support(
+            dataclasses.replace(cfg, sliding_window=None), 48, 8)
+    validate_paged_support(cfg, 48, 8)             # supported geometry
+
+
+def test_auto_defrag_self_heals(small_model):
+    """Fragmentation from a cancel mid-run triggers policy.choose_defrag
+    on a later tick — no host call to defrag() — and the surviving token
+    streams are unchanged."""
+    cfg, params = small_model
+    prompts = _prompts(3, seed=3, lo=5, hi=10)
+    ref = _run(cfg, params, prompts, _ecfg(
+        max_slots=3, max_new_tokens=8, cache_layout="paged", page_size=8,
+        auto_defrag=False))
+    eng = Engine(params, cfg, _ecfg(
+        max_slots=3, max_new_tokens=8, cache_layout="paged", page_size=8,
+        num_pages=13, defrag_threshold=0.1, defrag_cooldown=1))
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for _ in range(2):
+            eng.step()
+        eng.cancel(1)                      # punch a hole in the pool
+        eng.run_to_completion(max_ticks=300)
+    eng.audit()
+    assert eng.stats.auto_defrags >= 1
+    assert eng.stats.auto_defrags <= eng.stats.defrags
+    assert f"auto_defrags={eng.stats.auto_defrags}" in eng.stats.summary()
+    ref_out = _outputs(ref)
+    for rid, out in _outputs(eng).items():
+        if rid != 1:
+            assert out == ref_out[rid]

@@ -261,6 +261,48 @@ print(f"  {n} requests on {eng.allocator.num_pages} pages "
 print(f"  {eng.stats.summary()}")
 EOF
 
+echo "== shared-prefix smoke: COW page sharing saves allocations =="
+python - <<'EOF'
+import dataclasses, warnings
+import jax, numpy as np
+from repro import configs
+from repro.serve import Engine, EngineConfig, Request
+from repro.train.step import init_params
+
+cfg = dataclasses.replace(configs.get_smoke_config("stablelm-12b"),
+                          dtype="float32")
+params = init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(7)
+system = rng.integers(2, 500, size=16).astype(np.int32)  # 2 full pages
+prompts = [np.concatenate([system, rng.integers(2, 500, size=3)
+                           .astype(np.int32)]) for _ in range(2)]
+
+def drive(share):
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=2, max_len=48, max_new_tokens=5, eos_id=-1,
+        temperature=0.0, cache_layout="paged", page_size=8,
+        share_prefixes=share))
+    for rid, p in enumerate(prompts):
+        eng.submit(Request(rid=rid, prompt=p))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        done = eng.run_to_completion()
+    eng.audit()
+    return {r.rid: list(r.output) for r in done}, eng.stats
+
+out_u, st_u = drive(False)
+out_s, st_s = drive(True)
+assert out_s == out_u, "sharing changed token streams"
+assert st_s.page_allocs < st_u.page_allocs, (
+    f"sharing saved nothing: {st_s.page_allocs} vs {st_u.page_allocs}")
+assert st_s.prefix_hits >= 1 and st_s.shared_page_maps >= 2
+print(f"  2 requests, common 16-token system prompt: page_allocs "
+      f"{st_u.page_allocs} -> {st_s.page_allocs}, "
+      f"prefix_hits={st_s.prefix_hits}, "
+      f"shared_page_maps={st_s.shared_page_maps}")
+print(f"  {st_s.summary()}")
+EOF
+
 echo "== tier-1 tests =="
 if [[ "${1:-}" == "--fast" ]]; then
     # Exhaustive sweeps (large-shape grad walls) are marked slow; the
