@@ -94,6 +94,8 @@ def cumsum(x: jax.Array, axis: int = -1, exclusive: bool = False,
 
 
 def _shift_exclusive(inc: Pytree, monoid: assoc.Monoid, axis: int) -> Pytree:
+    if jax.tree.leaves(inc)[0].shape[axis] == 0:
+        return inc  # nothing to shift; identity_like of empty has no [0:1)
     ident_full = monoid.identity_like(inc)
     return jax.tree.map(
         lambda x, i: jnp.concatenate(

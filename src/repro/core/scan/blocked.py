@@ -86,6 +86,9 @@ def scan_blocked(
     leaves = jax.tree.leaves(elems)
     axis = axis % leaves[0].ndim
     n = leaves[0].shape[axis]
+    if n == 0:
+        # Zero blocks: the lax.scan init below would index block [0, 0].
+        return elems
 
     x = _axis_first(elems, axis)
     num_blocks = -(-n // block_size)
@@ -164,6 +167,10 @@ def scan_two_pass(
     leaves = jax.tree.leaves(elems)
     axis = axis % leaves[0].ndim
     n = leaves[0].shape[axis]
+    if n == 0:
+        # partition_sizes(0, ...) yields one empty partition, whose
+        # pass-1 fold has nothing to reduce — the scan is its input.
+        return elems
     if sizes is None:
         sizes = partition_sizes(n, num_partitions, dilation)
     if sum(sizes) != n:

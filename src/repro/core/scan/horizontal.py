@@ -59,6 +59,10 @@ def scan_horizontal(
     leaves = jax.tree.leaves(elems)
     axis = axis % leaves[0].ndim
     n = leaves[0].shape[axis]
+    if n == 0:
+        # Nothing to combine — and the exclusive shift below would slice
+        # [0, 1) out of a length-0 identity.
+        return elems
 
     ident_full = monoid.identity_like(elems)
 

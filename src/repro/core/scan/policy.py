@@ -17,7 +17,7 @@ can pick a sensible default, and so the choice is documented in one place:
          remain available for study and as oracles.
 
 Kernel SCHEDULE rule (Obs 2/3 applied to the Pallas grid): the kernel-
-backed scans run one of THREE grid organizations, picked by
+backed scans run one of FOUR grid organizations, picked by
 ``choose_schedule`` (also surfaced as ``Choice.schedule``) and executed
 by the monoid-generic engine in ``repro.kernels.scan_engine``:
 
@@ -40,15 +40,25 @@ by the monoid-generic engine in ``repro.kernels.scan_engine``:
                native single-launch path cannot run (interpret mode, no
                semaphore API) the engine degrades to the two-launch
                decoupled schedule, bit-identically.
+  'tree'       carry's grid with the work-efficient Blelloch sweep as the
+               in-tile network (the paper's §3.3 balanced tree): O(b)
+               combines per b-element tile instead of the log network's
+               O(b log b), at the cost of strided deinterleave/interleave
+               passes inside VMEM (Observation 5's memory-access penalty,
+               which partitioning confines to fast memory). Same HBM
+               traffic as carry (read n + write n).
 
   The flip: carry-chain when ``batch >= cores`` (enough rows to fill the
-  machine; cheapest traffic), a parallel-sequence schedule when a long
-  row would otherwise serialize — ``batch < cores`` AND the row spans
-  multiple blocks AND there are at least ``cores // batch`` chunks to
-  spread. Of the two parallel organizations, fused is preferred (it
-  erases decoupled's second read); ``prefer_fused=False`` forces the
-  two-launch form. Serve-engine decode and SSM prefill (B=1, N ≥ 2^22)
-  land on fused/decoupled; training shapes (B ≥ 8) keep the carry chain.
+  machine; cheapest traffic) — upgraded to the tree network when the tile
+  is long (``block_elems >= TREE_BLOCK_ELEMS``), where the in-tile
+  combine count dominates and work-efficiency pays; a parallel-sequence
+  schedule when a long row would otherwise serialize — ``batch < cores``
+  AND the row spans multiple blocks AND there are at least
+  ``cores // batch`` chunks to spread. Of the two parallel
+  organizations, fused is preferred (it erases decoupled's second read);
+  ``prefer_fused=False`` forces the two-launch form. Serve-engine decode
+  and SSM prefill (B=1, N ≥ 2^22) land on fused/decoupled; training
+  shapes (B ≥ 8) keep the carry chain at default blocks.
 """
 
 from __future__ import annotations
@@ -69,6 +79,15 @@ L2_HALF_FLOATS = 128 * 1024  # the paper's best CPU partition: ½ L2 in elems
 # class; 8 also matches the paper's CPU thread sweet spot (Fig. 7).
 NUM_CORES = 8
 
+# In-tile element count above which the work-efficient tree network pays
+# for its strided deinterleave/interleave passes (the paper's Observation
+# 5 tradeoff): the Hillis–Steele network does O(b log b) combines per
+# tile vs the tree's O(b), so the tree's advantage grows with the block
+# length, while its reshuffle overhead is roughly flat per level. Below
+# this the lane-parallel log network wins; at the default 2048-element
+# blocks the carry schedule keeps the job.
+TREE_BLOCK_ELEMS = 8192
+
 
 @dataclasses.dataclass(frozen=True)
 class Choice:
@@ -77,7 +96,7 @@ class Choice:
     variant: int  # two-pass organization (1 = scan-first, 2 = reduce-first)
     carry_exchange: str  # distributed sums exchange
     reason: str
-    schedule: str = "carry"  # grid organization: 'carry'|'decoupled'|'fused'
+    schedule: str = "carry"  # grid org: 'carry'|'decoupled'|'fused'|'tree'
     # The inputs the choice was made from (the explain surface) — filled
     # by ``choose``; excluded from equality so cached/reconstructed
     # Choices with the same outcome still compare equal.
@@ -110,7 +129,7 @@ def explain_schedule(
     prefer_fused: bool = True,
 ) -> Decision:
     """``choose_schedule`` with its working shown: the decision, the
-    branch of the three-way rule that fired, and the inputs — emitted as
+    branch of the four-way rule that fired, and the inputs — emitted as
     a ``policy.schedule`` trace event."""
     batch = max(int(batch), 1)
     chunks = -(-n // max(block_elems, 1))
@@ -118,6 +137,14 @@ def explain_schedule(
     inputs = dict(batch=batch, n=n, cores=cores, block_elems=block_elems,
                   chunks=chunks, spare=spare, prefer_fused=prefer_fused)
     if batch >= cores:
+        if block_elems >= TREE_BLOCK_ELEMS:
+            return Decision(
+                "schedule", "tree",
+                f"batch {batch} >= cores {cores} and block_elems "
+                f"{block_elems} >= {TREE_BLOCK_ELEMS}: rows fill every "
+                f"core and the tile is long enough that the "
+                f"work-efficient tree sweep beats the log network",
+                inputs).emit()
         return Decision(
             "schedule", "carry",
             f"batch {batch} >= cores {cores}: rows alone fill every core; "

@@ -45,6 +45,11 @@ def scan_ref(
     """
     monoid = assoc.get(op)
     elems = _move_axis_first(elems, axis)
+    n = jax.tree.leaves(elems)[0].shape[0]
+    if n == 0:
+        # A length-0 scan is its (empty) input — there is nothing to
+        # combine and lax.scan's init would need a leaf to infer from.
+        return _move_axis_back(elems, axis)
     first = jax.tree.map(lambda x: x[0], elems)
     init = monoid.identity_like(first)
 

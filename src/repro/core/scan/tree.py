@@ -39,6 +39,10 @@ def scan_tree(
     leaves = jax.tree.leaves(elems)
     axis = axis % leaves[0].ndim
     n = leaves[0].shape[axis]
+    if n == 0:
+        # The pow2 pad would round 0 up to 1, but identity_like of an
+        # empty tree has nothing to pad WITH — return the empty scan.
+        return elems
 
     # Work on axis 0; pad to a power of two with identities.
     x = jax.tree.map(lambda a: jnp.moveaxis(a, axis, 0), elems)

@@ -57,6 +57,10 @@ def scan_vertical(
     leaves = jax.tree.leaves(elems)
     axis = axis % leaves[0].ndim
     n = leaves[0].shape[axis]
+    if n == 0:
+        # Nothing to scan: the pad path would blow the axis up to
+        # ``lanes`` identities and variant 2 would fold an empty chunk.
+        return elems
 
     if n % lanes != 0:
         # Pad the tail with identity elements; slice the result back.

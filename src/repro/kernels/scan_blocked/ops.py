@@ -10,12 +10,20 @@ multiples, dtype policy and interpret-mode fallback on CPU.
 ``in_place=True`` donates the input buffer — the paper's in-place variant
 (§4.2.3) expressed as XLA buffer donation.
 
-Three grid schedules (see ``core/scan/policy`` module doc):
+Four grid schedules (see ``core/scan/policy`` module doc):
   * ``schedule="carry"``     — grid-carried total, sequence sequential;
   * ``schedule="decoupled"`` — reduce-then-scan, two launches;
   * ``schedule="fused"``     — reduce-then-scan, single launch chained
     through cross-chunk semaphores (two-launch fallback off-TPU);
+  * ``schedule="tree"``      — carry's grid, work-efficient Blelloch
+    sweep inside each tile (§3.3);
   * ``schedule="auto"``      — the policy's batch-vs-cores rule decides.
+
+``cumsum`` is differentiable via a ``jax.custom_vjp`` whose backward is
+ITSELF an engine scan — the adjoint of a prefix sum is a suffix sum, so
+the gradient runs the same kernel on the flipped cotangent (one more
+``kernel.launch`` with the same schedule), never falling back to
+differentiate-through-the-network.
 """
 
 from __future__ import annotations
@@ -68,6 +76,35 @@ def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
 
 
+# Gradient-as-a-scan: d(prefix sum)/dx is a SUFFIX sum of the cotangent
+# with the same exclusivity — flip, run the identical engine kernel,
+# flip back. All the static knobs ride as nondiff args so the backward
+# reuses the forward's jitted ``_cumsum_impl`` (and therefore emits its
+# own ``kernel.launch`` trace event when compiled).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _cumsum_vjp(x, axis, exclusive, block_b, block_n, interpret, schedule):
+    return _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret,
+                        schedule)
+
+
+def _cumsum_fwd(x, axis, exclusive, block_b, block_n, interpret, schedule):
+    out = _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret,
+                       schedule)
+    return out, None
+
+
+def _cumsum_bwd(axis, exclusive, block_b, block_n, interpret, schedule,
+                _residual, g):
+    # Inclusive: dx_j = Σ_{i>=j} g_i; exclusive: dx_j = Σ_{i>j} g_i —
+    # both are the same-flavor prefix sum of the reversed cotangent.
+    rev = _cumsum_impl(jnp.flip(g, axis), axis, exclusive, block_b,
+                       block_n, interpret, schedule)
+    return (jnp.flip(rev, axis),)
+
+
+_cumsum_vjp.defvjp(_cumsum_fwd, _cumsum_bwd)
+
+
 def cumsum(
     x: jax.Array,
     axis: int = -1,
@@ -80,16 +117,23 @@ def cumsum(
     """Kernel-backed prefix sum along ``axis`` (any rank).
 
     ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere.
-    ``schedule`` picks the grid organization (carry|decoupled|fused|auto).
+    ``schedule`` picks the grid organization
+    (carry|decoupled|fused|tree|auto). Differentiable: the custom VJP
+    runs the backward as another engine scan (see module doc).
     """
     if interpret is None:
         interpret = not _on_tpu()
+    if x.size == 0:
+        # Zero-length scan axis (or an empty batch): the scan of nothing
+        # is nothing — and the padding arithmetic below would divide by
+        # a zero block.
+        return x
     n = x.shape[axis]
     batch = max(x.size // max(n, 1), 1)
     bn = min(block_n, _round_up(n, 128))  # the block _cumsum_impl uses
     schedule = resolve_schedule(schedule, batch, n, bn)
-    return _cumsum_impl(x, axis, exclusive, block_b, block_n, interpret,
-                        schedule)
+    return _cumsum_vjp(x, axis, exclusive, block_b, block_n, interpret,
+                       schedule)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,11 @@ architecture:
     chained through cross-chunk            assoc.softmax_pair_kernel_spec
     semaphores (Merrill-style); falls        (flash attention: carried
     back to two-launch under interpret       payload + input transform)
+  schedules.scan_tree       — work-efficient
+    balanced tree (§3.3, Observation 5):
+    Blelloch up-sweep/down-sweep inside
+    each VMEM tile, carry's grid between
+    tiles
   schedules.fold_carry /    — the same two
     schedules.fold_decoupled organizations
     as a FOLD for carried-payload monoids
@@ -51,12 +56,13 @@ from repro.kernels.scan_engine.schedules import (RESOLVABLE, SCHEDULES,
                                                  fused_native_available,
                                                  resolve_schedule, scan,
                                                  scan_carry, scan_decoupled,
-                                                 scan_fused, tile_scan)
+                                                 scan_fused, scan_tree,
+                                                 tile_scan, tree_scan)
 
 __all__ = [
     "Channels", "KVBlocks", "QBlocks", "RESOLVABLE", "Rows", "SCHEDULES",
     "block_live", "exclusive_chain", "fold_carry", "fold_chain",
     "fold_decoupled", "fused_native_available", "monoids",
     "resolve_schedule", "scan", "scan_carry", "scan_decoupled",
-    "scan_fused", "tile_scan",
+    "scan_fused", "scan_tree", "tile_scan", "tree_scan",
 ]

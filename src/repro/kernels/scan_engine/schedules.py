@@ -1,4 +1,4 @@
-"""The three grid organizations, each written ONCE over a KernelSpec.
+"""The four grid organizations, each written ONCE over a KernelSpec.
 
 This is the paper's central claim — prefix-scan performance is decided by
 how the sub-procedures are ORGANIZED, not by the binary operator — turned
@@ -21,13 +21,29 @@ segmented, affine-SSM and compact-mask all run the SAME bodies:
              TPU semaphore API; under interpret mode (or when the API is
              missing) it degrades to the two-launch decoupled schedule —
              same organization, same bits.
+  tree       the paper's work-efficient balanced tree (§3.3, Observation
+             5; Blelloch's up-sweep/down-sweep): the carry schedule's
+             grid and inter-block carry, but the IN-TILE network replaced
+             by a recursive pairwise up-sweep (combine evens with odds,
+             halving the problem) and down-sweep (parent prefixes fan
+             back out, ``combine(parent, old_left)``). O(n) combines per
+             tile instead of Hillis–Steele's O(n log n), at the price of
+             the strided deinterleave/interleave traffic the paper's
+             Observation 5 charges it with — all inside VMEM, where those
+             extra passes are cheap. HBM: read n + write n.
 
 Bit-identity across schedules holds by construction for every monoid:
-all three run the identical in-tile scan network, and the decoupled/fused
-combine chains apply ``combine`` in exactly the carry chain's order
-(``combine`` is pointwise along the scan axis, so combining a carry into
-a block and then taking the last column equals combining it into the last
-column directly).
+carry/decoupled/fused run the identical in-tile scan network, and the
+decoupled/fused combine chains apply ``combine`` in exactly the carry
+chain's order (``combine`` is pointwise along the scan axis, so
+combining a carry into a block and then taking the last column equals
+combining it into the last column directly). The tree schedule computes
+the same monoid products through a DIFFERENT association (the balanced
+tree), so it is bitwise identical to the others exactly when ``combine``
+is associative in machine arithmetic — integer monoids, logical monoids,
+floats on exactly-representable data — and agrees to rounding error
+otherwise. The parity wall in ``tests/test_scan_engine.py`` pins both
+regimes.
 
 CARRIED-PAYLOAD monoids (``spec.transform`` set — flash attention's
 softmax pair with its weighted-value accumulator) run the same two
@@ -75,13 +91,13 @@ from repro.obs import trace
 
 LANES = 128
 
-SCHEDULES = ("carry", "decoupled", "fused")
+SCHEDULES = ("carry", "decoupled", "fused", "tree")
 RESOLVABLE = SCHEDULES + ("auto",)
 
 
 def resolve_schedule(schedule: str, batch: int, n: int,
                      block_elems: int) -> str:
-    """'auto' -> the policy's three-way rule; else validate.
+    """'auto' -> the policy's four-way rule; else validate.
 
     Shared by every family's ops wrapper. ``block_elems`` is the chunk
     length the kernel will ACTUALLY tile the scanned axis with — the
@@ -150,6 +166,83 @@ def tile_scan(spec: KernelSpec, leaves, axis):
         ts = spec.combine(tuple(o[..., None] for o in off), ts)
         return tuple(t.reshape(x.shape) for t, x in zip(ts, leaves))
     return log_scan(spec, leaves, axis)
+
+
+def _pad_to(x, m, axis, fill):
+    """Pad ``x`` up to length ``m`` along ``axis`` with the identity."""
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, m - x.shape[axis])
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def _blelloch(spec: KernelSpec, leaves, axis):
+    """Recursive pairwise Blelloch sweep; power-of-two length required.
+
+    Up-sweep: deinterleave the tile into even/odd positions and combine
+    (``combine(evens, odds)`` — left argument earlier, preserving
+    non-commutative order), recursing on the half-length pair totals.
+    Down-sweep: the recursion returns the parents' EXCLUSIVE prefixes;
+    each even slot takes its parent's prefix unchanged and each odd slot
+    takes ``combine(parent, old_left)`` — the same left-argument
+    convention the ``core.scan.tree`` oracle pins. Returns
+    ``(exclusive_scan, root_total)`` where the total keeps a size-1 scan
+    axis (the shape ``layout.take_last`` produces, so the inter-block
+    carry chain is shared with the carry schedule verbatim).
+
+    The deinterleave/interleave is reshape-based (no gather): at each of
+    the log2(n) levels a ``(..., m/2, 2, ...)`` view splits and a stack +
+    reshape merges — the strided access pattern of the paper's
+    Observation 5, confined to VMEM.
+    """
+    m = leaves[0].shape[axis]
+    if m == 1:
+        ident = tuple(
+            jnp.full_like(x, f) for x, f in zip(leaves, spec.fills))
+        return ident, leaves
+
+    def split(x):
+        shape = x.shape
+        xs = x.reshape(shape[:axis] + (m // 2, 2) + shape[axis + 1:])
+        ev = jax.lax.index_in_dim(xs, 0, axis + 1, keepdims=False)
+        od = jax.lax.index_in_dim(xs, 1, axis + 1, keepdims=False)
+        return ev, od
+
+    pairs = tuple(split(x) for x in leaves)
+    evens = tuple(p[0] for p in pairs)
+    odds = tuple(p[1] for p in pairs)
+    parent_excl, total = _blelloch(spec, spec.combine(evens, odds), axis)
+    right = spec.combine(parent_excl, evens)   # combine(parent, old_left)
+
+    def merge(left, rt):
+        st = jnp.stack([left, rt], axis=axis + 1)
+        return st.reshape(left.shape[:axis] + (m,) + left.shape[axis + 1:])
+
+    excl = tuple(merge(l, r) for l, r in zip(parent_excl, right))
+    return excl, total
+
+
+def tree_scan(spec: KernelSpec, leaves, axis):
+    """Work-efficient in-tile EXCLUSIVE scan (§3.3 balanced tree).
+
+    Pads the scan axis to a power of two with the monoid identity (the
+    padded tail contributes identity to every prefix and to the root
+    total, so the slice-back is exact), runs the Blelloch sweep, and
+    returns ``(exclusive_scan, total)`` — the inclusive form is one
+    ``combine(exclusive, elems)`` away, which the tree body fuses into
+    its carry application.
+    """
+    n = leaves[0].shape[axis]
+    m = 1
+    while m < n:
+        m *= 2
+    if m != n:
+        leaves = tuple(
+            _pad_to(x, m, axis, f) for x, f in zip(leaves, spec.fills))
+    excl, total = _blelloch(spec, leaves, axis)
+    if m != n:
+        excl = tuple(
+            jax.lax.slice_in_dim(x, 0, n, axis=axis) for x in excl)
+    return excl, total
 
 
 def exclusive_chain(spec: KernelSpec, totals, axis: int = 1):
@@ -457,6 +550,80 @@ def scan_fused(operands, spec, layout, *, exclusive=False, interpret=False,
 
 
 # ---------------------------------------------------------------------------
+# Schedule 4: tree (work-efficient Blelloch sweep inside each tile)
+# ---------------------------------------------------------------------------
+
+
+def _tree_body(*refs, spec, layout, elem_dts, n_out, exclusive, n_tot):
+    n_elem = spec.n_leaves
+    n_ops = len(refs) - n_out - n_tot - n_elem
+    data_refs = refs[:n_ops]
+    out_refs = refs[n_ops:n_ops + n_out]
+    tot_refs = refs[n_ops + n_out:n_ops + n_out + n_tot]
+    carry_refs = refs[n_ops + n_out + n_tot:]
+    j = pl.program_id(layout.seq_grid_axis)
+
+    @pl.when(j == 0)
+    def _reset():
+        for r, f in zip(carry_refs, spec.fills):
+            r[...] = jnp.full(r.shape, f, r.dtype)
+
+    raw = tuple(layout.read(r) for r in data_refs)
+    elems = tuple(r.astype(dt) for r, dt in zip(raw, elem_dts))
+    excl, total = tree_scan(spec, elems, layout.scan_axis)
+    carry = tuple(layout.read_carry(r) for r in carry_refs)
+    # The down-sweep hands us the exclusive scan for free; inclusive is
+    # one extra pointwise combine with the raw elements.
+    sel = excl if exclusive else spec.combine(excl, elems)
+    combined = spec.combine(carry, sel)       # carry is the EARLIER operand
+    _emit(spec, layout, out_refs, elems, combined)
+    # ``total`` already carries a size-1 scan axis — the same shape
+    # ``layout.take_last`` yields — so the carry chain is carry's verbatim.
+    new_carry = spec.combine(carry, total)
+    for r, c in zip(carry_refs, new_carry):
+        layout.write_carry(r, c)
+    for r, c in zip(tot_refs, new_carry):
+        layout.write_chain(r, c)
+
+
+def scan_tree(operands, spec, layout, *, exclusive=False, interpret=False,
+              return_totals=False):
+    """Carry's grid with the Blelloch tree as the in-tile network.
+
+    Work-efficient (O(n) combines per tile vs Hillis–Steele's
+    O(n log n)) at the cost of log2(n) strided deinterleave/interleave
+    passes inside VMEM — the §3.3 organization. The inter-block carry
+    chain, exclusive handling, and optional chunk-totals chain all match
+    ``scan_carry`` exactly, so the schedules differ only in how each
+    tile internally associates ``combine``.
+    """
+    elem_dts, out_dts = _dtypes(spec, operands)
+    n_tot = spec.n_leaves if return_totals else 0
+    body = functools.partial(
+        _tree_body, spec=spec, layout=layout, elem_dts=elem_dts,
+        n_out=len(out_dts), exclusive=exclusive, n_tot=n_tot)
+    outs = pl.pallas_call(
+        body,
+        grid=layout.grid,
+        in_specs=layout.op_specs(len(operands)),
+        out_specs=[layout.out_spec()] * len(out_dts)
+        + [layout.chain_spec_for(i) for i in range(n_tot)],
+        out_shape=[jax.ShapeDtypeStruct(layout.shape, dt) for dt in out_dts]
+        + [jax.ShapeDtypeStruct(layout.chain_shape_for(i), dt)
+           for i, dt in enumerate(elem_dts[:n_tot])],
+        scratch_shapes=[layout.carry_scratch(dt, i)
+                        for i, dt in enumerate(elem_dts)],
+        compiler_params=pallas_compat.compiler_params(
+            dimension_semantics=layout.semantics("arbitrary")),
+        interpret=interpret,
+        name=f"scan_{spec.name}_tree",
+    )(*operands)
+    if return_totals:
+        return tuple(outs[:len(out_dts)]), tuple(outs[len(out_dts):])
+    return tuple(outs)
+
+
+# ---------------------------------------------------------------------------
 # Carried-payload fold schedules (spec.transform monoids)
 # ---------------------------------------------------------------------------
 
@@ -652,8 +819,8 @@ def _launch_event(operands, spec: KernelSpec, layout, schedule: str) -> None:
     if not trace.enabled():
         return
     is_fold = spec.transform is not None
-    grid = (layout.split_grid if is_fold and schedule != "carry"
-            else layout.grid)
+    fold_split = is_fold and schedule not in ("carry", "tree")
+    grid = layout.split_grid if fold_split else layout.grid
 
     def nbytes(shape, dtype):
         n = 1
@@ -663,8 +830,7 @@ def _launch_event(operands, spec: KernelSpec, layout, schedule: str) -> None:
 
     in_bytes = sum(nbytes(o.shape, o.dtype) for o in operands)
     try:
-        specs = (layout.split_op_specs(len(operands))
-                 if is_fold and schedule != "carry"
+        specs = (layout.split_op_specs(len(operands)) if fold_split
                  else layout.op_specs(len(operands)))
         vmem_est = sum(
             nbytes(bs.block_shape, o.dtype)
@@ -704,9 +870,11 @@ def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
 
     Carried-payload monoids (``spec.transform``) run the fold forms of
     the schedules; ``fused`` maps to ``decoupled`` there (a fold has no
-    per-element writeback to chain a prefix into). ``count_cells=True``
-    (carry fold only) additionally returns the executed-cell counts —
-    the causal-bound instrumentation.
+    per-element writeback to chain a prefix into) and ``tree`` maps to
+    the carry fold (a fold consumes one macro element per grid block —
+    there is no in-block element axis for the tree sweep to reorganize).
+    ``count_cells=True`` (carry fold only) additionally returns the
+    executed-cell counts — the causal-bound instrumentation.
     """
     if schedule not in SCHEDULES:
         raise ValueError(
@@ -723,12 +891,12 @@ def scan(operands, spec: KernelSpec, layout, *, schedule: str = "carry",
             raise ValueError(
                 "return_totals is meaningless for carried-payload "
                 "monoids: the output IS the fold")
-        if schedule == "carry":
+        if schedule in ("carry", "tree"):
             return fold_carry(tuple(operands), spec, layout,
                               interpret=interpret, count_cells=count_cells)
         return fold_decoupled(tuple(operands), spec, layout,
                               interpret=interpret)
     fn = {"carry": scan_carry, "decoupled": scan_decoupled,
-          "fused": scan_fused}[schedule]
+          "fused": scan_fused, "tree": scan_tree}[schedule]
     return fn(tuple(operands), spec, layout, exclusive=exclusive,
               interpret=interpret, return_totals=return_totals)

@@ -6,8 +6,15 @@ through the monoid-generic scan engine on the Rows layout. The wrapper
 pads with identity elements — (value 0, flag 0) extends the final
 segment, which the slice-back removes — and handles arbitrary rank.
 ``schedule`` picks the grid organization (see ``core/scan/policy``):
-carry chain, two-launch decoupled, single-launch fused, or the policy's
-auto rule.
+carry chain, two-launch decoupled, single-launch fused, the Blelloch
+tree sweep, or the policy's auto rule.
+
+Differentiable (w.r.t. ``values``): the custom VJP runs the backward as
+another engine segmented scan — the adjoint sums each cotangent backward
+to its segment start, which is a REVERSED segmented scan whose
+boundaries are the forward flags shifted one step left (the boundary
+AFTER an element is what stops gradient flowing back into it). Flags are
+structure, not signal: their cotangent is zero.
 """
 
 from __future__ import annotations
@@ -16,6 +23,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import scan_engine
 from repro.kernels.scan_engine import monoids, resolve_schedule
@@ -51,6 +59,41 @@ def _impl(values, flags, block_b, block_n, interpret, schedule):
     return out[:b, :n].reshape(lead + (n,))
 
 
+def _zero_flag_cotangent(flags):
+    """A cotangent for the (non-differentiable) flags operand: float0
+    for integer/bool flags — JAX's tangent dtype for them — and plain
+    zeros for float flags."""
+    if jnp.issubdtype(flags.dtype, jnp.floating):
+        return jnp.zeros_like(flags)
+    return np.zeros(flags.shape, dtype=jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _segscan_vjp(values, flags, block_b, block_n, interpret, schedule):
+    return _impl(values, flags, block_b, block_n, interpret, schedule)
+
+
+def _segscan_fwd(values, flags, block_b, block_n, interpret, schedule):
+    out = _impl(values, flags, block_b, block_n, interpret, schedule)
+    return out, flags
+
+
+def _segscan_bwd(block_b, block_n, interpret, schedule, flags, g):
+    # dv_i = Σ_{j >= i, no boundary in (i, j]} g_j: a reversed segmented
+    # scan of the cotangent whose restart flags are the forward flags
+    # shifted one LEFT (flag'_j = flag_{j+1}; zero-fill at the end) —
+    # killing the reversed carry at j exactly when a segment boundary
+    # sits at j+1. Runs through the same jitted engine ``_impl``.
+    shifted = jnp.concatenate(
+        [flags[..., 1:], jnp.zeros_like(flags[..., :1])], axis=-1)
+    rev = _impl(jnp.flip(g, -1), jnp.flip(shifted, -1), block_b, block_n,
+                interpret, schedule)
+    return jnp.flip(rev, -1), _zero_flag_cotangent(flags)
+
+
+_segscan_vjp.defvjp(_segscan_fwd, _segscan_bwd)
+
+
 def segmented_cumsum(
     values: jax.Array,
     flags: jax.Array,
@@ -59,17 +102,25 @@ def segmented_cumsum(
     interpret: "bool | None" = None,
     schedule: str = "auto",
 ) -> jax.Array:
-    """Kernel-backed segmented cumsum along the last axis (any rank)."""
+    """Kernel-backed segmented cumsum along the last axis (any rank).
+
+    Differentiable w.r.t. ``values``; the backward is itself an engine
+    segmented scan (see module doc).
+    """
     if values.shape != flags.shape:
         raise ValueError(
             f"expect matching shapes, got {values.shape} {flags.shape}")
     if interpret is None:
         interpret = not _on_tpu()
+    if values.size == 0:
+        # Empty scan axis or batch: identity — the padding arithmetic
+        # below would otherwise divide by a zero block.
+        return values
     n = values.shape[-1]
     batch = max(values.size // max(n, 1), 1)
     bn = min(block_n, -(-n // 128) * 128)  # the block _impl uses
     schedule = resolve_schedule(schedule, batch, n, bn)
-    return _impl(values, flags, block_b, block_n, interpret, schedule)
+    return _segscan_vjp(values, flags, block_b, block_n, interpret, schedule)
 
 
 # ---------------------------------------------------------------------------

@@ -11,9 +11,19 @@ padding keeps the carried state unchanged, so results are exact after the
 slice — and pads D with zeros. ``schedule`` picks the grid organization
 (see ``core/scan/policy``): the carry chain walks time sequentially per
 (batch, channel) stripe; decoupled/fused spread time chunks across cores
-— the B=1 long-context prefill/decode shape. Channel blocks count as
-batch for the policy rule (they are independent stripes the carry grid
-already parallelizes).
+— the B=1 long-context prefill/decode shape; ``tree`` runs the Blelloch
+sweep inside each time tile. Channel blocks count as batch for the
+policy rule (they are independent stripes the carry grid already
+parallelizes).
+
+Differentiable: the gradient of the affine recurrence is ITSELF an
+affine recurrence run backward — the adjoint satisfies
+``λ_t = g_t + a_{t+1} · λ_{t+1}``, which after flipping the time axis is
+the same ``h_t = a_t h_{t-1} + b_t`` form with the gates reversed and
+rolled one step. The ``jax.custom_vjp`` therefore runs the backward
+through the same jitted engine kernel as the forward (same schedule,
+its own ``kernel.launch`` trace event) and reads the input gradients
+off pointwise: ``db_t = λ_t``, ``da_t = λ_t · h_{t-1}``.
 """
 
 from __future__ import annotations
@@ -70,6 +80,39 @@ def resolved_schedule(shape, block_t: int = 256, block_d: int = 512,
     return resolve_schedule(schedule, batch, T, bt)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _ssm_vjp(a, b, block_t, block_d, interpret, schedule):
+    return _impl(a, b, block_t, block_d, interpret, schedule)
+
+
+def _ssm_fwd(a, b, block_t, block_d, interpret, schedule):
+    h = _impl(a, b, block_t, block_d, interpret, schedule)
+    # Residuals: the gates (backward recurrence coefficients) and the
+    # forward states (da_t needs h_{t-1}) — no extra forward work.
+    return h, (a, h)
+
+
+def _ssm_bwd(block_t, block_d, interpret, schedule, residuals, g):
+    a, h = residuals
+    # Adjoint recurrence λ_t = g_t + a_{t+1}·λ_{t+1} (λ_{T-1} = g_{T-1}).
+    # Flip time: λ'_k = gate'_k · λ'_{k-1} + g'_k with gate' = flip(a)
+    # rolled one step right — the zero fill multiplies λ'_{-1} = 0, so
+    # any fill is harmless. That is the SAME affine scan, so the
+    # backward is one more launch of the forward's jitted engine kernel.
+    gate = jnp.concatenate(
+        [jnp.zeros_like(a[:, :1]), jnp.flip(a, 1)[:, :-1]], axis=1)
+    lam = jnp.flip(
+        _impl(gate, jnp.flip(g, 1), block_t, block_d, interpret, schedule),
+        1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    da = (lam * h_prev).astype(a.dtype)
+    return da, lam.astype(g.dtype)
+
+
+_ssm_vjp.defvjp(_ssm_fwd, _ssm_bwd)
+
+
 def ssm_scan(
     a: jax.Array,
     b: jax.Array,
@@ -78,11 +121,19 @@ def ssm_scan(
     interpret: "bool | None" = None,
     schedule: str = "auto",
 ) -> jax.Array:
-    """Kernel-backed h_t = a_t ⊙ h_{t-1} + b_t over (B, T, D)."""
+    """Kernel-backed h_t = a_t ⊙ h_{t-1} + b_t over (B, T, D).
+
+    Differentiable: the custom VJP runs the backward as one more engine
+    affine scan over the flipped/rolled gates (see module doc).
+    """
     if interpret is None:
         interpret = not _on_tpu()
+    if a.size == 0:
+        # Degenerate (T, B or D == 0): the recurrence over nothing is
+        # nothing; the block rounding below cannot tile an empty axis.
+        return b
     schedule = resolved_schedule(a.shape, block_t, block_d, schedule)
-    return _impl(a, b, block_t, block_d, interpret, schedule)
+    return _ssm_vjp(a, b, block_t, block_d, interpret, schedule)
 
 
 # ---------------------------------------------------------------------------

@@ -128,8 +128,15 @@ def decode_forward(
 def encdec_loss(params, batch: dict, cfg: ModelConfig, *,
                 remat: bool = False, loss_chunk: int = 512,
                 attn_impl: "str | None" = None,
-                attn_schedule: str = "auto", unroll: bool = False):
-    """batch: embeds (B,F,1024), tokens (B,S), labels, mask."""
+                attn_schedule: str = "auto",
+                ssm_impl: "str | None" = None, unroll: bool = False):
+    """batch: embeds (B,F,1024), tokens (B,S), labels, mask.
+
+    ``ssm_impl`` is accepted for signature parity with ``lm_loss`` (the
+    train step passes one knob set for every family) but unused: the
+    encoder/decoder stacks contain no SSM layers.
+    """
+    del ssm_impl
     from repro.models.lm import chunked_ce_loss
     memory = encode(params, batch["embeds"], cfg, remat=remat,
                     unroll=unroll, attn_impl=attn_impl,

@@ -12,12 +12,15 @@ scan, instantiated twice:
      the scan over chunk totals, pass 2 combines the exclusive prefix back
      into each chunk's outputs.
 
-The inter-chunk scan runs through ``repro.core.scan`` (autodiff-able)
-when training; on the TPU serve path (``cache`` present) ``impl="auto"``
+The inter-chunk scan runs through ``repro.core.scan`` by default when
+training; on the TPU serve path (``cache`` present) ``impl="auto"``
 routes the diagonal-decay carry through the Pallas ``ssm_scan`` kernel
-with ``schedule="auto"``, so the policy's three-way grid rule (carry /
-decoupled / fused — ``core/scan/policy.choose_schedule``) governs the
-decode recurrence end to end.
+with ``schedule="auto"``, so the policy's four-way grid rule (carry /
+decoupled / fused / tree — ``core/scan/policy.choose_schedule``) governs
+the decode recurrence end to end. ``impl="kernel"`` is also TRAINABLE:
+the kernel carries a ``jax.custom_vjp`` whose backward is one more
+engine affine scan (flipped time, rolled gates), so an SSM train step
+can hit the kernel family in both directions.
 """
 
 from __future__ import annotations
@@ -131,9 +134,11 @@ def apply_ssm(
     sequences land on the policy's parallel-sequence schedule end to end.
     The route is gated to TPU (off-TPU the kernel would run the Pallas
     interpreter — same gate as ``relational``'s auto rules); the training
-    path (``cache=None``) stays on the autodiff-able chunked reference
+    path (``cache=None``) defaults to the autodiff-able chunked reference
     scan everywhere. ``impl="kernel"`` forces the kernel route on any
-    backend (interpret mode off-TPU).
+    backend (interpret mode off-TPU) — including under ``jax.grad``,
+    where the kernel's custom VJP runs the backward as another engine
+    scan rather than differentiating through the reference.
     """
     if impl == "auto":
         serve = cache is not None and jax.default_backend() == "tpu"

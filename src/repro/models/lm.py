@@ -199,7 +199,8 @@ def chunked_ce_loss(
 def lm_loss(
     params, batch: dict, cfg: ModelConfig, *, remat: bool = False,
     loss_chunk: int = 512, attn_impl: Optional[str] = None,
-    attn_schedule: str = "auto", unroll: bool = False,
+    attn_schedule: str = "auto", ssm_impl: Optional[str] = None,
+    unroll: bool = False,
 ):
     """batch: tokens (B,S) int32, labels (B,S) int32, mask (B,S) f32,
     optional embeds (B,F,E). Returns (loss, metrics).
@@ -207,12 +208,15 @@ def lm_loss(
     ``attn_impl="flash"`` trains on the engine-backed flash kernel —
     forward AND backward run as scan-engine folds via its custom VJP —
     with ``attn_schedule`` picking the fold organization; dense and
-    blockwise remain the jnp autodiff peers.
+    blockwise remain the jnp autodiff peers. ``ssm_impl="kernel"``
+    does the same for SSM layers: the inter-chunk recurrence runs the
+    engine's affine kernel in the forward AND (via its custom VJP,
+    another engine scan) in the backward.
     """
     hidden, aux, _ = forward(
         params, batch["tokens"], cfg, embeds=batch.get("embeds"),
         remat=remat, attn_impl=attn_impl, attn_schedule=attn_schedule,
-        unroll=unroll)
+        ssm_impl=ssm_impl, unroll=unroll)
     embeds = batch.get("embeds")
     F = embeds.shape[1] if embeds is not None else 0
     hidden = hidden[:, F:]

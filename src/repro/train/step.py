@@ -49,6 +49,10 @@ class TrainStepConfig:
     # dense, blockwise and flash are grad-parity-checkable peers.
     attn_impl: Optional[str] = None
     attn_schedule: str = "auto"       # flash fold organization
+    # None = auto (chunked reference when training); "kernel" trains SSM
+    # layers on the engine's affine kernel — its custom_vjp runs the
+    # backward as one more engine scan, mirroring attn_impl="flash".
+    ssm_impl: Optional[str] = None
     unroll_layers: bool = False       # dry-run: full cost in the HLO
     loss_chunk: int = 512
     peak_lr: float = 3e-4
@@ -81,6 +85,7 @@ def _accumulate_grads(loss_fn, params, batch, tcfg: TrainStepConfig,
                               loss_chunk=tcfg.loss_chunk,
                               attn_impl=tcfg.attn_impl,
                               attn_schedule=tcfg.attn_schedule,
+                              ssm_impl=tcfg.ssm_impl,
                               unroll=tcfg.unroll_layers),
             has_aux=True)(params)
         return loss, metrics, grads
@@ -99,6 +104,7 @@ def _accumulate_grads(loss_fn, params, batch, tcfg: TrainStepConfig,
                               loss_chunk=tcfg.loss_chunk,
                               attn_impl=tcfg.attn_impl,
                               attn_schedule=tcfg.attn_schedule,
+                              ssm_impl=tcfg.ssm_impl,
                               unroll=tcfg.unroll_layers),
             has_aux=True)(params)
         gacc = jax.tree.map(

@@ -23,6 +23,7 @@ import copy
 import dataclasses
 import glob
 import json
+import math
 import os
 import sys
 import threading
@@ -197,6 +198,37 @@ def test_histogram_edge_cases():
     h.record(2.5)
     assert h.count == 2 and h.min == 0.0 and h.max == 2.5
     assert h.percentile(0) <= h.percentile(100) == 2.5
+
+
+def test_histogram_non_positive_observations_never_reach_log():
+    """Regression wall: ``record`` must route v <= 0 to the underflow
+    bucket BEFORE the log-bucket index — ``math.log`` on zero/negative
+    raises. Latency histograms do see exact zeros (clock granularity)
+    and negatives (wall-clock steps backward under NTP slew)."""
+    h = Histogram()
+    for v in (0.0, -1.0, -1e-9, -math.inf):
+        h.record(v)               # must not raise
+    assert h.count == 4
+    assert h._underflow == 4
+    assert h._buckets == {}       # nothing indexed into the log buckets
+    # summary/percentiles stay finite-path (no NaN from the log)
+    assert h.percentile(50.0) == h.min == -math.inf
+    h2 = Histogram()
+    h2.record(-2.0)
+    h2.record(0.0)
+    h2.record(1.0)
+    h2.record(4.0)
+    assert h2._underflow == 2 and h2.count == 4
+    s = h2.summary()
+    assert s["count"] == 4 and s["min"] == -2.0 and s["max"] == 4.0
+    assert s["mean"] == pytest.approx(0.75)
+    # underflow mass pins the low percentiles at/below zero, the
+    # positive mass keeps the high ones in the log buckets
+    assert h2.percentile(0.0) <= 0.0
+    assert 0.0 < h2.percentile(99.0) <= 4.0
+    # monotone in q even across the underflow/bucket seam
+    qs = [h2.percentile(q) for q in (0, 25, 50, 75, 100)]
+    assert qs == sorted(qs)
 
 
 def test_registry_snapshot_and_reset():

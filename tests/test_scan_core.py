@@ -167,3 +167,91 @@ def test_segmented_scan_restarts():
     out = scanlib.segmented_scan(vals, flags)
     np.testing.assert_allclose(
         np.asarray(out), [1, 2, 3, 1, 2, 3, 4, 1, 2, 3])
+
+
+# ---------------------------------------------------------------------------
+# Degenerate scan axes: every algorithm must agree with the oracle on
+# n == 0 (nothing to combine — historically several algorithms crashed:
+# horizontal's exclusive shift sliced [0, 1) from a length-0 identity,
+# blocked indexed block [0, 0] of zero blocks, vertical folded an empty
+# chunk) and on n == 1 (no combine steps at all).
+# ---------------------------------------------------------------------------
+
+
+ALGOS_ALL = ALGOS + ("kernel",)
+
+
+@pytest.mark.parametrize("algo", ALGOS_ALL)
+@pytest.mark.parametrize("exclusive", [False, True])
+@pytest.mark.parametrize("n", [0, 1])
+def test_degenerate_lengths_match_ref(algo, exclusive, n):
+    x = jnp.asarray(
+        np.random.default_rng(7).standard_normal((3, n)).astype(np.float32))
+    got = scanlib.scan(x, "sum", axis=-1, algorithm=algo,
+                       exclusive=exclusive)
+    ref = scanlib.scan_ref(x, "sum", axis=-1, exclusive=exclusive)
+    assert got.shape == x.shape
+    assert got.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_degenerate_lengths_multi_leaf(exclusive):
+    # The affine (two-leaf) monoid through the library algorithms.
+    for algo in ("ref", "horizontal", "tree", "blocked"):
+        a = jnp.zeros((2, 0), jnp.float32)
+        b = jnp.zeros((2, 0), jnp.float32)
+        out_a, out_b = scanlib.scan((a, b), "affine", axis=-1,
+                                    algorithm=algo, exclusive=exclusive)
+        assert out_a.shape == (2, 0) and out_b.shape == (2, 0)
+
+
+def test_degenerate_lengths_kernel_families():
+    from repro.kernels.scan_blocked import ops as cops
+    from repro.kernels.segscan import ops as sops
+    from repro.kernels.ssm_scan import ops as ssops
+
+    e = jnp.zeros((2, 0), jnp.float32)
+    assert cops.cumsum(e).shape == (2, 0)
+    assert cops.cumsum(e, exclusive=True).shape == (2, 0)
+    assert sops.segmented_cumsum(e, e).shape == (2, 0)
+    e3 = jnp.zeros((2, 0, 4), jnp.float32)
+    assert ssops.ssm_scan(e3, e3).shape == (2, 0, 4)
+
+
+# ---------------------------------------------------------------------------
+# Tree-oracle non-commutative wall (the down-sweep order trap): Blelloch's
+# down-sweep hands the right child combine(parent, old_left) — with the
+# PARENT prefix as the LEFT argument. A commutative monoid (sum) hides a
+# swapped implementation; the affine and segmented monoids do not. Pin
+# the order against the sequential oracle on awkward (non-power-of-two)
+# lengths, where the identity padding also has to be on the correct side.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 5, 37, 100, 130])
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_tree_oracle_affine_non_commutative(n, exclusive):
+    rng = np.random.default_rng(n)
+    a = jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = scanlib.scan((a, b), "affine", algorithm="tree",
+                       exclusive=exclusive)
+    ref = scanlib.scan_ref((a, b), "affine", exclusive=exclusive)
+    for g, r in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=2e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [3, 37, 130])
+def test_tree_oracle_segmented_non_commutative(n):
+    from repro.core.scan import assoc
+
+    rng = np.random.default_rng(n)
+    vals = jnp.asarray(rng.integers(-4, 5, n).astype(np.float32))
+    flags = jnp.asarray((rng.random(n) < 0.3).astype(np.float32))
+    monoid = assoc.segmented(assoc.get("sum"))
+    got = scanlib.scan((flags, vals), monoid, algorithm="tree")
+    ref = scanlib.scan_ref((flags, vals), monoid)
+    for g, r in zip(got, ref):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-6)

@@ -1,12 +1,19 @@
 """Monoid-generic scan engine: schedule parity, policy boundaries.
 
 The acceptance bar for the engine refactor (interpret mode on CPU):
-  * all three schedules (carry / decoupled / fused) return BIT-identical
-    results for all four registered monoids across dtypes — the paper's
-    organization/operator split holds exactly, not just approximately;
-  * the three-way ``policy.choose_schedule`` rule at its boundaries
-    (batch == cores, single-block rows, itemsize mixes);
-  * the engine registry covers the four families and the library monoids
+  * carry / decoupled / fused return BIT-identical results for all four
+    registered monoids across dtypes — the paper's organization/operator
+    split holds exactly, not just approximately;
+  * the tree schedule (Blelloch in-tile sweep) is bitwise identical to
+    the other three wherever ``combine`` is associative in machine
+    arithmetic — integers, and floats on exactly-representable data —
+    and agrees to float tolerance on arbitrary normals (its balanced
+    tree associates differently, so bitwise equality on arbitrary
+    floats is mathematically impossible, not an implementation gap);
+  * the four-way ``policy.choose_schedule`` rule at its boundaries
+    (batch == cores, single-block rows, the tree block threshold,
+    itemsize mixes);
+  * the engine registry covers the five families and the library monoids
     carry their kernel specs.
 """
 
@@ -22,7 +29,11 @@ from repro.kernels.scan_engine import monoids
 from repro.kernels.segscan import ops as seg_ops
 from repro.kernels.ssm_scan import ops as ssm_ops
 
+# The trio whose in-tile network is shared — bitwise on ANY data.
 SCHEDULES = ("carry", "decoupled", "fused")
+# All four — bitwise on exactly-representable data (the tree's different
+# association is exact there).
+SCHEDULES4 = ("carry", "decoupled", "fused", "tree")
 
 
 def _all_bit_identical(outs):
@@ -113,6 +124,116 @@ def test_parity_mask():
     np.testing.assert_array_equal(np.asarray(outs[0][1]), mn.sum(-1))
 
 
+# ---------------------------------------------------------------------------
+# 4-schedule parity (tree included) on exact data, + tree float tolerance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_parity4_sum_exact(dtype, exclusive):
+    """All FOUR schedules bitwise on integer-valued data — f32/bf16
+    included, since small integers are exactly representable and the
+    engine widens bf16 accumulation to f32."""
+    rng = np.random.default_rng(20)
+    x = jnp.asarray(rng.integers(-9, 9, (2, 4096)), dtype)
+    outs = [
+        (sb_ops.cumsum(x, exclusive=exclusive, interpret=True, schedule=s,
+                       block_n=512),)
+        for s in SCHEDULES4
+    ]
+    assert _all_bit_identical(outs), \
+        "tree must match carry BITWISE on exact data"
+
+
+def test_parity4_segmented_exact():
+    rng = np.random.default_rng(21)
+    v = jnp.asarray(rng.integers(-9, 9, (2, 4096)), jnp.float32)
+    f = jnp.asarray(rng.random((2, 4096)) < 0.02, jnp.int32)
+    outs = [
+        (seg_ops.segmented_cumsum(v, f, interpret=True, schedule=s,
+                                  block_n=512),)
+        for s in SCHEDULES4
+    ]
+    assert _all_bit_identical(outs)
+
+
+def test_parity4_affine_exact():
+    """Exact affine data: gates in {±1} and integer offsets compose to
+    integer-valued states, so the tree's re-association is bit-exact."""
+    rng = np.random.default_rng(22)
+    a = jnp.asarray(rng.choice([-1.0, 1.0], (1, 2048, 128)), jnp.float32)
+    b = jnp.asarray(rng.integers(-3, 4, (1, 2048, 128)), jnp.float32)
+    outs = [
+        (ssm_ops.ssm_scan(a, b, interpret=True, schedule=s, block_t=128),)
+        for s in SCHEDULES4
+    ]
+    assert _all_bit_identical(outs)
+    _, ref = reference.scan_ref((a, b), "affine", axis=1)
+    np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(ref))
+
+
+def test_parity4_mask_exact():
+    rng = np.random.default_rng(23)
+    m = jnp.asarray(rng.random((3, 4096)) < 0.5, jnp.int32)
+    outs = [
+        kc_ops.mask_compact(m, interpret=True, schedule=s, block_n=512)
+        for s in SCHEDULES4
+    ]
+    assert _all_bit_identical(outs)
+
+
+@pytest.mark.parametrize("exclusive", [False, True])
+def test_tree_float_tolerance(exclusive):
+    """On arbitrary float normals the tree associates differently —
+    bitwise is impossible, but it must agree with carry (and the
+    oracle) to float tolerance."""
+    rng = np.random.default_rng(24)
+    x = jnp.asarray(rng.standard_normal((2, 4096)), jnp.float32)
+    tree = sb_ops.cumsum(x, exclusive=exclusive, interpret=True,
+                         schedule="tree", block_n=512)
+    carry = sb_ops.cumsum(x, exclusive=exclusive, interpret=True,
+                          schedule="carry", block_n=512)
+    np.testing.assert_allclose(np.asarray(tree), np.asarray(carry),
+                               rtol=2e-4, atol=2e-4)
+    ref = reference.cumsum_ref(x)
+    if exclusive:
+        ref = jnp.pad(ref, ((0, 0), (1, 0)))[:, :-1]
+    np.testing.assert_allclose(np.asarray(tree), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_tree_non_pow2_tile():
+    """Tiles whose length is not a power of two exercise the identity
+    pad inside the Blelloch network (96 -> 128)."""
+    rng = np.random.default_rng(25)
+    x = jnp.asarray(rng.integers(-9, 9, (2, 480)), jnp.int32)
+    lay = scan_engine.Rows(2, 480, 1, 96)
+    (tree,) = scan_engine.scan((x,), monoids.SUM, lay, schedule="tree",
+                               interpret=True)
+    (carry,) = scan_engine.scan((x,), monoids.SUM, lay, schedule="carry",
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(tree), np.asarray(carry))
+
+
+def test_tree_fold_routes_to_carry_fold():
+    """Carried-payload (transform) monoids have no in-block element axis
+    to tree-organize: schedule='tree' must run the carry fold — same
+    outputs as carry, no error."""
+    rng = np.random.default_rng(26)
+    q = jnp.asarray(rng.standard_normal((2, 128, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 128, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 128, 16)), jnp.float32)
+    spec = monoids.softmax_pair(scale=0.25)
+    lay = scan_engine.KVBlocks(bh=2, bh_kv=2, tq=128, tk=128, d=16,
+                               bq=128, bk=64)
+    out_t = scan_engine.scan((q, k, v), spec, lay, schedule="tree",
+                             interpret=True)
+    out_c = scan_engine.scan((q, k, v), spec, lay, schedule="carry",
+                             interpret=True)
+    assert _all_bit_identical([out_t, out_c])
+
+
 def test_segmented_messy_flags_match_reference():
     """Fractional and negative nonzero flags are boundaries too — the
     kernel route must normalize with ``!= 0``, not truncate or max."""
@@ -158,14 +279,15 @@ def test_registry_covers_five_families():
 
 def test_totals_chain_bitwise_across_schedules():
     """``scan(..., return_totals=True)`` returns the RUNNING chunk-totals
-    chain (combined through chunk j): identical bits under all three
-    schedules, last column == the row reduction — what ``mask_compact``
-    uses for O(B·chunks) survivor counts (ROADMAP follow-up)."""
+    chain (combined through chunk j): identical bits under all FOUR
+    schedules (integer data, so the tree is exact too), last column ==
+    the row reduction — what ``mask_compact`` uses for O(B·chunks)
+    survivor counts (ROADMAP follow-up)."""
     rng = np.random.default_rng(9)
     x = jnp.asarray(rng.integers(-9, 9, (3, 2048)), jnp.int32)
     lay = scan_engine.Rows(3, 2048, 1, 256)
     chains = []
-    for s in SCHEDULES:
+    for s in SCHEDULES4:
         (out,), (tot,) = scan_engine.scan(
             (x,), monoids.SUM, lay, schedule=s, interpret=True,
             return_totals=True)
@@ -182,7 +304,7 @@ def test_mask_compact_counts_from_totals_chain():
     rng = np.random.default_rng(10)
     for shape in ((2, 517), (4, 4096), (1, 128)):
         m = jnp.asarray(rng.random(shape) < 0.3, jnp.float32)
-        for s in SCHEDULES:
+        for s in SCHEDULES4:
             _, counts = kc_ops.mask_compact(m, interpret=True, schedule=s,
                                             block_n=256)
             np.testing.assert_array_equal(
@@ -211,7 +333,7 @@ def test_engine_rejects_unknown_schedule_and_bad_exclusive():
 
 
 # ---------------------------------------------------------------------------
-# policy boundaries (three-way choose_schedule)
+# policy boundaries (four-way choose_schedule)
 # ---------------------------------------------------------------------------
 
 
@@ -237,6 +359,32 @@ def test_choose_schedule_single_block_rows():
     # exactly spare chunks -> flip
     n = policy.NUM_CORES * 2048
     assert policy.choose_schedule(1, n, block_elems=2048) == "fused"
+
+
+def test_choose_schedule_tree_boundary():
+    """Tree fires only when rows saturate the cores AND the block is big
+    enough to amortize the sweep; the default block (2048) never trips
+    it, so every pre-tree auto decision is unchanged."""
+    n = 1 << 22
+    cores = policy.NUM_CORES
+    # saturated rows + big block -> tree
+    assert policy.choose_schedule(cores, n,
+                                  block_elems=policy.TREE_BLOCK_ELEMS) \
+        == "tree"
+    assert policy.choose_schedule(cores * 4, n, block_elems=16384) == "tree"
+    # one element under the threshold -> carry (the old answer)
+    assert policy.choose_schedule(cores, n,
+                                  block_elems=policy.TREE_BLOCK_ELEMS - 1) \
+        == "carry"
+    # default block: unchanged decisions
+    assert policy.choose_schedule(cores, n) == "carry"
+    # under-subscribed rows never pick tree, whatever the block size
+    assert policy.choose_schedule(cores // 2, n,
+                                  block_elems=policy.TREE_BLOCK_ELEMS) \
+        == "fused"
+    d = policy.explain_schedule(cores, n,
+                                block_elems=policy.TREE_BLOCK_ELEMS)
+    assert d.value == "tree" and "block_elems" in d.reason
 
 
 @pytest.mark.parametrize("itemsize", [1, 2, 4, 8])
